@@ -1,0 +1,52 @@
+"""Paper Fig. 15/16 — FT K-means with fault tolerance vs without.
+
+Two layers of evidence on this host:
+  * measured: full Lloyd iterations with the ABFT-checksummed assignment
+    (jnp path) vs the unprotected assignment — wall-clock overhead;
+  * analytic: the fused kernel's checksum flop overhead per tile
+    (2*(bm+bk)*bf extra vs 2*bm*bk*bf), the quantity the paper's 11%
+    average reflects after fusion into memory gaps.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_call
+from repro.core import KMeans, KMeansConfig
+from repro.core.autotune import lookup_params
+from repro.data.blobs import make_blobs
+
+CASES = [  # (K clusters, F features) — paper's K=8/128, N=8/128 slices
+    (8, 64), (128, 64), (32, 8), (32, 128),
+]
+M = 16_384
+
+
+def _fit_time(x, assignment, k):
+    cfg = KMeansConfig(k=k, max_iters=8, tol=0.0, assignment=assignment,
+                       dmr_update=False, seed=0)
+    km = KMeans(cfg)
+    c0 = km.init_centroids(x)
+    return time_call(lambda: km.fit(x, centroids=c0), iters=3, warmup=1)
+
+
+def run() -> list[str]:
+    out = []
+    for k, f in CASES:
+        x, _ = make_blobs(M, f, k, seed=2)
+        t_plain = _fit_time(x, "gemm_fused", k)
+        t_ft = _fit_time(x, "abft_offline", k)
+        ovh = (t_ft - t_plain) / t_plain * 100
+        out.append(row(f"fig15_K{k}_N{f}_noft", t_plain, ""))
+        out.append(row(f"fig15_K{k}_N{f}_ft", t_ft,
+                       f"overhead={ovh:.1f}%"))
+        p = lookup_params(M, k, f)
+        kernel_ovh = (2 * (p.block_m + p.block_k) * p.block_f) / \
+            (2 * p.block_m * p.block_k * p.block_f) * 100 * 2
+        out.append(row(f"fig15_K{k}_N{f}_kernel_flop_ovh", 0.0,
+                       f"fused_checksum_flops={kernel_ovh:.2f}%"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,58 @@
+"""Paper Fig. 17/18/21 — FT K-means under error injection, vs the two
+baselines: Wu-style offline ABFT and Taamneh checkpoint/restart.
+
+Metrics: wall-clock overhead vs the unprotected run AND solution quality
+(inertia must match the clean solution — silent corruption is the failure
+mode checkpointing cannot see).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_call
+from repro.core import FaultConfig, KMeans, KMeansConfig
+from repro.core.baselines import CheckpointRestartKMeans
+from repro.data.blobs import make_blobs
+
+M, F, K = 8_192, 64, 16
+ITERS = 6
+RATES = (0.5, 1.0)   # injections per Lloyd iteration (paper: tens/second)
+
+
+def run() -> list[str]:
+    x, _ = make_blobs(M, F, K, seed=4)
+    out = []
+    base_cfg = KMeansConfig(k=K, max_iters=ITERS, tol=0.0,
+                            assignment="gemm_fused", dmr_update=False, seed=0)
+    km = KMeans(base_cfg)
+    c0 = km.init_centroids(x)
+    t_clean = time_call(lambda: km.fit(x, centroids=c0), iters=2, warmup=1)
+    clean_inertia = float(km.fit(x, centroids=c0).inertia)
+    out.append(row("fig17_clean", t_clean, f"inertia={clean_inertia:.4g}"))
+
+    for rate in RATES:
+        fc = FaultConfig(rate=rate, seed=11)
+        ft_cfg = KMeansConfig(k=K, max_iters=ITERS, tol=0.0,
+                              assignment="abft_offline", dmr_update=True,
+                              seed=0)
+        ft = KMeans(ft_cfg)
+        t_ft = time_call(lambda: ft.fit(x, centroids=c0), iters=2, warmup=1)
+        res = ft.fit(x, centroids=c0)
+        out.append(row(f"fig17_ftkmeans_rate{rate}", t_ft,
+                       f"overhead={(t_ft - t_clean) / t_clean * 100:.1f}%;"
+                       f"inertia_ok={abs(float(res.inertia) - clean_inertia) < abs(clean_inertia) * 1e-3}"))
+
+        ckr = CheckpointRestartKMeans(base_cfg)
+        t_ck = time_call(lambda: ckr.fit(x, fault=fc, centroids=c0),
+                         iters=2, warmup=1)
+        _, stats = ckr.fit(x, fault=fc, centroids=c0)
+        out.append(row(f"fig17_ckpt_restart_rate{rate}", t_ck,
+                       f"overhead={(t_ck - t_clean) / t_clean * 100:.1f}%;"
+                       f"rollbacks={stats['rollbacks']};"
+                       f"wasted_iters={stats['wasted_iterations']};"
+                       f"gave_up={stats['gave_up']}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,34 @@
+"""Paper Fig. 13/14 + Table I — the code-generation / parameter-selection
+pipeline: candidate generation under the pruning rules, feasibility
+filtering, and per-shape winner selection (analytical TPU model — the
+measured selection runs on device; §Perf records the CPU-measured variant).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core.autotune import (feasible, model_score, parameter_space,
+                                 select_params)
+
+SHAPES = [
+    (131_072, 8, 128), (131_072, 128, 128),      # paper's fixed-M slices
+    (131_072, 128, 8), (131_072, 128, 2048),
+    (16_384, 64, 64), (1_048_576, 16, 256),
+]
+
+
+def run() -> list[str]:
+    out = []
+    space = parameter_space()
+    ok = [p for p in space if feasible(p)]
+    out.append(row("fig13_candidates", 0.0,
+                   f"total={len(space)};feasible={len(ok)}"))
+    for m, k, f in SHAPES:
+        p = select_params(m, k, f, mode="model")
+        t_model = model_score(m, k, f, p)
+        out.append(row(f"fig14_winner_M{m}_K{k}_N{f}", t_model,
+                       f"block=({p.block_m},{p.block_k},{p.block_f})"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

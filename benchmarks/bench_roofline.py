@@ -1,0 +1,33 @@
+"""§Roofline summary benchmark: reads the dry-run result cache and prints
+per-cell roofline terms (compute/memory/collective seconds + bottleneck).
+Run `python -m repro.launch.dryrun --all --both-meshes` first to populate.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import row
+from repro.roofline.analysis import analyze, load_records
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run() -> list[str]:
+    out = []
+    for mesh_tag in ("pod16x16", "pod2x16x16"):
+        for rec in load_records(os.path.abspath(RESULTS), mesh_tag):
+            r = analyze(rec)
+            name = f"roofline_{rec['arch']}_{rec['shape']}_{mesh_tag}"
+            if r is None:
+                out.append(row(name, 0.0, f"status={rec['status']}"))
+                continue
+            out.append(row(
+                name, max(r.compute_s, r.memory_s, r.collective_s),
+                f"bottleneck={r.bottleneck};compute={r.compute_s:.2e};"
+                f"memory={r.memory_s:.2e};collective={r.collective_s:.2e};"
+                f"useful={r.useful_ratio:.2f};frac={r.roofline_fraction:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,47 @@
+"""Paper Fig. 8-11 (A100) / 19-20 (T4) — distance-step performance across
+problem shapes: sweep the feature dim N with K fixed, and sweep the
+cluster count K with N fixed, comparing the shape-adaptive path (autotuned
+parameters) against the fixed-parameter two-pass baseline (cuML-analogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import distance_flops, gflops, row, time_call
+from repro.core import assignment as assign_mod
+
+M = 16_384
+N_SWEEP = (8, 16, 32, 64, 128, 256)      # feature dims  (K fixed = 128)
+K_SWEEP = (8, 16, 32, 64, 128, 256)      # cluster counts (N fixed = 64)
+
+
+def _bench_pair(m, k, f, out, tag):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, f), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (k, f), jnp.float32)
+    fl = distance_flops(m, k, f)
+
+    baseline = jax.jit(lambda x, c: assign_mod.assign_gemm(x, c)[0])
+    t_base = time_call(baseline, x, c)
+
+    fused = jax.jit(lambda x, c: assign_mod.assign_gemm_fused(x, c)[0])
+    t_fused = time_call(fused, x, c)
+
+    out.append(row(f"{tag}_baseline", t_base,
+                   f"GFLOPS={gflops(fl, t_base):.1f}"))
+    out.append(row(f"{tag}_ftkmeans", t_fused,
+                   f"GFLOPS={gflops(fl, t_fused):.1f};"
+                   f"speedup={t_base / t_fused:.2f}"))
+
+
+def run() -> list[str]:
+    out = []
+    for f in N_SWEEP:
+        _bench_pair(M, 128, f, out, f"fig8_N{f}_K128")
+    for k in K_SWEEP:
+        _bench_pair(M, k, 64, out, f"fig10_K{k}_N64")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,32 @@
+"""Paper Fig. 12 — speedup grid over (N features x K clusters):
+shape-adaptive FT K-means vs the fixed-parameter two-pass baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import distance_flops, row, time_call
+from repro.core import assignment as assign_mod
+
+M = 8_192
+NS = (8, 32, 128)
+KS = (8, 32, 128)
+
+
+def run() -> list[str]:
+    out = []
+    for f in NS:
+        for k in KS:
+            x = jax.random.normal(jax.random.PRNGKey(0), (M, f), jnp.float32)
+            c = jax.random.normal(jax.random.PRNGKey(1), (k, f), jnp.float32)
+            t_b = time_call(jax.jit(
+                lambda x, c: assign_mod.assign_gemm(x, c)[0]), x, c)
+            t_f = time_call(jax.jit(
+                lambda x, c: assign_mod.assign_gemm_fused(x, c)[0]), x, c)
+            out.append(row(f"fig12_N{f}_K{k}", t_f,
+                           f"speedup={t_b / t_f:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,56 @@
+"""Paper Fig. 7 — stepwise optimization ladder for the distance step.
+
+naive (per-sample loop, no GEMM) -> V1 GEMM + separate reduction kernel ->
+V2/V3 fused reduction (single compiled program; on TPU this is the Pallas
+fused kernel, on this CPU host the XLA-fused analogue) -> V4 + tuned
+parameters / low-precision matmul units (bf16 = the TF32 analogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import distance_flops, gflops, row, time_call
+from repro.core import assignment as assign_mod
+
+M, K, F = 16_384, 128, 128   # paper Fig. 7: M=131072, N=128 (scaled to CPU)
+
+
+def _bf16_fused(x, c):
+    xb, cb = x.astype(jnp.bfloat16), c.astype(jnp.bfloat16)
+    d = (jnp.sum(c * c, axis=1)[None, :]
+         - 2.0 * jnp.matmul(xb, cb.T).astype(jnp.float32))
+    return jnp.argmin(d, axis=1), jnp.min(d, axis=1)
+
+
+def run() -> list[str]:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, F), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (K, F), jnp.float32)
+    fl = distance_flops(M, K, F)
+    out = []
+
+    naive = jax.jit(lambda x, c: assign_mod.assign_naive(x, c)[0])
+    t = time_call(naive, x, c, iters=3, warmup=1)
+    base = t
+    out.append(row("fig7_naive", t, f"GFLOPS={gflops(fl, t):.1f};x1.00"))
+
+    v1 = jax.jit(lambda x, c: assign_mod.assign_gemm(x, c)[0])
+    t = time_call(v1, x, c)
+    out.append(row("fig7_v1_gemm", t,
+                   f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
+
+    v2 = jax.jit(lambda x, c: assign_mod.assign_gemm_fused(x, c)[0])
+    t = time_call(v2, x, c)
+    out.append(row("fig7_v2_fused", t,
+                   f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
+
+    v4 = jax.jit(_bf16_fused)
+    t = time_call(v4, x, c)
+    out.append(row("fig7_v4_lowprec_tuned", t,
+                   f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities.
+
+This container is CPU-only; wall-times calibrate *relative* claims (the
+paper's stepwise ratios, FT overhead, injection overhead) while the
+TPU-absolute story lives in the dry-run roofline (EXPERIMENTS.md §Roofline).
+The Pallas kernels are validated in interpret mode (tests/) — interpret
+wall-time is Python-loop bound, so kernel-level performance points here use
+the XLA-fused path with the kernels' tiling decisions applied analytically.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in seconds (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def gflops(flops: float, seconds: float) -> float:
+    return flops / seconds / 1e9
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def distance_flops(m: int, k: int, f: int) -> float:
+    """Distance-step flop count (paper's metric): the 2*M*K*F GEMM."""
+    return 2.0 * m * k * f

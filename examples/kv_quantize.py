@@ -1,0 +1,52 @@
+"""Vector-quantize a model's KV cache with FT K-means (paper application).
+
+Runs a prefill on a small LM, harvests the per-layer key vectors, learns a
+k-means codebook with the fault-tolerant pipeline, and reports the
+compression ratio + reconstruction error — the classic VQ use of k-means
+the paper cites ([2]), composed end-to-end from this framework's pieces.
+
+    PYTHONPATH=src python examples/kv_quantize.py
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import FaultConfig, KMeans, KMeansConfig
+from repro.models import LM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--codebook", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 128), 0,
+                              cfg.vocab_size)
+    _, caches = jax.jit(lm.prefill, static_argnames=("max_len",))(
+        params, {"tokens": toks}, max_len=128)
+
+    # harvest keys: stacked (L, B, S, KV, hd) -> (N, hd)
+    keys = caches["periods"][0]["kv"].k
+    vecs = keys.reshape(-1, keys.shape[-1]).astype(jnp.float32)
+    print(f"KV vectors: {vecs.shape[0]} x {vecs.shape[1]} "
+          f"({vecs.size * 2 / 2**20:.1f} MiB bf16)")
+
+    km = KMeans(KMeansConfig(k=args.codebook, max_iters=25,
+                             assignment="fused_ft", seed=0))
+    res = km.fit(vecs, fault=FaultConfig(rate=0.5))
+    recon = res.centroids[res.assign]
+    err = float(jnp.linalg.norm(vecs - recon) / jnp.linalg.norm(vecs))
+    ratio = vecs.shape[1] * 2 / (2 + res.centroids.size * 2 / vecs.shape[0])
+    print(f"codebook {args.codebook}: rel recon err {err:.3f}, "
+          f"~{ratio:.0f}x smaller cache, "
+          f"SDCs corrected during clustering: {int(res.detected_errors)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import (ArchConfig, MoEConfig, ShapeConfig, SHAPES,
+                                input_specs, shape_applicable)
+from repro.configs.registry import ARCH_IDS, get_config, train_schedule
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES", "input_specs",
+           "shape_applicable", "ARCH_IDS", "get_config", "train_schedule"]

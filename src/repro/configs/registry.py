@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> resolution for launchers/tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+_MODULES = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, *, smoke: bool = False, **overrides) -> ArchConfig:
+    mod = importlib.import_module(_MODULES[arch_id])
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def train_schedule(arch_id: str) -> str:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return getattr(mod, "TRAIN_SCHEDULE", "cosine")

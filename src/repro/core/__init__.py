@@ -1,0 +1,12 @@
+"""FT K-means core — the paper's contribution as a composable JAX module."""
+from repro.core.kmeans import (KMeans, KMeansConfig, KMeansResult, fit_kmeans,
+                               init_kmeanspp, init_random)
+from repro.core.fault import FaultConfig
+from repro.core.ft_gemm import ft_matmul, abft_dot
+from repro.core import checksum, assignment, autotune, baselines, dmr
+
+__all__ = [
+    "KMeans", "KMeansConfig", "KMeansResult", "fit_kmeans",
+    "init_kmeanspp", "init_random", "FaultConfig", "ft_matmul", "abft_dot",
+    "checksum", "assignment", "autotune", "baselines", "dmr",
+]

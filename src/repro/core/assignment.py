@@ -1,0 +1,92 @@
+"""Cluster-assignment strategies — the paper's stepwise ladder (§III-A).
+
+Each strategy maps (x (M, F), c (K, F)) -> (assign (M,) int32, extra):
+
+  naive        the paper's "basic implementation": per-sample loop over all
+               centroids, elementwise distances (no GEMM). O(M K F) scalar
+               work and O(M K F) intermediate traffic.
+  gemm         paper V1: distance via GEMM, *materialized* D (M, K) in HBM,
+               separate argmin pass (two kernels, extra round trip).
+  gemm_fused   paper V2/V3 analogue on XLA: one jit so XLA fuses the GEMM
+               epilogue with the reduction (cuML-analogue baseline).
+  fused        paper V4/V5: the Pallas fused kernel (MXU + in-VMEM argmin).
+  fused_ft     §IV: fused kernel + dual-checksum ABFT online correction.
+  abft_offline Wu-et-al-style baseline: checksummed GEMM *without* fusion —
+               detection happens on the materialized product (the scheme the
+               paper argues breaks down post-Ampere; here it demonstrates
+               the fusion win, not the register-reuse mechanics).
+
+Strategies return a second element: detected-error count (0 where N/A).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksum
+from repro.core.ft_gemm import ft_matmul
+from repro.kernels import ops, ref
+
+
+def _zero():
+    return jnp.zeros((), jnp.int32)
+
+
+@jax.jit
+def assign_naive(x: jax.Array, c: jax.Array):
+    # One "thread" per sample; centroids broadcast — no GEMM, pure VPU.
+    # Batched over samples in chunks to bound the (M, K, F) intermediate.
+    def per_sample(xi):
+        d = jnp.sum((xi[None, :] - c) ** 2, axis=1)
+        return jnp.argmin(d).astype(jnp.int32), jnp.min(d)
+    am, md = jax.lax.map(per_sample, x, batch_size=1024)
+    return am, md, _zero()
+
+
+@jax.jit
+def assign_gemm(x: jax.Array, c: jax.Array):
+    # Materialize D, then reduce in a second pass. optimization_barrier
+    # models the paper's separate-kernel round trip (prevents XLA from
+    # fusing the argmin into the GEMM loop).
+    d = ref.distance_matrix(x, c)
+    d = jax.lax.optimization_barrier(d)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1), _zero()
+
+
+@jax.jit
+def assign_gemm_fused(x: jax.Array, c: jax.Array):
+    d = ref.distance_matrix(x, c)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1), _zero()
+
+
+def assign_fused(x: jax.Array, c: jax.Array, params=None):
+    am, md = ops.fused_assign(x, c, params)
+    return am, md + jnp.sum(x * x, axis=1), _zero()
+
+
+def assign_fused_ft(x: jax.Array, c: jax.Array, params=None,
+                    inj: Optional[jax.Array] = None):
+    am, md, det = ops.fused_assign_ft(x, c, params, inj=inj)
+    return am, md + jnp.sum(x * x, axis=1), det
+
+
+@jax.jit
+def assign_abft_offline(x: jax.Array, c: jax.Array):
+    cross, detected = ft_matmul(x, c.T)
+    d = (jnp.sum(x * x, axis=1, keepdims=True)
+         + jnp.sum(c * c, axis=1)[None, :] - 2.0 * cross)
+    return (jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1),
+            detected.astype(jnp.int32))
+
+
+STRATEGIES: dict[str, Callable] = {
+    "naive": assign_naive,
+    "gemm": assign_gemm,
+    "gemm_fused": assign_gemm_fused,
+    "fused": assign_fused,
+    "fused_ft": assign_fused_ft,
+    "abft_offline": assign_abft_offline,
+}

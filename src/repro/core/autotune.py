@@ -1,0 +1,172 @@
+"""Kernel parameter generation + selection (paper §III-B code generation).
+
+The paper generates ~150 CUTLASS kernels per dtype over a pruned parameter
+space, keeps those that compile and run, benchmarks 64 problem sizes and
+selects a per-shape winner. On TPU the "template instantiation" is a Pallas
+closure specialization, but the search/selection pipeline is the same:
+
+  1. ``parameter_space()``   — candidates under the paper's pruning rules
+                               (§III-B-1): powers of two, contraction tile
+                               tied to the pipeline depth, MXU-aligned tiles.
+  2. ``feasible()``          — does the kernel lower (compile-time check) and
+                               does the working set fit VMEM.
+  3. ``score()``             — selection criterion. Two modes:
+                               "model": analytical HBM-traffic/MXU-occupancy
+                               model (used when the target TPU is absent —
+                               this container), "measure": wall-time of the
+                               real kernel (used on device; also drives the
+                               CPU benchmark figures via the jnp fallback).
+  4. ``build_table()``       — per-shape winners, persisted as JSON: the
+                               kernel-selection table the runtime consults.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import json
+import os
+import time
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import KernelParams, clamp_params
+
+# TPU v5e constants (roofline/hw.py mirrors these).
+MXU_FLOPS = 197e12        # bf16 peak; f32 ~ 1/2
+HBM_BW = 819e9            # bytes/s
+VMEM_BUDGET = 96 * 2**20  # bytes usable per core (half of 128 MiB v5e VMEM,
+                          # leaving room for Mosaic's own buffers)
+
+
+def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
+    """Pruned candidate grid (paper rules: powers of 2; Warp.K=Threadblock.K
+    maps to a single contraction tile; thread tile fixed by MXU shape)."""
+    block_ms = [64, 128, 256, 512, 1024]
+    block_ks = [128, 256, 512]
+    block_fs = [128, 256, 512, 1024]
+    out = []
+    for bm, bk, bf in itertools.product(block_ms, block_ks, block_fs):
+        out.append(KernelParams(block_m=bm, block_k=bk, block_f=bf))
+    return out
+
+
+def feasible(p: KernelParams, dtype=jnp.float32) -> bool:
+    """VMEM fit + alignment. The lowering check happens once in tests
+    (tests/test_autotune.py) — analogous to the paper's compile-and-run
+    filter; here we apply the cheap structural conditions."""
+    if p.vmem_bytes() > VMEM_BUDGET:
+        return False
+    if p.block_m % 8 or p.block_k % 128 or p.block_f % 128:
+        return False
+    return True
+
+
+def model_score(m: int, k: int, f: int, p: KernelParams,
+                dtype=jnp.float32) -> float:
+    """Analytical time estimate (seconds) for the fused kernel.
+
+    HBM traffic: X is re-read once per centroid tile, C once per sample
+    tile (the paper's §V-A-6 observation that balanced tiles minimize data
+    movement); compute: 2 M K F MACs on the MXU. The kernel is pipelined,
+    so time ~ max(compute, memory) + epilogue.
+    """
+    p = clamp_params(m, k, f, p)
+    bytes_per = jnp.dtype(dtype).itemsize
+    mp = -(-m // p.block_m) * p.block_m
+    kp = -(-k // p.block_k) * p.block_k
+    fp = -(-f // p.block_f) * p.block_f
+    x_reads = mp * fp * (kp // p.block_k)
+    c_reads = kp * fp * (mp // p.block_m)
+    hbm = (x_reads + c_reads) * bytes_per / HBM_BW
+    peak = MXU_FLOPS if dtype == jnp.bfloat16 else MXU_FLOPS / 2
+    # MXU efficiency falls off for tiles thinner than the 128x128 systolic
+    # array and for padded remainders.
+    util = min(p.block_k / 128.0, 1.0) * min(p.block_m / 128.0, 1.0)
+    util *= (m / mp) * (k / kp) * (f / fp)
+    compute = 2.0 * mp * kp * fp / (peak * max(util, 1e-3))
+    epilogue = mp * kp * bytes_per / (HBM_BW * 16)  # VMEM-resident reduce
+    return float(max(hbm, compute) + epilogue)
+
+
+def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
+                  dtype=jnp.float32) -> float:
+    """Wall-time of the fused kernel on the current backend (seconds)."""
+    from repro.kernels.ops import fused_assign
+    x = jnp.ones((m, f), dtype)
+    c = jnp.ones((k, f), dtype)
+    am, md = fused_assign(x, c, p)
+    jax.block_until_ready((am, md))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        am, md = fused_assign(x, c, p)
+    jax.block_until_ready((am, md))
+    return (time.perf_counter() - t0) / iters
+
+
+def select_params(m: int, k: int, f: int, *, mode: str = "model",
+                  dtype=jnp.float32,
+                  space: Optional[Iterable[KernelParams]] = None) -> KernelParams:
+    """Pick the winner for one problem shape."""
+    best, best_s = None, float("inf")
+    for p in (space or parameter_space(dtype)):
+        if not feasible(p, dtype):
+            continue
+        s = (model_score if mode == "model" else measure_score)(m, k, f, p, dtype=dtype)
+        if s < best_s:
+            best, best_s = p, s
+    assert best is not None
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Winner table: shape-bucketed lookup, persisted like the paper's selected-
+# kernel list. Buckets are log2 in each dimension (shapes in a bucket share
+# a winner; the paper benchmarks 64 discrete sizes — same granularity).
+# ---------------------------------------------------------------------------
+
+_TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
+_DEFAULT_TABLE = os.path.join(os.path.dirname(__file__), "autotune_table.json")
+_cached_table: Optional[dict] = None
+
+
+def _bucket(m: int, k: int, f: int) -> str:
+    import math
+    b = lambda v: int(math.log2(max(v, 1)))
+    return f"{b(m)}-{b(k)}-{b(f)}"
+
+
+def build_table(shapes: Iterable[tuple[int, int, int]], *, mode: str = "model",
+                dtype=jnp.float32, path: Optional[str] = None) -> dict:
+    table = {}
+    for (m, k, f) in shapes:
+        p = select_params(m, k, f, mode=mode, dtype=dtype)
+        table[_bucket(m, k, f)] = [p.block_m, p.block_k, p.block_f]
+    path = path or os.environ.get(_TABLE_ENV, _DEFAULT_TABLE)
+    with open(path, "w") as fh:
+        json.dump(table, fh, indent=1, sort_keys=True)
+    return table
+
+
+def lookup_params(m: int, k: int, f: int) -> KernelParams:
+    """Runtime lookup: persisted winner for the shape bucket, else the
+    analytical winner computed on the fly (memoized)."""
+    global _cached_table
+    if _cached_table is None:
+        path = os.environ.get(_TABLE_ENV, _DEFAULT_TABLE)
+        if os.path.exists(path):
+            with open(path) as fh:
+                _cached_table = json.load(fh)
+        else:
+            _cached_table = {}
+    key = _bucket(m, k, f)
+    if key in _cached_table:
+        bm, bk, bf = _cached_table[key]
+        return KernelParams(bm, bk, bf)
+    return _select_cached(m, k, f)
+
+
+@functools.lru_cache(maxsize=1024)
+def _select_cached(m: int, k: int, f: int) -> KernelParams:
+    return select_params(m, k, f, mode="model")

@@ -1,0 +1,154 @@
+"""Dual-checksum (e1/e2) ABFT encodings with location decoding.
+
+Implements the paper's §IV scheme in pure JAX:
+
+  e1 = [1, 1, ..., 1]      detects an error (non-zero residual)
+  e2 = [1, 2, ..., n]      locates it: index = round(r2 / r1)
+
+For a matmul D = X @ Y (X: (m, k), Y: (k, n)):
+
+  column checksums:  C1 = e1(m)^T D = (e1^T X) Y       shape (n,)
+                     C2 = e2(m)^T D = (e2^T X) Y       shape (n,)
+  row checksums:     R1 = D e1(n)   = X (Y e1)         shape (m,)
+                     R2 = D e2(n)   = X (Y e2)         shape (m,)
+
+A single corrupted element D[i, j] += delta produces residuals
+  r1_col[j] = delta, r2_col[j] = (i+1) * delta   -> i = r2/r1 - 1
+  r1_row[i] = delta, r2_row[i] = (j+1) * delta   -> j = r2/r1 - 1
+so the element is corrected in place:  D[i, j] -= delta.
+
+All functions are jit-safe (fixed shapes, lax control flow).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def e1(n: int, dtype=jnp.float32) -> jax.Array:
+    """The detection vector [1, 1, ..., 1]."""
+    return jnp.ones((n,), dtype=dtype)
+
+
+def e2(n: int, dtype=jnp.float32) -> jax.Array:
+    """The location-encoding vector [1, 2, ..., n]."""
+    return jnp.arange(1, n + 1, dtype=dtype)
+
+
+def encode_cols(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Column checksums of x: (e1^T x, e2^T x), each of shape (x.shape[1],)."""
+    w = e2(x.shape[0], x.dtype)
+    return jnp.sum(x, axis=0), w @ x
+
+
+def encode_rows(y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Row checksums of y: (y e1, y e2), each of shape (y.shape[0],)."""
+    w = e2(y.shape[1], y.dtype)
+    return jnp.sum(y, axis=1), y @ w
+
+
+def default_threshold(k: int, dtype=jnp.float32, scale: float = 1.0) -> float:
+    """Detection threshold delta for a length-k contraction.
+
+    Rounding error of a k-term dot product is ~ sqrt(k) * eps * |x||y| in
+    rms; the checksum residual compounds two such sums, so we take
+    ``16 * sqrt(k) * eps * scale`` (scale ~ typical |D| magnitude). The
+    factor 16 keeps the false-positive rate negligible (paper §II-A: high
+    reliability, minimal false alarms); injected bit-flips in exponent or
+    high-mantissa bits exceed it by many orders of magnitude.
+    """
+    eps = float(jnp.finfo(dtype).eps)
+    return 16.0 * (max(k, 1) ** 0.5) * eps * scale
+
+
+class ChecksumState(NamedTuple):
+    """Checksums carried alongside a product D = X @ Y."""
+
+    col1: jax.Array  # e1^T D, shape (n,)
+    col2: jax.Array  # e2^T D, shape (n,)
+    row1: jax.Array  # D e1,   shape (m,)
+    row2: jax.Array  # D e2,   shape (m,)
+
+
+def expected_checksums(x: jax.Array, y: jax.Array) -> ChecksumState:
+    """Checksums computed from the *inputs* (the ABFT invariant side).
+
+    Cost: O((m + n) * k) — the paper's "CUDA-core" encodings e1^T X, Y e1
+    plus the e2 variants, followed by O((m + n) * n) / O((m + n) * m)
+    one-row GEMMs (the paper's three extra tensor-core MMAs).
+    """
+    c1x, c2x = encode_cols(x)   # (k,), (k,)
+    r1y, r2y = encode_rows(y)   # (k,), (k,)
+    return ChecksumState(
+        col1=c1x @ y,
+        col2=c2x @ y,
+        row1=x @ r1y,
+        row2=x @ r2y,
+    )
+
+
+def observed_checksums(d: jax.Array) -> ChecksumState:
+    """Checksums computed from the (possibly corrupted) output D."""
+    c1, c2 = encode_cols(d)
+    r1, r2 = encode_rows(d)
+    return ChecksumState(col1=c1, col2=c2, row1=r1, row2=r2)
+
+
+class Verdict(NamedTuple):
+    detected: jax.Array   # bool scalar
+    row: jax.Array        # int32 scalar (0 if not detected)
+    col: jax.Array        # int32 scalar
+    delta: jax.Array      # the error magnitude to subtract
+
+
+def verify(d: jax.Array, expected: ChecksumState, threshold) -> Verdict:
+    """Compare output-derived checksums against input-derived ones.
+
+    Returns the detection verdict with the located (row, col) and delta.
+    Under the SEU model (≤1 error per interval) location decoding is exact.
+    """
+    obs = observed_checksums(d)
+    res_col1 = obs.col1 - expected.col1          # (n,)
+    res_row1 = obs.row1 - expected.row1          # (m,)
+    res_col2 = obs.col2 - expected.col2
+    res_row2 = obs.row2 - expected.row2
+
+    # Detection: any column / row residual above threshold.
+    col_bad = jnp.abs(res_col1) > threshold
+    row_bad = jnp.abs(res_row1) > threshold
+    detected = jnp.logical_or(jnp.any(col_bad), jnp.any(row_bad))
+
+    # Location. Primary: the arg-max residual column gives j and delta;
+    # the e2/e1 ratio of the *column* residuals gives the row index
+    # (paper's location encoding). Cross-check with the row residuals.
+    j = jnp.argmax(jnp.abs(res_col1)).astype(jnp.int32)
+    delta_col = res_col1[j]
+    i_from_ratio = jnp.round(res_col2[j] / jnp.where(delta_col == 0, 1.0, delta_col)) - 1
+    # Fall back to the row-residual argmax when column residual is degenerate
+    # (e.g. error in a row whose column hit threshold issues).
+    i_direct = jnp.argmax(jnp.abs(res_row1)).astype(jnp.int32)
+    use_ratio = jnp.abs(delta_col) > threshold
+    i = jnp.where(use_ratio, i_from_ratio.astype(jnp.int32), i_direct)
+    i = jnp.clip(i, 0, d.shape[0] - 1)
+    delta_row = res_row1[i]
+    delta = jnp.where(jnp.abs(delta_col) > jnp.abs(delta_row), delta_col, delta_row)
+    # If the column residual was degenerate, recover j from the row ratio.
+    j_from_ratio = jnp.round(res_row2[i] / jnp.where(delta_row == 0, 1.0, delta_row)) - 1
+    j = jnp.where(use_ratio, j, jnp.clip(j_from_ratio.astype(jnp.int32), 0, d.shape[1] - 1))
+
+    zero = jnp.zeros((), jnp.int32)
+    return Verdict(
+        detected=detected,
+        row=jnp.where(detected, i, zero),
+        col=jnp.where(detected, j, zero),
+        delta=jnp.where(detected, delta, jnp.zeros((), d.dtype)),
+    )
+
+
+def correct(d: jax.Array, verdict: Verdict) -> jax.Array:
+    """Subtract the located delta (no-op when nothing was detected)."""
+    fixed = d.at[verdict.row, verdict.col].add(-verdict.delta)
+    return jnp.where(verdict.detected, fixed, d)

@@ -1,0 +1,66 @@
+"""Dual Modular Redundancy for memory-bound reductions (paper §I / §IV).
+
+The paper's observation: the centroid-update phase is memory-bound — the
+latency of streaming the samples dwarfs the arithmetic, so *duplicating
+every arithmetic instruction* (DMR) costs <1 %. On TPU the same holds: the
+update is an O(M·N) segment-sum limited by HBM bandwidth.
+
+XLA would CSE two identical computations, silently removing the redundancy.
+We route the replica through ``jax.lax.optimization_barrier`` so the
+compiled program really computes twice, then compare.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dmr(fn: Callable, *args, atol: float = 0.0):
+    """Run fn twice (CSE-proof) and return (result, mismatch_flag).
+
+    mismatch_flag is True when any leaf differs by more than atol —
+    the caller decides the recovery policy (recompute / restart). For
+    bitwise-deterministic ops atol=0 detects any SDC in either replica.
+    """
+    primary = fn(*args)
+    shadow_args = jax.lax.optimization_barrier(args)
+    replica = fn(*shadow_args)
+
+    leaves_p = jax.tree_util.tree_leaves(primary)
+    leaves_r = jax.tree_util.tree_leaves(replica)
+    bad = jnp.zeros((), jnp.bool_)
+    for a, b in zip(leaves_p, leaves_r):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            bad = jnp.logical_or(bad, jnp.any(jnp.abs(a - b) > atol))
+        else:
+            bad = jnp.logical_or(bad, jnp.any(a != b))
+    return primary, bad
+
+
+def dmr_with_retry(fn: Callable, *args, atol: float = 0.0, max_retries: int = 1):
+    """DMR + one recomputation on mismatch (triple-vote fallback).
+
+    On mismatch, computes a third replica and majority-votes elementwise.
+    Cheap because the protected ops are memory-bound; matches the paper's
+    "recompute after detection" policy for the update phase.
+    """
+    primary = fn(*args)
+    shadow_args = jax.lax.optimization_barrier(args)
+    replica = fn(*shadow_args)
+    third_args = jax.lax.optimization_barrier(shadow_args)
+    third = fn(*third_args)
+
+    def vote(a, b, c):
+        ab = a == b if not jnp.issubdtype(a.dtype, jnp.floating) else jnp.abs(a - b) <= atol
+        return jnp.where(ab, a, c)
+
+    voted = jax.tree_util.tree_map(vote, primary, replica, third)
+    bad = jnp.zeros((), jnp.bool_)
+    for a, b in zip(jax.tree_util.tree_leaves(primary), jax.tree_util.tree_leaves(replica)):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            bad = jnp.logical_or(bad, jnp.any(jnp.abs(a - b) > atol))
+        else:
+            bad = jnp.logical_or(bad, jnp.any(a != b))
+    return voted, bad

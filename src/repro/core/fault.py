@@ -1,0 +1,92 @@
+"""SEU fault-injection harness (paper §II-A fault model).
+
+Each injection flips a single bit of one element of a tensor — the model the
+paper uses: "each threadblock randomly selects an element to corrupt by
+flipping a single bit, either in its 32-bit float representation or 64-bit
+double representation". Under the single-event-upset assumption at most one
+error occurs per detection/correction interval.
+
+Injection targets *compute results* (accumulators, products), never stored
+inputs: memory errors are ECC's job per the fault model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_UINT = {jnp.dtype(jnp.float32): jnp.uint32, jnp.dtype(jnp.float64): jnp.uint64,
+         jnp.dtype(jnp.bfloat16): jnp.uint16}
+_NBITS = {jnp.dtype(jnp.float32): 32, jnp.dtype(jnp.float64): 64,
+          jnp.dtype(jnp.bfloat16): 16}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Describes an injection campaign.
+
+    rate: expected number of injections per step (Bernoulli per step when
+      <= 1, otherwise a fixed integer count per step).
+    bit_low/bit_high: inclusive range of bit positions to flip. Defaults
+      exercise high-mantissa + exponent bits (detectable range); flipping
+      the sign of a denormal would be below any sane threshold and is also
+      harmless to the result.
+    """
+
+    rate: float = 1.0
+    bit_low: int = 20
+    bit_high: int = 30
+    seed: int = 0
+
+    def enabled(self) -> bool:
+        return self.rate > 0
+
+
+def flip_bit(x: jax.Array, idx, bit) -> jax.Array:
+    """Flip `bit` of element `idx` (flat index) of x. jit-safe."""
+    dt = jnp.dtype(x.dtype)
+    uint = _UINT[dt]
+    flat = x.reshape(-1)
+    v = flat[idx]
+    as_int = jax.lax.bitcast_convert_type(v, uint)
+    flipped = as_int ^ (jnp.asarray(1, uint) << jnp.asarray(bit, uint))
+    out = jax.lax.bitcast_convert_type(flipped, x.dtype)
+    return flat.at[idx].set(out).reshape(x.shape)
+
+
+def inject(key: jax.Array, x: jax.Array, cfg: FaultConfig) -> jax.Array:
+    """Inject (at most one) bit-flip into x according to cfg. jit-safe."""
+    if not cfg.enabled():
+        return x
+    k_gate, k_idx, k_bit = jax.random.split(key, 3)
+    fire = jax.random.uniform(k_gate) < jnp.minimum(cfg.rate, 1.0)
+    idx = jax.random.randint(k_idx, (), 0, x.size)
+    bit = jax.random.randint(k_bit, (), cfg.bit_low, cfg.bit_high + 1)
+    return jnp.where(fire, flip_bit(x, idx, bit), x)
+
+
+def inject_delta(key: jax.Array, x: jax.Array, cfg: FaultConfig) -> jax.Array:
+    """Like inject(), but as an additive delta tensor (for in-kernel use).
+
+    Returns a tensor that is zero everywhere except (possibly) one element
+    holding the bit-flip delta; adding it to x reproduces inject(key, x).
+    Useful when corruption must be applied inside a kernel accumulator.
+    """
+    corrupted = inject(key, x, cfg)
+    return corrupted - x
+
+
+def host_injection_plan(cfg: FaultConfig, steps: int) -> list[Optional[tuple[int, int]]]:
+    """Pre-sample a host-side plan: per step, None or (flat_idx_seed, bit)."""
+    rng = np.random.default_rng(cfg.seed)
+    plan: list[Optional[tuple[int, int]]] = []
+    for _ in range(steps):
+        if rng.uniform() < min(cfg.rate, 1.0):
+            plan.append((int(rng.integers(0, 2**31 - 1)),
+                         int(rng.integers(cfg.bit_low, cfg.bit_high + 1))))
+        else:
+            plan.append(None)
+    return plan

@@ -1,0 +1,127 @@
+"""ABFT-protected matmul (jnp path) with online detection + correction.
+
+This is the framework-level counterpart of the paper's fused kernel: the
+Pallas kernels in ``repro.kernels`` fuse the checksums into the tile loop;
+this module provides the same invariant at the XLA level so that *any*
+dense layer in the LM stack (``repro.ft.abft_dense``) or the k-means
+assignment can be protected on hardware where the kernel is not deployed.
+
+Overhead model (paper §IV-A): for D = X @ Y with X (m, k), Y (k, n),
+the checksummed products add O((m + n) k) encode work + four length-k
+one-row GEMMs — a 2/m + 2/n relative cost, vanishing for the tall-skinny
+shapes k-means produces (m = samples >> n = clusters).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksum
+from repro.core.fault import FaultConfig, inject
+
+
+@partial(jax.jit,
+         static_argnames=("threshold_scale", "precision", "fault"))
+def ft_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    inject_key: Optional[jax.Array] = None,
+    fault: Optional[FaultConfig] = None,
+    threshold_scale: float = 1.0,
+    precision=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compute x @ y with dual-checksum ABFT detect + correct.
+
+    Returns (d_corrected, detected_flag). When ``inject_key`` and ``fault``
+    are given, a single SEU bit-flip is injected into the raw product —
+    simulating a compute-unit error — before verification, so the returned
+    product demonstrates end-to-end online correction.
+    """
+    expected = checksum.expected_checksums(x, y)
+    d = jnp.matmul(x, y, precision=precision)
+    if inject_key is not None and fault is not None and fault.enabled():
+        d = inject(inject_key, d, fault)
+    scale = jnp.maximum(jnp.max(jnp.abs(d)), 1.0)
+    thr = checksum.default_threshold(x.shape[1], d.dtype, threshold_scale) * scale
+    verdict = checksum.verify(d, expected, thr)
+    return checksum.correct(d, verdict), verdict.detected
+
+
+@partial(jax.jit, static_argnames=("threshold_scale", "precision"))
+def ft_matmul_col(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    threshold_scale: float = 1.0,
+    precision=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Column-checksum-only ABFT matmul (beyond-paper optimization).
+
+    Under the SEU model the e1/e2 *column* checksums alone both detect and
+    locate: j = argmax residual column, delta = r1[j], i = r2[j]/r1[j] - 1.
+    Skipping the row checksums removes two length-k one-row GEMMs and one
+    full reduction pass over D — the jnp-tier overhead drops ~2x
+    (EXPERIMENTS.md §Perf internlm2 iteration 2). The scale proxy uses the
+    checksum row (already a full-D reduction) instead of max|D|, removing
+    another pass.
+    """
+    c1x, c2x = checksum.encode_cols(x)
+    exp_col1 = c1x @ y
+    exp_col2 = c2x @ y
+    d = jnp.matmul(x, y, precision=precision)
+    obs_col1 = jnp.sum(d, axis=0)
+    w = checksum.e2(d.shape[0], d.dtype)
+    obs_col2 = w @ d
+    res1 = obs_col1 - exp_col1
+    res2 = obs_col2 - exp_col2
+    # scale proxy: column checksums are m-fold sums of D
+    scale = jnp.maximum(jnp.max(jnp.abs(exp_col1)) / max(d.shape[0], 1), 1.0)
+    thr = checksum.default_threshold(
+        x.shape[1], d.dtype, threshold_scale) * scale * d.shape[0]
+    detected = jnp.any(jnp.abs(res1) > thr)
+    j = jnp.argmax(jnp.abs(res1)).astype(jnp.int32)
+    delta = res1[j]
+    safe = jnp.where(delta == 0.0, 1.0, delta)
+    i = jnp.clip((jnp.round(res2[j] / safe) - 1.0).astype(jnp.int32),
+                 0, d.shape[0] - 1)
+    fixed = d.at[i, j].add(-jnp.where(detected, delta, 0.0))
+    return fixed, detected
+
+
+def abft_dot(x: jax.Array, y: jax.Array, *, enabled: bool = True,
+             precision=None, mode: str = "col") -> jax.Array:
+    """Drop-in jnp.matmul replacement used by repro.ft.abft_dense.
+
+    Silent-correcting variant: callers that don't care about the flag just
+    get the (corrected) product. Differentiable: the backward pass re-uses
+    protected matmuls (gradients of a corrected product equal gradients of
+    the clean product under the SEU model, since correction restores D).
+
+    mode: "col" (default) = column-checksum-only fast path (~2x lower
+    overhead, same SEU guarantee); "full" = paper-faithful dual row+column.
+    """
+    if not enabled:
+        return jnp.matmul(x, y, precision=precision)
+    prot = ft_matmul_col if mode == "col" else ft_matmul
+
+    @jax.custom_vjp
+    def _f(x, y):
+        d, _ = prot(x, y, precision=precision)
+        return d
+
+    def _fwd(x, y):
+        return _f(x, y), (x, y)
+
+    def _bwd(res, g):
+        x, y = res
+        # Protect the two backward GEMMs with the same invariant.
+        gx, _ = prot(g, y.T, precision=precision)
+        gy, _ = prot(x.T, g, precision=precision)
+        return gx.astype(x.dtype), gy.astype(y.dtype)
+
+    _f.defvjp(_fwd, _bwd)
+    return _f(x, y)

@@ -1,0 +1,226 @@
+"""FT K-means — the paper's algorithm as a composable JAX module.
+
+Lloyd iterations with: pluggable assignment strategy (the paper's stepwise
+ladder, see ``assignment.py``), DMR-protected centroid update (§IV intro),
+k-means++ / random init, mini-batch mode, empty-cluster reseeding, and an
+SEU injection campaign hook for the fault-tolerance benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment as assign_mod
+from repro.core import dmr as dmr_mod
+from repro.core.fault import FaultConfig
+from repro.kernels import ops, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansConfig:
+    k: int
+    max_iters: int = 100
+    tol: float = 1e-4
+    init: str = "kmeans++"            # "kmeans++" | "random"
+    assignment: str = "fused"          # key into assignment.STRATEGIES
+    dmr_update: bool = True            # DMR on the memory-bound update phase
+    minibatch: Optional[int] = None    # None = full-batch Lloyd
+    seed: int = 0
+    dtype: str = "float32"
+
+
+class KMeansState(NamedTuple):
+    centroids: jax.Array       # (K, F)
+    assign: jax.Array          # (M,) int32
+    inertia: jax.Array         # scalar: sum of squared distances
+    shift: jax.Array           # centroid movement (convergence metric)
+    iteration: jax.Array       # int32
+    detected_errors: jax.Array # cumulative SDCs corrected (int32)
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array
+    assign: jax.Array
+    inertia: jax.Array
+    iterations: int
+    detected_errors: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_random(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    return x[idx]
+
+
+def init_kmeanspp(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding (D^2 sampling), jit-safe via fori_loop."""
+    m = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, m)]
+    centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+    d2 = jnp.sum((x - first) ** 2, axis=1)
+
+    def body(i, carry):
+        centroids, d2, key = carry
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-30)
+        idx = jax.random.choice(sub, m, p=probs)
+        nxt = x[idx]
+        centroids = centroids.at[i].set(nxt)
+        d2 = jnp.minimum(d2, jnp.sum((x - nxt) ** 2, axis=1))
+        return centroids, d2, key
+
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids, d2, key))
+    return centroids
+
+
+# ---------------------------------------------------------------------------
+# One Lloyd step
+# ---------------------------------------------------------------------------
+
+def centroid_update(x: jax.Array, assign: jax.Array, k: int,
+                    prev: jax.Array, *, use_dmr: bool = True):
+    """Means of assigned points; empty clusters keep their previous centroid.
+
+    The paper's step 3: memory-bound, protected by DMR (arithmetic is
+    duplicated over once-loaded data; <1 % overhead in the paper)."""
+    def _sums(x, assign):
+        return ref.centroid_update(x, assign, k)
+
+    if use_dmr:
+        (sums, counts), bad = dmr_mod.dmr(_sums, x, assign)
+        # SEU model: a mismatch triggers one recompute (fail-continue fix).
+        def recompute(_):
+            s, c = _sums(jax.lax.optimization_barrier(x),
+                         jax.lax.optimization_barrier(assign))
+            return s, c
+        sums, counts = jax.lax.cond(bad, recompute, lambda _: (sums, counts),
+                                    operand=None)
+    else:
+        sums, counts = _sums(x, assign)
+
+    counts_safe = jnp.maximum(counts, 1.0)
+    means = sums / counts_safe[:, None]
+    return jnp.where((counts > 0)[:, None], means, prev), counts
+
+
+def reseed_empty(key: jax.Array, x: jax.Array, centroids: jax.Array,
+                 counts: jax.Array, min_dist: jax.Array) -> jax.Array:
+    """Move empty clusters onto the points farthest from their centroid —
+    the standard cuML/sklearn policy, jit-safe."""
+    k = centroids.shape[0]
+    order = jnp.argsort(-min_dist)            # farthest points first
+    empty_rank = jnp.cumsum(counts == 0) - 1  # position among empties
+    donor = order[jnp.clip(empty_rank, 0, x.shape[0] - 1)]
+    return jnp.where((counts == 0)[:, None], x[donor], centroids)
+
+
+def make_step(cfg: KMeansConfig, params=None):
+    """Build a jit-able (x, centroids, inj_or_None) -> (state pieces) step."""
+    strat = assign_mod.STRATEGIES[cfg.assignment]
+
+    def step(x, centroids, inj=None):
+        if cfg.assignment == "fused_ft":
+            am, md, det = strat(x, centroids, params, inj=inj)
+        elif cfg.assignment == "fused":
+            am, md, det = strat(x, centroids, params)
+        else:
+            am, md, det = strat(x, centroids)
+        new_c, counts = centroid_update(
+            x, am, cfg.k, centroids, use_dmr=cfg.dmr_update)
+        inertia = jnp.sum(md)
+        shift = jnp.sqrt(jnp.sum((new_c - centroids) ** 2))
+        return new_c, am, counts, md, inertia, shift, det
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+class KMeans:
+    """scikit-learn-flavoured front end over the jit'd Lloyd step."""
+
+    def __init__(self, cfg: KMeansConfig, params=None):
+        self.cfg = cfg
+        self.params = params
+        self._step = jax.jit(make_step(cfg, params))
+
+    def init_centroids(self, x: jax.Array, key: Optional[jax.Array] = None):
+        key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
+        fn = init_kmeanspp if self.cfg.init == "kmeans++" else init_random
+        return fn(key, x, self.cfg.k)
+
+    def fit(self, x: jax.Array, *, centroids: Optional[jax.Array] = None,
+            fault: Optional[FaultConfig] = None,
+            on_iteration: Optional[Callable] = None) -> KMeansResult:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        if centroids is None:
+            key, sub = jax.random.split(key)
+            centroids = self.init_centroids(x, sub)
+
+        total_det = jnp.zeros((), jnp.int32)
+        am = jnp.zeros((x.shape[0],), jnp.int32)
+        inertia = jnp.asarray(jnp.inf)
+        rng = np.random.default_rng(cfg.seed + 1)
+        it = 0
+        for it in range(cfg.max_iters):
+            batch = x
+            if cfg.minibatch is not None:
+                idx = rng.choice(x.shape[0], cfg.minibatch, replace=False)
+                batch = x[jnp.asarray(idx)]
+
+            inj = None
+            if cfg.assignment == "fused_ft":
+                inj = self._draw_injection(rng, batch, fault)
+
+            centroids, am_b, counts, md, inertia, shift, det = self._step(
+                batch, centroids, inj)
+            total_det = total_det + det
+            if cfg.minibatch is None:
+                am = am_b
+                centroids = reseed_empty(
+                    jax.random.fold_in(key, it), batch, centroids, counts, md)
+            if on_iteration is not None:
+                on_iteration(it, centroids, float(inertia), float(shift))
+            if float(shift) < cfg.tol:
+                break
+
+        if cfg.minibatch is not None:   # final full assignment
+            am, _, _ = assign_mod.STRATEGIES["gemm_fused"](x, centroids)
+        return KMeansResult(centroids, am, inertia, it + 1, total_det)
+
+    def _draw_injection(self, rng, batch, fault: Optional[FaultConfig]):
+        from repro.kernels.distance_argmin_ft import no_injection
+        if fault is None or not fault.enabled() or rng.uniform() > min(fault.rate, 1.0):
+            return no_injection()
+        m, f = batch.shape
+        k = self.cfg.k
+        from repro.core.autotune import lookup_params
+        p = self.params or lookup_params(m, k, f)
+        p = ops.clamp_params(m, k, f, p)
+        # Random tile/element + a large delta (bit-flip magnitude scale).
+        mp = -(-m // p.block_m)
+        kp = -(-k // p.block_k)
+        fp = -(-f // p.block_f)
+        from repro.kernels.distance_argmin_ft import make_injection
+        delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(4, 24))
+        return make_injection(int(rng.integers(mp)), int(rng.integers(kp)),
+                              int(rng.integers(fp)), int(rng.integers(p.block_m)),
+                              int(rng.integers(p.block_k)), delta)
+
+
+def fit_kmeans(x, k: int, **kw) -> KMeansResult:
+    """Convenience one-shot API."""
+    cfg = KMeansConfig(k=k, **kw)
+    return KMeans(cfg).fit(x)

@@ -1,0 +1,4 @@
+from repro.data.blobs import make_blobs
+from repro.data.synthetic import TokenPipeline
+
+__all__ = ["make_blobs", "TokenPipeline"]

@@ -1,0 +1,24 @@
+"""Synthetic clustering data (isotropic Gaussian blobs), shardable.
+
+The generator is deterministic in (seed, shard) so every host materializes
+only its own shard — the pattern a 1000-node ingest uses (no global array
+ever exists on one host).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def make_blobs(m: int, f: int, k: int, *, seed: int = 0, spread: float = 1.0,
+               center_scale: float = 10.0, shard: int = 0, num_shards: int = 1,
+               dtype=np.float32):
+    """Returns (x (m_local, f), true_labels (m_local,)) for this shard."""
+    assert m % num_shards == 0
+    m_local = m // num_shards
+    rng_centers = np.random.default_rng(seed)           # shared across shards
+    centers = rng_centers.normal(size=(k, f)) * center_scale
+    rng = np.random.default_rng(seed * 1_000_003 + shard + 1)
+    labels = rng.integers(0, k, size=m_local)
+    x = centers[labels] + rng.normal(size=(m_local, f)) * spread
+    return jnp.asarray(x, dtype), jnp.asarray(labels, jnp.int32)

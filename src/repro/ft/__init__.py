@@ -1,0 +1,5 @@
+from repro.ft.checkpoint import Checkpointer
+from repro.ft.abft_dense import ft_einsum, FTContext
+from repro.ft import elastic
+
+__all__ = ["Checkpointer", "ft_einsum", "FTContext", "elastic"]

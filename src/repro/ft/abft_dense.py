@@ -1,0 +1,158 @@
+"""ABFT-protected projections for the LM stack (paper technique, level 2).
+
+``ft_einsum`` is the single entry point the model layers use for every
+dense contraction. With FT disabled it is ``jnp.einsum``; with FT enabled
+the contraction gains the paper's dual-checksum invariant in an
+*einsum-native* form (beyond-paper refinement, §Perf internlm2 log):
+
+    the MAIN product runs untouched (GSPMD keeps its optimal sharding —
+    reshaping to a 2-D GEMM perturbed the partitioner into re-sharding
+    every projection), and the checksums are separate vector contractions:
+
+      exp1 = (sum_tokens x) @ W          obs1 = sum_tokens D      (out...,)
+      exp2 = (sum_tokens w_t * x) @ W    obs2 = sum_tokens w_t*D
+
+    detection: |obs1 - exp1| > threshold at output coordinate j;
+    location:  flat token index t = round((obs2-exp2)_j / (obs1-exp1)_j)-1;
+    correction: D[unravel(t), j] -= delta.   (SEU model: <=1 per interval)
+
+Cost: two token-sum passes + two (k,)x(k,out) vector GEMMs per projection
+— O(1/B/S) relative flops, a few KiB of all-reduce per projection.
+
+A thread-local ``FTContext`` collects the enable switch so the step
+builders configure protection without threading flags through every layer.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class FTContext(threading.local):
+    """Per-thread FT switches; configured once by the step builder."""
+
+    def __init__(self):
+        self.enabled = False
+
+    def configure(self, enabled: bool):
+        self.enabled = enabled
+
+
+_CTX = FTContext()
+
+
+def configure(enabled: bool):
+    _CTX.configure(enabled)
+
+
+def ft_enabled() -> bool:
+    return _CTX.enabled
+
+
+def _parse(spec: str, x, w):
+    """Returns (batch_labels, contracted, out_labels) or None."""
+    try:
+        lhs, out = spec.split("->")
+        a, b = lhs.split(",")
+    except ValueError:
+        return None
+    contracted = [c for c in a if c in b and c not in out]
+    if not contracted or any(c in out for c in contracted):
+        return None
+    if a[-len(contracted):] != "".join(contracted) or \
+            b[: len(contracted)] != "".join(contracted):
+        return None
+    batch_labels = a[: -len(contracted)]
+    out_labels = b[len(contracted):]
+    if out != batch_labels + out_labels:
+        return None
+    return batch_labels, contracted, out_labels
+
+
+def ft_einsum(spec: str, x: jax.Array, w: jax.Array, *,
+              enabled: Optional[bool] = None) -> jax.Array:
+    """einsum with optional einsum-native ABFT protection.
+
+    Supported specs are the LM stack's projection forms — (batch..., k...)
+    x (k..., out...). Other specs fall back to plain einsum (elementwise /
+    recurrent ops are DMR territory, not ABFT — DESIGN.md §4).
+    """
+    on = _CTX.enabled if enabled is None else enabled
+    if not on:
+        return jnp.einsum(spec, x, w)
+    parsed = _parse(spec, x, w)
+    if parsed is None:
+        return jnp.einsum(spec, x, w)
+    batch_labels, contracted, out_labels = parsed
+
+    nb = len(batch_labels)
+    nk = len(contracted)
+    bdims = tuple(range(nb))
+    k = 1
+    for d in x.shape[nb:]:
+        k *= d
+    ntok = 1
+    for d in x.shape[:nb]:
+        ntok *= d
+    out_elems = 1
+    for d in w.shape[nk:]:
+        out_elems *= d
+
+    @jax.custom_vjp
+    def _protected(x, w):
+        return _detect_correct(x, w)
+
+    def _detect_correct(x, w):
+        d = jnp.einsum(spec, x, w)
+        xf = x.astype(jnp.float32)
+        df = d.astype(jnp.float32)
+        w2 = w.reshape(k, out_elems).astype(jnp.float32)
+        # e1/e2 over the flattened token dims
+        w_t = (jnp.arange(ntok, dtype=jnp.float32) + 1.0).reshape(
+            x.shape[:nb] + (1,) * nk)
+        exp1 = jnp.sum(xf, axis=bdims).reshape(k) @ w2          # (out,)
+        exp2 = jnp.sum(xf * w_t, axis=bdims).reshape(k) @ w2
+        obs1 = jnp.sum(df, axis=bdims).reshape(out_elems)
+        w_t_out = w_t.reshape(x.shape[:nb] + (1,) * len(out_labels))
+        obs2 = jnp.sum(df * w_t_out, axis=bdims).reshape(out_elems)
+
+        res1 = obs1 - exp1
+        res2 = obs2 - exp2
+        eps = jnp.float32(1.1920929e-07)
+        scale = jnp.maximum(jnp.max(jnp.abs(exp1)) / ntok, 1.0)
+        thr = 16.0 * jnp.sqrt(jnp.float32(k)) * eps * scale * ntok
+        detected = jnp.any(jnp.abs(res1) > thr)
+
+        j = jnp.argmax(jnp.abs(res1)).astype(jnp.int32)
+        delta = res1[j]
+        safe = jnp.where(delta == 0.0, 1.0, delta)
+        t = jnp.clip((jnp.round(res2[j] / safe) - 1.0).astype(jnp.int32),
+                     0, ntok - 1)
+        # correct the single element (flat token t, flat out j)
+        tok_idx = jnp.unravel_index(t, x.shape[:nb])
+        out_idx = jnp.unravel_index(j, w.shape[nk:])
+        fix = jnp.where(detected, delta, 0.0).astype(d.dtype)
+        return d.at[tok_idx + out_idx].add(-fix)
+
+    def _fwd(x, w):
+        return _protected(x, w), (x, w)
+
+    def _bwd(res, g):
+        x, w = res
+        # backward contractions protected with the same invariant by
+        # recursion through ft_einsum on transposed specs
+        gx = jnp.einsum(f"{batch_labels}{''.join(out_labels)},"
+                        f"{''.join(contracted)}{''.join(out_labels)}"
+                        f"->{batch_labels}{''.join(contracted)}",
+                        g, w)
+        gw = jnp.einsum(f"{batch_labels}{''.join(contracted)},"
+                        f"{batch_labels}{''.join(out_labels)}"
+                        f"->{''.join(contracted)}{''.join(out_labels)}",
+                        x, g)
+        return gx.astype(x.dtype), gw.astype(w.dtype)
+
+    _protected.defvjp(_fwd, _bwd)
+    return _protected(x, w)

@@ -1,0 +1,98 @@
+"""Elastic scaling + straggler mitigation policy (DESIGN.md §5).
+
+The recovery ladder for a 1000+ node deployment, cheapest first:
+
+  1. SDC in a GEMM           -> corrected in-kernel (ABFT), zero restarts.
+  2. SDC in a reduction      -> DMR mismatch -> recompute that op.
+  3. Straggling host         -> k-means: per-iteration work is stateless
+     beyond the centroids, so the coordinator drops the straggler's shard
+     for the iteration (the psum re-normalizes by the live counts — the
+     estimator stays unbiased); LM training: skip-straggler = gradient
+     psum over the responsive subset with count renormalization.
+  4. Failed host (fail-stop) -> shrink the mesh, re-shard, restore the last
+     checkpoint, continue.
+
+This module implements the *decision* layer: given the live device set it
+produces the new mesh + resharding plan. The mechanics (rebuild loader,
+re-lower step) live with the launchers; in a single-process container the
+device set is simulated, and tests drive the policy with fake topologies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    dropped_devices: tuple
+    data_shards: int            # new number of data shards
+    note: str = ""
+
+
+def largest_mesh(n_devices: int, *, model_parallel: int,
+                 pods: int = 1) -> tuple[int, ...]:
+    """Largest (pod, data, model) grid that fits n_devices, keeping the
+    model axis intact (TP groups must stay whole) and shrinking data."""
+    per_pod = n_devices // pods
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"cannot keep model={model_parallel} with {n_devices} devices")
+    return (pods, data, model_parallel) if pods > 1 else (data, model_parallel)
+
+
+def plan_rescale(live_devices: Sequence, *, model_parallel: int,
+                 pods: int = 1,
+                 axis_names: tuple = ("data", "model")) -> ReshardPlan:
+    """Compute the post-failure mesh. Drops the minimum number of devices
+    needed to make the grid rectangular (whole TP groups only)."""
+    n = len(live_devices)
+    shape = largest_mesh(n - n % model_parallel, model_parallel=model_parallel,
+                         pods=pods)
+    used = int(np.prod(shape))
+    dropped = tuple(range(used, n))
+    names = (("pod",) + axis_names) if pods > 1 else axis_names
+    data_shards = shape[-2] * (shape[0] if pods > 1 else 1)
+    return ReshardPlan(
+        mesh_shape=shape, axis_names=names, dropped_devices=dropped,
+        data_shards=data_shards,
+        note=f"{n} live -> mesh {shape} ({used} used, {len(dropped)} spare)")
+
+
+def build_mesh(plan: ReshardPlan, devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    used = int(np.prod(plan.mesh_shape))
+    grid = np.asarray(devices[:used]).reshape(plan.mesh_shape)
+    return Mesh(grid, plan.axis_names)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based straggler mitigation for the synchronous collectives.
+
+    A shard that misses `deadline_factor` x median step time for
+    `strikes` consecutive steps is treated as failed (-> plan_rescale).
+    Until then its contribution is simply skipped: for k-means the psum
+    denominators use live counts (unbiased); for SGD the gradient mean
+    renormalizes by the responding shard count.
+    """
+
+    deadline_factor: float = 3.0
+    strikes: int = 2
+    _history: dict = dataclasses.field(default_factory=dict)
+
+    def observe(self, shard: int, step_time: float, median_time: float) -> bool:
+        """Returns True when the shard should be evicted."""
+        late = step_time > self.deadline_factor * max(median_time, 1e-9)
+        count = self._history.get(shard, 0)
+        count = count + 1 if late else 0
+        self._history[shard] = count
+        return count >= self.strikes

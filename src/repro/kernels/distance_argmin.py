@@ -1,0 +1,123 @@
+"""Fused distance + nearest-centroid kernel (paper §III, Fig. 4 — TPU-native).
+
+Computes, for samples X (M, F) and centroids C (K, F):
+
+    argmin_j  ||x_i - c_j||^2   and the winning partial distance
+    d_ij = ||c_j||^2 - 2 x_i . c_j      (||x_i||^2 is row-constant)
+
+in a single pass: the GEMM (-2 X C^T), the paper's fused epilogue (thread /
+threadblock min-reduction) and the cross-threadblock broadcast are all
+folded into one Pallas kernel.
+
+TPU adaptation (see DESIGN.md §2):
+  * the contraction (feature) axis is the innermost grid dimension with a
+    VMEM scratch accumulator — the analogue of the paper's cp.async k-loop;
+    Mosaic generates the HBM->VMEM double-buffered pipeline from BlockSpecs;
+  * grid steps on a TensorCore are sequential, so the running min/argmin is
+    accumulated directly in the revisited output block — the paper's
+    lock-vector broadcast degenerates to a data dependence;
+  * tiles are MXU-aligned: block_m, block_k multiples of (8, 128) lanes.
+
+Grid: (M/bm, K/bk, F/bf), iterated row-major (feature axis fastest).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_LIMIT = float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(x_ref, c_ref, cn_ref, mind_ref, argmin_ref, acc_ref):
+    """One (bm, bk) distance tile, accumulated over feature steps.
+
+    x_ref   : (bm, bf)   sample tile
+    c_ref   : (bk, bf)   centroid tile
+    cn_ref  : (1, bk)    centroid squared norms (+inf for padded slots)
+    mind_ref: (bm, 1)    running minimum of d_ij  (output, revisited)
+    argmin_ref: (bm, 1)  running argmin           (output, revisited)
+    acc_ref : (bm, bk)   VMEM scratch accumulator for X C^T
+    """
+    c_idx = pl.program_id(1)
+    f_idx = pl.program_id(2)
+    nf = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(c_idx == 0, f_idx == 0))
+    def _init_outputs():
+        mind_ref[...] = jnp.full_like(mind_ref, NEG_LIMIT)
+        argmin_ref[...] = jnp.zeros_like(argmin_ref)
+
+    @pl.when(f_idx == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU tile product, f32 accumulation.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == nf - 1)
+    def _epilogue():
+        bk = acc_ref.shape[1]
+        d = cn_ref[...] - 2.0 * acc_ref[...]            # (bm, bk) via (1,bk) bcast
+        local_min = jnp.min(d, axis=1, keepdims=True)   # (bm, 1)
+        cols = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+        local_arg = jnp.min(
+            jnp.where(d == local_min, cols, jnp.iinfo(jnp.int32).max),
+            axis=1, keepdims=True) + c_idx * bk         # first-min tie-break
+        cur = mind_ref[...]
+        take = local_min < cur                          # strict: earlier tile wins ties
+        mind_ref[...] = jnp.where(take, local_min, cur)
+        argmin_ref[...] = jnp.where(take, local_arg, argmin_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_f", "interpret"))
+def distance_argmin(
+    x: jax.Array,
+    c: jax.Array,
+    cn: jax.Array,
+    *,
+    block_m: int = 256,
+    block_k: int = 128,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw kernel entry. Shapes must be pre-padded to the block grid.
+
+    x (M, F) samples, c (K, F) centroids, cn (1, K) centroid sq-norms with
+    +inf in padded centroid slots. Returns (min_d (M, 1), argmin (M, 1)).
+    """
+    m, f = x.shape
+    k = c.shape[0]
+    assert m % block_m == 0 and k % block_k == 0 and f % block_f == 0, (
+        f"unpadded shapes {(m, k, f)} vs blocks {(block_m, block_k, block_f)}")
+    grid = (m // block_m, k // block_k, f // block_f)
+
+    kernel = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_f), lambda i, j, t: (i, t)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, t: (j, t)),
+            pl.BlockSpec((1, block_k), lambda i, j, t: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_m, block_k), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return kernel(x, c, cn)

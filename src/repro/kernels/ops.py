@@ -1,0 +1,167 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: padding to the block grid (masked so results are exact), parameter
+selection via the autotune table (the paper's code-generation/selection
+pipeline), interpret-mode fallback on non-TPU backends, and injection
+planning helpers for fault campaigns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distance_argmin as _da
+from repro.kernels import distance_argmin_ft as _daft
+from repro.kernels import matmul_abft as _mma
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelParams:
+    """Tile parameters — the analogue of the paper's (threadblock, warp)
+    CUTLASS parameter group. Thread-level tiles are Mosaic's job on TPU."""
+
+    block_m: int = 256
+    block_k: int = 128   # centroid tile (paper's Threadblock.N)
+    block_f: int = 512   # contraction tile (paper's Threadblock.K)
+
+    def vmem_bytes(self) -> int:
+        """Working-set estimate: x + c tiles (double-buffered) + acc + sums."""
+        tile = (self.block_m * self.block_f + self.block_k * self.block_f) * 4
+        acc = self.block_m * self.block_k * 4
+        sums = 2 * (self.block_m + self.block_k) * 4
+        return 2 * tile + acc + sums
+
+
+DEFAULT_PARAMS = KernelParams()
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_inputs(x, c, params: KernelParams):
+    m, f = x.shape
+    k = c.shape[0]
+    mp = _round_up(m, params.block_m)
+    kp = _round_up(k, params.block_k)
+    fp = _round_up(f, params.block_f)
+    xpad = jnp.pad(x, ((0, mp - m), (0, fp - f)))
+    cpad = jnp.pad(c, ((0, kp - k), (0, fp - f)))
+    cn = jnp.sum(cpad.astype(jnp.float32) ** 2, axis=1)
+    # padded centroid slots must never win the argmin
+    slot = jnp.arange(kp)
+    cn = jnp.where(slot < k, cn, jnp.inf)[None, :]
+    return xpad, cpad, cn
+
+
+def clamp_params(m: int, k: int, f: int, params: KernelParams) -> KernelParams:
+    """Shrink blocks that exceed the (padded) problem so tiny shapes work."""
+    def shrink(block, dim, align):
+        while block > align and block > _round_up(dim, align):
+            block //= 2
+        return max(block, align)
+    return KernelParams(
+        block_m=shrink(params.block_m, m, 8),
+        block_k=shrink(params.block_k, k, 128),
+        block_f=shrink(params.block_f, f, 128),
+    )
+
+
+def fused_assign(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment via the fused kernel.
+
+    Returns (assign (M,) int32, partial min distance (M,) f32). Add
+    ``sum(x**2, -1)`` for true squared distances.
+    """
+    if params is None:
+        from repro.core.autotune import lookup_params
+        params = lookup_params(x.shape[0], c.shape[0], x.shape[1])
+    params = clamp_params(x.shape[0], c.shape[0], x.shape[1], params)
+    if interpret is None:
+        interpret = not on_tpu()
+    m = x.shape[0]
+    xp, cp, cn = _pad_inputs(x, c, params)
+    mind, am = _da.distance_argmin(
+        xp, cp, cn, block_m=params.block_m, block_k=params.block_k,
+        block_f=params.block_f, interpret=interpret)
+    return am[:m, 0], mind[:m, 0]
+
+
+def fused_assign_ft(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    inj: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """FT assignment: fused ABFT detect+locate+correct inside the kernel.
+
+    Returns (assign, partial min distance, corrected_error_count).
+    """
+    if params is None:
+        from repro.core.autotune import lookup_params
+        params = lookup_params(x.shape[0], c.shape[0], x.shape[1])
+    params = clamp_params(x.shape[0], c.shape[0], x.shape[1], params)
+    if interpret is None:
+        interpret = not on_tpu()
+    if inj is None:
+        inj = _daft.no_injection()
+    m = x.shape[0]
+    xp, cp, cn = _pad_inputs(x, c, params)
+    mind, am, det = _daft.distance_argmin_ft(
+        xp, cp, cn, inj, block_m=params.block_m, block_k=params.block_k,
+        block_f=params.block_f, interpret=interpret)
+    return am[:m, 0], mind[:m, 0], jnp.sum(det)
+
+
+def abft_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    inj: Optional[jax.Array] = None,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """ABFT GEMM D = X @ Y with in-kernel correction. Returns (D, det_count)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    m, k = x.shape
+    n = y.shape[1]
+    p = clamp_params(m, n, k, KernelParams(block_m, block_n, block_k))
+    bm, bn, bk = p.block_m, p.block_k, p.block_f
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    if inj is None:
+        inj = _mma.no_injection()
+    d, det = _mma.matmul_abft(
+        xp, yp, inj, block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return d[:m, :n], jnp.sum(det)
+
+
+def plan_injection_tile(m: int, k: int, f: int, params: KernelParams,
+                        row: int, col: int, f_step: int,
+                        delta: float) -> jax.Array:
+    """Translate a global (row, col) error position into tile coordinates."""
+    params = clamp_params(m, k, f, params)
+    return _daft.make_injection(
+        row // params.block_m, col // params.block_k,
+        f_step % max(f // params.block_f, 1),
+        row % params.block_m, col % params.block_k, delta)

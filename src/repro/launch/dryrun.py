@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell: build the production mesh, the abstract (ShapeDtypeStruct)
+parameters/optimizer/caches with their shardings, lower the real
+train/serve step, compile, and record:
+
+  * memory_analysis()       — per-device bytes (proves it fits),
+  * cost_analysis()         — per-device HLO flops/bytes,
+  * collective byte counts  — parsed from the optimized HLO,
+
+into a JSON cache (results/dryrun/<arch>__<shape>__<mesh>.json) that
+EXPERIMENTS.md §Dry-run / §Roofline and the roofline tooling read.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import analyze_hlo, collective_bytes
+from repro.train.steps import build_serve_steps, build_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    return os.path.abspath(os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh_tag}.json"))
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             force: bool = False, save_hlo: bool = False,
+             abft: bool = False) -> dict:
+    path = cell_path(arch_id, shape_name, multi_pod)
+    if abft:
+        path = path.replace(".json", "__abft.json")
+    if os.path.exists(path) and not force:
+        with open(path) as fh:
+            return json.load(fh)
+
+    cfg = get_config(arch_id, abft=True) if abft else get_config(arch_id)
+    shape = SHAPES[shape_name]
+    record = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        _save(path, record)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with jax.set_mesh(mesh):
+            if shape.kind == "train":
+                bundle = build_train_step(cfg, mesh, shape)
+            else:
+                bundle = build_serve_steps(cfg, mesh, shape)
+            lowered = bundle.step_fn.lower(*bundle.arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        t_an = time.time()
+        analyzed = analyze_hlo(hlo)   # loop-aware (scan bodies x trip count)
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            analyze_s=round(time.time() - t_an, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            cost={
+                # loop-aware per-device numbers (roofline inputs)
+                "flops": analyzed["flops"],
+                "bytes_accessed": analyzed["bytes"],
+                # raw cost_analysis (counts loop bodies once; cross-check)
+                "xla_flops_once": cost.get("flops") if cost else None,
+                "xla_bytes_once": cost.get("bytes accessed") if cost else None,
+            },
+            collectives=analyzed["collectives"],
+            collective_bytes=collective_bytes(analyzed["collectives"]),
+            hlo_bytes=len(hlo),
+        )
+        if save_hlo:
+            import gzip
+            with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as fh:
+                fh.write(hlo)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _save(path, record)
+    return record
+
+
+def _save(path: str, record: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path + ".tmp", "w") as fh:
+        json.dump(record, fh, indent=1)
+    os.replace(path + ".tmp", path)
+
+
+def summarize(record: dict) -> str:
+    if record["status"] == "skipped":
+        return (f"{record['arch']:28s} {record['shape']:12s} "
+                f"{record['mesh']:8s} SKIP ({record['reason'][:40]}...)")
+    if record["status"] == "error":
+        return (f"{record['arch']:28s} {record['shape']:12s} "
+                f"{record['mesh']:8s} ERROR {record['error'][:80]}")
+    mem = record["memory"]
+    gb = lambda b: f"{(b or 0) / 2**30:.2f}GiB"
+    return (f"{record['arch']:28s} {record['shape']:12s} {record['mesh']:8s} "
+            f"OK args={gb(mem['argument_bytes'])} temp={gb(mem['temp_bytes'])} "
+            f"flops/dev={record['cost']['flops']:.3g} "
+            f"coll={record['collective_bytes'] / 2**20:.1f}MiB "
+            f"compile={record['compile_s']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--abft", action="store_true",
+                    help="ABFT-protect dense projections (paper technique)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, multi_pod=mp, force=args.force,
+                       save_hlo=args.save_hlo, abft=args.abft)
+        print(summarize(rec), flush=True)
+        failures += rec["status"] == "error"
+    print(f"\n{len(cells)} cells, {failures} errors")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

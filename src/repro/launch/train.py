@@ -1,0 +1,118 @@
+"""Training launcher: --arch <id> on the local or production mesh.
+
+The full production loop: sharded init, microbatched AdamW step (the same
+jit'd callable the dry-run lowers), synthetic token pipeline, async atomic
+checkpointing, --restore for fail-stop recovery, ABFT switch, straggler
+observation hooks.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --smoke --steps 50 [--abft] [--restore]
+
+(On this CPU host use --smoke; the full configs are for the TPU meshes.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, train_schedule, ARCH_IDS
+from repro.configs.base import ShapeConfig, SHAPES
+from repro.data.synthetic import TokenPipeline
+from repro.dist.sharding import shard_params
+from repro.ft.checkpoint import Checkpointer
+from repro.ft.elastic import StragglerPolicy
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.train.optimizer import TrainConfig, init_opt_state
+from repro.train.steps import build_train_step
+
+
+def _tree_unflatten_from_flat(template, flat, prefix):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = prefix + "/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", ""))))
+            for p in path)
+        out.append(jnp.asarray(flat[key]).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="internlm2-1.8b")
+    ap.add_argument("--shape", choices=tuple(SHAPES), default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny batch (CPU host)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--abft", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.abft:
+        cfg = dataclasses.replace(cfg, abft=True)
+    mesh = make_production_mesh(multi_pod=args.multi_pod) \
+        if args.production_mesh else make_local_mesh()
+    if args.smoke:
+        shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+    else:
+        shape = SHAPES[args.shape]
+
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=args.steps // 10,
+                       total_steps=args.steps,
+                       schedule=train_schedule(args.arch),
+                       grad_accum=cfg.grad_accum_override or 2,
+                       opt_state_dtype=cfg.opt_state_dtype,
+                       accum_dtype=cfg.opt_state_dtype)
+    bundle = build_train_step(cfg, mesh, shape, tcfg)
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} "
+          f"schedule={tcfg.schedule} abft={cfg.abft} "
+          f"params={cfg.param_count() / 1e6:.1f}M")
+
+    params, axes = bundle.lm.init(jax.random.PRNGKey(0))
+    params = shard_params(mesh, params, axes)
+    opt = init_opt_state(params, tcfg)
+    start = 0
+    ck = Checkpointer(args.ckpt_dir, keep=3, async_write=True)
+    if args.restore:
+        st = ck.restore()
+        if st is not None:
+            start = st["_step"]
+            flat = {k: v for k, v in st.items() if k != "_step"}
+            params = shard_params(
+                mesh, _tree_unflatten_from_flat(params, flat, "params"), axes)
+            opt = _tree_unflatten_from_flat(opt, flat, "opt")
+            print(f"restored checkpoint at step {start}")
+
+    pipe = TokenPipeline(cfg.vocab_size, shape.seq_len, shape.global_batch)
+    straggler = StragglerPolicy()
+    times = []
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = pipe.next_batch(step)
+        params, opt, m = bundle.step_fn(params, opt, batch)
+        dt = time.time() - t0
+        times.append(dt)
+        median = float(np.median(times[-20:]))
+        straggler.observe(0, dt, median)   # single-host: shard 0
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  {dt:.2f}s")
+        if (step + 1) % args.ckpt_every == 0:
+            ck.save(step + 1, {"params": params, "opt": opt})
+    ck.save(args.steps, {"params": params, "opt": opt})
+    ck.wait()
+    print(f"done; snapshots: {ck.available_steps()}")
+
+
+if __name__ == "__main__":
+    main()

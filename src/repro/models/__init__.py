@@ -1,0 +1,4 @@
+from repro.models.model import LM
+from repro.models import layers, attention, moe, ssm, rglru
+
+__all__ = ["LM", "layers", "attention", "moe", "ssm", "rglru"]

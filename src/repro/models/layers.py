@@ -1,0 +1,180 @@
+"""Shared LM building blocks: params-with-logical-axes, norms, MLPs, RoPE.
+
+Every ``init_*`` returns ``(params, axes)`` — two mirrored pytrees, the
+second holding logical axis names per dimension (see dist/sharding.py).
+Every ``apply_*`` is a pure function. Dense contractions route through
+``repro.ft.abft_dense.ft_einsum`` so the paper's ABFT protection is a
+config switch, not a code change.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import fsdp_hint
+from repro.ft.abft_dense import ft_einsum
+
+
+# ---------------------------------------------------------------------------
+# Param construction
+# ---------------------------------------------------------------------------
+
+def param(key, shape, axes, dtype, *, scale: Optional[float] = None):
+    """Normal(0, scale) weight + its logical axes (fsdp-promoted if large)."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    w = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return w, fsdp_hint(shape, axes)
+
+
+def build(key, specs: dict, dtype):
+    """specs: {name: (shape, axes)} or {name: (shape, axes, scale)}."""
+    params, axes = {}, {}
+    keys = jax.random.split(key, len(specs))
+    for k, (name, spec) in zip(keys, specs.items()):
+        shape, ax = spec[0], spec[1]
+        scale = spec[2] if len(spec) > 2 else None
+        params[name], axes[name] = param(k, shape, ax, dtype, scale=scale)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype):
+    return ({"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)})
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (gated silu/gelu; ungated squared-ReLU for nemotron-4)
+# ---------------------------------------------------------------------------
+
+def mlp_gated(act: str) -> bool:
+    return act in ("silu", "gelu")
+
+
+def init_mlp(key, d: int, f: int, act: str, dtype):
+    if mlp_gated(act):
+        specs = {
+            "wi": ((d, f), ("embed", "mlp")),
+            "wg": ((d, f), ("embed", "mlp")),
+            "wo": ((f, d), ("mlp", "embed")),
+        }
+    else:
+        specs = {
+            "wi": ((d, f), ("embed", "mlp")),
+            "wo": ((f, d), ("mlp", "embed")),
+        }
+    return build(key, specs, dtype)
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":                      # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def apply_mlp(params, x, act: str):
+    h = ft_einsum("bsd,df->bsf", x, params["wi"])
+    if mlp_gated(act):
+        g = ft_einsum("bsd,df->bsf", x, params["wg"])
+        h = _act(act, g) * h
+    else:
+        h = _act(act, h)
+    return ft_einsum("bsf,fd->bsd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE sections for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: tuple = ()) -> jax.Array:
+    """x (B, S, H, hd); positions (B, S) or (B, S, 3) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 frequency slots are split into
+    ``sections`` = (t, h, w) groups; each group rotates by its own
+    position stream (temporal / height / width). Text tokens carry the
+    same id in all three streams, reducing to standard RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if positions.ndim == 2:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        assert sections and sum(sections) == hd // 2, (sections, hd)
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            f = freqs[start:start + sec]
+            parts.append(positions[..., i, None].astype(jnp.float32) * f)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)        # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (length-agnostic stub for
+    the learned table; see DESIGN.md hardware-adaptation notes)."""
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    inv = jnp.exp(-math.log(10_000.0) * dim / d)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype, tie: bool):
+    # stddev 1/sqrt(d): with the sqrt(d) input multiplier this gives
+    # unit-variance activations AND O(1) tied logits.
+    specs = {"embedding": ((vocab, d), ("vocab", "embed"), d ** -0.5)}
+    if not tie:
+        specs["unembed"] = ((d, vocab), ("embed", "vocab"))
+    return build(key, specs, dtype)
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def logits(params, x, *, tie: bool):
+    from repro.dist.sharding import constrain
+    if tie:
+        out = jnp.einsum("bsd,vd->bsv", x, params["embedding"],
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["unembed"],
+                         preferred_element_type=jnp.float32)
+    # pin vocab-sharded logits: without this GSPMD all-gathers the full
+    # f32 unembedding twice per microbatch (§Perf nemotron iteration 3)
+    return constrain(out, ("batch", None, "vocab"))

@@ -1,0 +1,469 @@
+"""Model factory: ArchConfig -> init / forward / prefill / decode.
+
+Layer stacking: the repeating ``layer_pattern`` defines a *period*; full
+periods are stacked and executed under ``jax.lax.scan`` (one HLO body for
+the whole depth — essential for 48-layer x 512-device compiles), remainder
+layers run unrolled. Each scanned period is rematerialized
+(``jax.checkpoint``) when cfg.remat.
+
+Caches mirror the parameter stacking: per pattern-slot, stacked over
+periods, so decode scans over (params, caches) together.
+
+Supported families: dense / MoE decoders, mamba2 (SSD), RecurrentGemma
+hybrid, VLM early-fusion (M-RoPE), whisper-style encoder-decoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, RGLRU, SSM, ArchConfig)
+from repro.dist.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _moe_on_layer(cfg, layer_idx) -> bool:
+    return cfg.moe is not None and \
+        layer_idx % cfg.moe.interleave == cfg.moe.interleave - 1
+
+
+def _init_layer(key, cfg: ArchConfig, kind: str, dtype, *, cross: bool,
+                layer_idx: int = 0):
+    """NOTE: when MoE interleaves (every Nth layer), the layer pattern's
+    period must be a multiple of `interleave` so scanned slots are
+    structurally homogeneous (llama4 uses pattern=('attn','attn'))."""
+    keys = jax.random.split(key, 6)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["norm1"], axes["norm1"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if kind in (ATTN, ATTN_LOCAL):
+        params["mix"], axes["mix"] = attn_mod.init_attention(keys[0], cfg, dtype)
+    elif kind == RGLRU:
+        params["mix"], axes["mix"] = rglru_mod.init_rglru(keys[0], cfg, dtype)
+    elif kind == SSM:
+        params["mix"], axes["mix"] = ssm_mod.init_ssm(keys[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        params["norm_x"], axes["norm_x"] = L.init_rmsnorm(cfg.d_model, dtype)
+        params["cross"], axes["cross"] = attn_mod.init_attention(
+            keys[1], cfg, dtype)
+    if kind != SSM:   # mamba blocks have no separate FFN
+        params["norm2"], axes["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+        if _moe_on_layer(cfg, layer_idx):
+            params["ffn"], axes["ffn"] = moe_mod.init_moe(keys[2], cfg, dtype)
+        else:
+            params["ffn"], axes["ffn"] = L.init_mlp(
+                keys[2], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return params, axes
+
+
+def _apply_layer(cfg: ArchConfig, kind: str, params, x, *, positions,
+                 layer_idx, cache=None, pos=None, encoder_out=None,
+                 make_cache=False, max_len=0, causal=True):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache) if cache is not None else (
+        {} if make_cache else None)
+
+    if kind in (ATTN, ATTN_LOCAL):
+        window = cfg.local_window if kind == ATTN_LOCAL else 0
+        kv = cache.get("kv") if cache else None
+        out, nkv = attn_mod.apply_attention(
+            cfg, params["mix"], h, positions=positions, causal=causal,
+            window=window, cache=kv, pos=pos, make_cache=make_cache,
+            max_len=max_len)
+        if new_cache is not None and nkv is not None:
+            new_cache["kv"] = nkv
+    elif kind == RGLRU:
+        st = cache.get("rglru") if cache else None
+        if make_cache and st is None:
+            st = rglru_mod.RGLRUCache(
+                jnp.zeros((x.shape[0], cfg.rglru_width or cfg.d_model),
+                          jnp.float32),
+                jnp.zeros((x.shape[0], cfg.conv_width - 1,
+                           cfg.rglru_width or cfg.d_model), x.dtype))
+        out, nst = rglru_mod.apply_rglru(cfg, params["mix"], h, cache=st)
+        if new_cache is not None and nst is not None:
+            new_cache["rglru"] = nst
+    elif kind == SSM:
+        st = cache.get("ssm") if cache else None
+        if make_cache and st is None:
+            inner, nh, p, n = ssm_mod.dims(cfg)
+            st = ssm_mod.SSMCache(
+                jnp.zeros((x.shape[0], nh, p, n), jnp.float32),
+                jnp.zeros((x.shape[0], cfg.conv_width - 1, inner + 2 * n),
+                          x.dtype))
+        out, nst = ssm_mod.apply_ssm(cfg, params["mix"], h, cache=st)
+        if new_cache is not None and nst is not None:
+            new_cache["ssm"] = nst
+    else:
+        raise ValueError(kind)
+    x = x + out
+    x = constrain(x, ("batch", None, None))
+
+    if "cross" in params and encoder_out is not None:
+        h = L.rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        out, _ = attn_mod.apply_attention(
+            cfg, params["cross"], h, positions=positions,
+            kv_input=encoder_out)
+        x = x + out
+
+    if "ffn" in params:
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if "router" in params["ffn"]:          # structural MoE dispatch
+            out, aux = moe_mod.apply_moe(cfg, params["ffn"], h)
+        else:
+            out = L.apply_mlp(params["ffn"], h, cfg.mlp_act)
+        x = x + out
+        x = constrain(x, ("batch", None, None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.pattern = tuple(cfg.layer_pattern)
+        self.period = len(self.pattern)
+        self.n_periods = cfg.num_layers // self.period if cfg.scan_layers else 0
+        self.remainder = cfg.num_layers - self.n_periods * self.period
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> tuple[dict, dict]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, cfg.num_layers + 3)
+        params: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+        params["embed"], axes["embed"] = L.init_embed(
+            keys[0], cfg.padded_vocab, cfg.d_model, dtype, cfg.tie_embeddings)
+        params["final_norm"], axes["final_norm"] = L.init_rmsnorm(
+            cfg.d_model, dtype)
+
+        cross = cfg.encoder_decoder
+        per_layer, per_axes = [], []
+        for i in range(cfg.num_layers):
+            kind = cfg.pattern_for_layer(i)
+            p, a = _init_layer(keys[1 + i], cfg, kind, dtype, cross=cross,
+                               layer_idx=i)
+            per_layer.append(p)
+            per_axes.append(a)
+
+        # stack full periods: periods[slot] has leading dim n_periods
+        if self.n_periods > 0:
+            slots, slot_axes = [], []
+            for j in range(self.period):
+                group = [per_layer[t * self.period + j]
+                         for t in range(self.n_periods)]
+                slots.append(jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *group))
+                slot_axes.append(jax.tree_util.tree_map(
+                    lambda ax: ("layers",) + tuple(ax), per_axes[j],
+                    is_leaf=lambda v: isinstance(v, tuple)))
+            params["periods"] = slots
+            axes["periods"] = slot_axes
+        if self.remainder:
+            base = self.n_periods * self.period
+            params["tail"] = per_layer[base:]
+            axes["tail"] = per_axes[base:]
+
+        if cfg.encoder_decoder:
+            enc_l, enc_a = [], []
+            ekeys = jax.random.split(keys[-1], cfg.encoder_layers)
+            for i in range(cfg.encoder_layers):
+                p, a = _init_layer(ekeys[i], cfg, ATTN, dtype, cross=False)
+                enc_l.append(p)
+                enc_a.append(a)
+            params["encoder"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *enc_l)
+            axes["encoder"] = jax.tree_util.tree_map(
+                lambda ax: ("layers",) + tuple(ax), enc_a[0],
+                is_leaf=lambda v: isinstance(v, tuple))
+        return params, axes
+
+    def abstract_params(self) -> tuple[dict, dict]:
+        """(ShapeDtypeStruct params, logical axes) with zero allocation."""
+        holder = {}
+
+        def _capture(key):
+            p, a = self.init(key)
+            holder["axes"] = a
+            return p
+
+        params_sds = jax.eval_shape(_capture, jax.random.PRNGKey(0))
+        return params_sds, holder["axes"]
+
+    # -- embedding / positions ------------------------------------------------
+
+    def _positions(self, batch: dict, b: int, s: int, offset=0):
+        cfg = self.cfg
+        if cfg.mrope_sections:
+            base = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+            pos = jnp.stack([base, base, base], axis=-1)        # (1,S,3)
+            pos = jnp.broadcast_to(pos, (b, s, 3))
+            if "patch_embeds" in batch and offset == 0:
+                # grid positions for the fused patch prefix (t=0, h, w)
+                npatch = batch["patch_embeds"].shape[1]
+                side = max(int(npatch ** 0.5), 1)
+                idx = jnp.arange(npatch, dtype=jnp.int32)
+                grid = jnp.stack([jnp.zeros_like(idx), idx // side,
+                                  idx % side], axis=-1)          # (P,3)
+                pos = pos.at[:, :npatch].set(
+                    jnp.broadcast_to(grid[None], (b, npatch, 3)))
+            return pos
+        return jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, :] + offset, (b, s))
+
+    def _embed_inputs(self, params, batch: dict):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            npatch = batch["patch_embeds"].shape[1]
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(x.dtype), x[:, npatch:]], axis=1)
+        return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    # -- encoder (whisper) ----------------------------------------------------
+
+    def encode(self, params, audio_embeds):
+        cfg = self.cfg
+        b, s, _ = audio_embeds.shape
+        x = audio_embeds + L.sinusoidal_positions(
+            s, cfg.d_model).astype(audio_embeds.dtype)[None]
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(x, layer_params):
+            out, _, _ = _apply_layer(
+                cfg, ATTN, layer_params, x, positions=positions,
+                layer_idx=0, causal=False)
+            return out, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return x
+
+    # -- training / scoring forward ------------------------------------------
+
+    def forward(self, params, batch: dict):
+        """Full-sequence forward. Returns (logits f32, aux_loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed_inputs(params, batch)
+        positions = self._positions(batch, b, s)
+        encoder_out = None
+        if cfg.encoder_decoder:
+            encoder_out = self.encode(params, batch["audio_embeds"])
+
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if self.n_periods > 0:
+            def period_body(carry, slot_params):
+                x, aux = carry
+                for j, kind in enumerate(self.pattern):
+                    x, _, a = _apply_layer(
+                        cfg, kind, slot_params[j], x, positions=positions,
+                        layer_idx=j, encoder_out=encoder_out)
+                    aux = aux + a
+                return (x, aux), None
+            body = jax.checkpoint(period_body) if cfg.remat else period_body
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), tuple(params["periods"]))
+        if self.remainder:
+            for t, lp in enumerate(params["tail"]):
+                idx = self.n_periods * self.period + t
+                x, _, a = _apply_layer(
+                    cfg, cfg.pattern_for_layer(idx), lp, x,
+                    positions=positions, layer_idx=idx,
+                    encoder_out=encoder_out)
+                aux_total = aux_total + a
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.logits(params["embed"], x, tie=cfg.tie_embeddings)
+        return logits, aux_total
+
+    def loss(self, params, batch: dict):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: partitions cleanly
+        # over the vocab-sharded logits (a label gather makes SPMD replicate
+        # the full f32 logits/unembed — §Perf nemotron iteration 3).
+        onehot = jax.nn.one_hot(labels, cfg.padded_vocab, dtype=logp.dtype)
+        nll = -jnp.einsum("bsv,bsv->bs", onehot, logp)
+        ce = jnp.mean(nll)
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    # -- serving ---------------------------------------------------------------
+
+    def _layer_moe_idx(self, j, slot_in_period=True):
+        return j
+
+    def init_caches(self, batch: int, max_len: int, *, abstract=False):
+        """Stacked caches mirroring the period structure."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        def one(kind):
+            if kind == ATTN:
+                return {"kv": attn_mod.init_cache(
+                    cfg, batch, max_len, dtype=dtype, abstract=abstract)}
+            if kind == ATTN_LOCAL:
+                return {"kv": attn_mod.init_cache(
+                    cfg, batch, max_len, window=cfg.local_window,
+                    dtype=dtype, abstract=abstract)}
+            if kind == RGLRU:
+                w = cfg.rglru_width or cfg.d_model
+                mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract \
+                    else (lambda s, d: jnp.zeros(s, d))
+                return {"rglru": rglru_mod.RGLRUCache(
+                    mk((batch, w), jnp.float32),
+                    mk((batch, cfg.conv_width - 1, w), dtype))}
+            if kind == SSM:
+                inner, nh, p, n = ssm_mod.dims(cfg)
+                mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract \
+                    else (lambda s, d: jnp.zeros(s, d))
+                return {"ssm": ssm_mod.SSMCache(
+                    mk((batch, nh, p, n), jnp.float32),
+                    mk((batch, cfg.conv_width - 1, inner + 2 * n), dtype))}
+            raise ValueError(kind)
+
+        caches: dict[str, Any] = {}
+        if self.n_periods > 0:
+            slots = []
+            for j, kind in enumerate(self.pattern):
+                c = one(kind)
+                slots.append(jax.tree_util.tree_map(
+                    lambda leaf: (jax.ShapeDtypeStruct(
+                        (self.n_periods,) + leaf.shape, leaf.dtype)
+                        if abstract else
+                        jnp.broadcast_to(leaf, (self.n_periods,) + leaf.shape)
+                        .copy()), c))
+            caches["periods"] = slots
+        if self.remainder:
+            base = self.n_periods * self.period
+            caches["tail"] = [one(self.cfg.pattern_for_layer(base + t))
+                              for t in range(self.remainder)]
+        if cfg.encoder_decoder:
+            shape = (batch, cfg.encoder_seq, cfg.d_model)
+            caches["encoder_out"] = (jax.ShapeDtypeStruct(shape, dtype)
+                                     if abstract else jnp.zeros(shape, dtype))
+        return caches
+
+    def prefill(self, params, batch: dict, max_len: int):
+        """Forward over the prompt, building decode caches.
+
+        Returns (logits (B, S, V), caches). For enc-dec models the encoder
+        output is stored in caches["encoder_out"].
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed_inputs(params, batch)
+        positions = self._positions(batch, b, s)
+        encoder_out = None
+        if cfg.encoder_decoder:
+            encoder_out = self.encode(params, batch["audio_embeds"])
+
+        caches: dict[str, Any] = {}
+        if self.n_periods > 0:
+            def period_body(x, slot_params):
+                new_slots = []
+                for j, kind in enumerate(self.pattern):
+                    x, nc, _ = _apply_layer(
+                        cfg, kind, slot_params[j], x, positions=positions,
+                        layer_idx=j, encoder_out=encoder_out,
+                        make_cache=True, max_len=max_len)
+                    new_slots.append(nc)
+                return x, tuple(new_slots)
+            x, period_caches = jax.lax.scan(
+                period_body, x, tuple(params["periods"]))
+            caches["periods"] = list(period_caches)
+        if self.remainder:
+            caches["tail"] = []
+            base = self.n_periods * self.period
+            for t, lp in enumerate(params["tail"]):
+                idx = base + t
+                x, nc, _ = _apply_layer(
+                    cfg, cfg.pattern_for_layer(idx), lp, x,
+                    positions=positions, layer_idx=idx,
+                    encoder_out=encoder_out, make_cache=True,
+                    max_len=max_len)
+                caches["tail"].append(nc)
+        if encoder_out is not None:
+            caches["encoder_out"] = encoder_out
+
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.logits(params["embed"], x, tie=cfg.tie_embeddings)
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, pos, *,
+                    encoder_out=None):
+        """One token for every sequence. tokens (B, 1), pos scalar int32.
+
+        Returns (logits (B, 1, V), new caches).
+        """
+        cfg = self.cfg
+        b = tokens.shape[0]
+        if encoder_out is None:
+            encoder_out = caches.get("encoder_out")
+        x = L.embed(params["embed"], tokens) * jnp.asarray(
+            cfg.d_model ** 0.5, jnp.dtype(cfg.dtype))
+        positions = self._positions({}, b, 1, offset=pos)
+
+        new_caches: dict[str, Any] = {}
+        if self.n_periods > 0:
+            def period_body(x, scan_in):
+                slot_params, slot_caches = scan_in
+                new_slots = []
+                for j, kind in enumerate(self.pattern):
+                    x, nc, _ = _apply_layer(
+                        cfg, kind, slot_params[j], x, positions=positions,
+                        layer_idx=j, cache=slot_caches[j], pos=pos,
+                        encoder_out=encoder_out)
+                    new_slots.append(nc)
+                return x, tuple(new_slots)
+            x, new_period_caches = jax.lax.scan(
+                period_body, x,
+                (tuple(params["periods"]), tuple(caches["periods"])))
+            new_caches["periods"] = list(new_period_caches)
+        if self.remainder:
+            new_caches["tail"] = []
+            base = self.n_periods * self.period
+            for t, lp in enumerate(params["tail"]):
+                idx = base + t
+                x, nc, _ = _apply_layer(
+                    cfg, cfg.pattern_for_layer(idx), lp, x,
+                    positions=positions, layer_idx=idx,
+                    cache=caches["tail"][t], pos=pos,
+                    encoder_out=encoder_out)
+                new_caches["tail"].append(nc)
+
+        if "encoder_out" in caches:
+            new_caches["encoder_out"] = caches["encoder_out"]
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.logits(params["embed"], x, tie=cfg.tie_embeddings)
+        return logits, new_caches

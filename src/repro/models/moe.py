@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer (GShard-style einsum dispatch, EP over 'model').
+
+Top-k routing with per-row capacity: tokens beyond an expert's capacity are
+dropped (standard GShard/Switch semantics; the residual stream carries
+them). Experts are sharded over the 'model' mesh axis (EP); the dispatch
+einsums lower to all-to-all-like collectives under SPMD.
+
+The einsum dispatch costs O(B*S * E*C * D) — with capacity_factor c it is
+~c * B*S^2-ish per layer for top-1 (same order as attention). The sort-based
+dispatch (cheaper, data-movement-only) is a §Perf hillclimb item; this
+formulation is the portable baseline.
+
+ABFT note (DESIGN.md §4): expert GEMMs route through ft_einsum — the
+checksummed matmul covers the grouped (E, C, D) x (E, D, F) contraction by
+folding E into the row dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.ft.abft_dense import ft_einsum
+
+
+def init_moe(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.num_experts
+    gated = L.mlp_gated(cfg.mlp_act)
+    specs = {
+        "router": ((d, e), ("embed", "experts")),
+        "wi": ((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wo": ((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if gated:
+        specs["wg"] = ((e, d, f), ("experts", "embed", "expert_mlp"))
+    params, axes = L.build(key, specs, dtype)
+    if cfg.moe.shared_expert:
+        sp, sa = L.init_mlp(jax.random.fold_in(key, 7), d, f, cfg.mlp_act, dtype)
+        params["shared"], axes["shared"] = sp, sa
+    return params, axes
+
+
+def _capacity(s: int, k: int, e: int, factor: float) -> int:
+    c = int(s * k / e * factor) + 1
+    return max(min(c, s), 4)
+
+
+def apply_moe(cfg, params, x):
+    """x (B, S, D) -> (B, S, D). Router in f32 for stability."""
+    b, s, d = x.shape
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    c = _capacity(s, k, e, cfg.moe.capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)           # renormalize
+
+    # one-hot expert choice per (token, slot): (B, S, K, E)
+    choice = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    # position of each (token, slot) within its expert queue, row-major over
+    # (S, K): cumulative count per expert. (B, S, K, E)
+    flat = choice.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)
+    within_cap = pos_in_expert < c
+    choice = choice * within_cap
+
+    # dispatch/combine tensors (B, S, E, C) — built in bf16: they are 0/1
+    # (resp. gate-valued) masks, and the f32 versions dominated the 400B
+    # config's temp memory + HBM traffic (§Perf llama4 iteration 2).
+    slot = jax.nn.one_hot(jnp.sum(pos_in_expert * choice, axis=-1), c,
+                          dtype=x.dtype)                       # (B,S,K,C)
+    choice_lp = choice.astype(x.dtype)
+    dispatch = jnp.einsum("bske,bskc->bsec", choice_lp, slot)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", choice_lp, slot,
+                         gate_vals.astype(x.dtype))
+
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    h = ft_einsum("becd,edf->becf", xin, params["wi"])
+    if "wg" in params:
+        g = ft_einsum("becd,edf->becf", xin, params["wg"])
+        h = jax.nn.silu(g) * h if cfg.mlp_act == "silu" else jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.relu(h) ** 2 if cfg.mlp_act == "relu2" else jax.nn.gelu(h)
+    out_e = ft_einsum("becf,efd->becd", h, params["wo"])
+    y = jnp.einsum("bsec,becd->bsd", combine, out_e)
+
+    if cfg.moe.shared_expert:
+        y = y + L.apply_mlp(params["shared"], x, cfg.mlp_act)
+
+    # GShard load-balancing auxiliary loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(choice.sum(axis=2), axis=(0, 1))     # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))                    # (E,)
+    aux = e * jnp.sum(frac_tokens * mean_prob) / k
+    return y, aux

@@ -1,0 +1,100 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = linear in-projection to width W, short causal conv, the Real-Gated
+LRU recurrence, gated by a GeLU branch, linear out-projection:
+
+    r_t = sigmoid(w_a . x_t + b_a)          (recurrence gate, diagonal)
+    i_t = sigmoid(w_i . x_t + b_i)          (input gate, diagonal)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+The recurrence h_t = a_t h_{t-1} + b_t is associative — training/prefill
+use ``jax.lax.associative_scan`` (log-depth, parallel over the sequence);
+decode is a single elementwise update carrying h (the O(1)-state reason
+the hybrid runs long_500k). Gates are diagonal per-channel (the
+block-diagonal Griffin gates with block size 1 — noted in DESIGN.md).
+The recurrence is elementwise -> DMR-protected, not ABFT (paper's split).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.ft.abft_dense import ft_einsum
+
+C_FACTOR = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array          # (B, W) recurrent state
+    conv: jax.Array       # (B, conv_width-1, W)
+
+
+def init_rglru(key, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    specs = {
+        "in_x": ((d, w), ("embed", "mlp")),
+        "in_gate": ((d, w), ("embed", "mlp")),
+        "conv_w": ((cfg.conv_width, w), ("conv", None)),
+        "out": ((w, d), ("mlp", "embed")),
+    }
+    params, axes = L.build(key, specs, dtype)
+    for name in ("lambda_p", "w_a", "b_a", "w_i", "b_i"):
+        params[name] = jnp.zeros((w,), jnp.float32) if name != "lambda_p" \
+            else jnp.full((w,), 0.5, jnp.float32)
+        axes[name] = ("mlp",)
+    return params, axes
+
+
+def _recurrence(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a, b (B, S, W)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(cfg, params, u, *, cache: RGLRUCache = None):
+    """u (B, S, D) -> (B, S, D)."""
+    b, s, d = u.shape
+    w = cfg.rglru_width or d
+    x = ft_einsum("bsd,dw->bsw", u, params["in_x"])
+    gate = jax.nn.gelu(ft_einsum("bsd,dw->bsw", u, params["in_gate"]))
+
+    width = params["conv_w"].shape[0]
+    carry = None if cache is None else cache.conv
+    if carry is None:
+        pad = jnp.zeros((b, width - 1, w), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    full = jnp.concatenate([pad, x], axis=1)
+    x = sum(full[:, i:i + s] * params["conv_w"][i] for i in range(width))
+    new_conv = full[:, -(width - 1):]
+
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["w_a"] * xf + params["b_a"])
+    i = jax.nn.sigmoid(params["w_i"] * xf + params["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lambda_p"]) * r   # (B,S,W)
+    a = jnp.exp(log_a)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * xf)
+
+    if s == 1 and cache is not None:               # decode fast path
+        h = a[:, 0] * cache.h + bterm[:, 0]
+        hs = h[:, None]
+    else:
+        h0 = None if cache is None else cache.h
+        hs = _recurrence(a, bterm, h0)
+        h = hs[:, -1]
+
+    y = (hs.astype(u.dtype) * gate)
+    out = ft_einsum("bsw,wd->bsd", y, params["out"])
+    new_cache = RGLRUCache(h, new_conv) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,153 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060) in JAX.
+
+Chunked SSD: the sequence is split into chunks of ``SSD_CHUNK``; within a
+chunk the dual (attention-like) quadratic form runs on the MXU, between
+chunks a (B, H, P, N) state is carried by ``lax.scan`` — O(S) memory,
+O(S * (L + N)) time per head-dim. This *is* the paper-relevant GEMM
+formulation: the intra-chunk products are dense matmuls, which is where
+DESIGN.md §4 applies ABFT for the ssm family; the inter-chunk recurrence
+is elementwise (DMR territory).
+
+Decode carries the same state with a one-token update: O(1) per token —
+the reason mamba2 runs the long_500k cell.
+
+Layout: inner = expand * d_model, P = head dim (64), H = inner / P heads,
+single B/C group (g = 1), state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.ft.abft_dense import ft_einsum
+
+SSD_CHUNK = 256
+P_HEAD = 64
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, N)
+    conv: jax.Array        # (B, W-1, conv_dim) trailing conv window
+
+
+def dims(cfg):
+    inner = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.ssm_heads or inner // P_HEAD
+    return inner, nheads, inner // nheads, cfg.ssm_state
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    inner, h, p, n = dims(cfg)
+    conv_dim = inner + 2 * n
+    specs = {
+        # z (gate), x, B, C, dt packed in one input projection
+        "in_proj": ((d, 2 * inner + 2 * n + h), ("embed", "mlp")),
+        "conv_w": ((cfg.conv_width, conv_dim), ("conv", None)),
+        "out_proj": ((inner, d), ("mlp", "embed")),
+    }
+    params, axes = L.build(key, specs, dtype)
+    params["A_log"] = jnp.zeros((h,), jnp.float32)
+    axes["A_log"] = (None,)
+    params["D"] = jnp.ones((h,), jnp.float32)
+    axes["D"] = (None,)
+    params["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    axes["dt_bias"] = (None,)
+    np_, na = L.init_rmsnorm(inner, dtype)
+    params["norm"], axes["norm"] = np_, na
+    return params, axes
+
+
+def _causal_conv(u, w, carry=None):
+    """Depthwise causal conv. u (B,S,C), w (W,C). carry (B,W-1,C) or None."""
+    width = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = carry.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(width))
+    new_carry = full[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out), new_carry
+
+
+def _split(cfg, zxbcdt):
+    inner, h, p, n = dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + n, 2 * inner + 2 * n], axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def _ssd_chunk(carry, chunk, *, A, nheads, p, n):
+    """One chunk of the SSD scan. carry: state (B,H,P,N)."""
+    x, B, C, dt = chunk          # x (B,L,H,P); B,C (B,L,N); dt (B,L,H)
+    state = carry
+    dA = dt * A[None, None, :]                     # (B,L,H) negative
+    cs = jnp.cumsum(dA, axis=1)                    # (B,L,H)
+    # intra-chunk: M[t,s] = C_t.B_s * exp(cs_t - cs_s) * dt_s   (s <= t)
+    scores = jnp.einsum("bln,bsn->bls", C, B,
+                        preferred_element_type=jnp.float32)
+    decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,L,S,H)
+    l = x.shape[1]
+    tri = jnp.tril(jnp.ones((l, l), jnp.bool_))
+    m = jnp.where(tri[None, :, :, None], scores[..., None] * decay, 0.0)
+    y_diag = jnp.einsum("blsh,bsh,bshp->blhp", m, dt, x.astype(jnp.float32))
+    # contribution of the incoming state
+    state_decay = jnp.exp(cs)                      # (B,L,H)
+    y_off = jnp.einsum("bln,bhpn,blh->blhp", C, state, state_decay)
+    # chunk-exit state
+    out_decay = jnp.exp(cs[:, -1:, :] - cs)        # (B,L,H)
+    new_state = state * jnp.exp(cs[:, -1])[:, :, None, None] + jnp.einsum(
+        "blh,blh,bln,blhp->bhpn", out_decay, dt, B, x.astype(jnp.float32))
+    return new_state, (y_diag + y_off)
+
+
+def apply_ssm(cfg, params, u, *, cache: SSMCache = None, chunk=SSD_CHUNK):
+    """u (B, S, D) -> (B, S, D). With cache: decode step (S small)."""
+    b, s, d = u.shape
+    inner, h, p, n = dims(cfg)
+    zxbcdt = ft_einsum("bsd,df->bsf", u, params["in_proj"])
+    z, xbc_x, bmat, cmat, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xbc_x, bmat, cmat], axis=-1)
+    conv_out, conv_carry = _causal_conv(
+        conv_in, params["conv_w"],
+        carry=None if cache is None else cache.conv)
+    x, bmat, cmat = jnp.split(conv_out, [inner, inner + n], axis=-1)
+
+    A = -jnp.exp(params["A_log"])                  # (H,) negative decay
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"][None, None])  # (B,S,H)
+    xh = x.reshape(b, s, h, p)
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if cache is None
+              else cache.state)
+
+    if s == 1:                                     # decode fast path
+        dA = jnp.exp(dt_[:, 0] * A[None])          # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_[:, 0], bmat[:, 0],
+                         xh[:, 0].astype(jnp.float32))
+        state = state0 * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], state)[:, None]
+        y = y.reshape(b, 1, h, p)
+    else:
+        pad = (-s) % chunk
+        xp = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bp = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cp = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dtp = jnp.pad(dt_, ((0, 0), (0, pad), (0, 0)))
+        nc = xp.shape[1] // chunk
+        resh = lambda t: t.reshape((b, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+        state, ys = jax.lax.scan(
+            lambda c, ch: _ssd_chunk(c, ch, A=A, nheads=h, p=p, n=n),
+            state0, (resh(xp), resh(bp), resh(cp), resh(dtp)))
+        y = ys.swapaxes(0, 1).reshape(b, nc * chunk, h, p)[:, :s]
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, inner).astype(u.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = ft_einsum("bsf,fd->bsd", y, params["out_proj"])
+    new_cache = SSMCache(state, conv_carry) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,3 @@
+from repro.roofline import hw, hlo, analysis
+
+__all__ = ["hw", "hlo", "analysis"]

@@ -1,0 +1,117 @@
+"""Three-term roofline from the dry-run artifacts (per arch x shape x mesh).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links x link_bw)
+
+(cost_analysis() reports per-device, post-partitioning numbers on the SPMD
+program — verified in tests/test_roofline.py.) The bottleneck is the max
+term; "roofline fraction" = bottleneck / total-if-perfectly-overlapped =
+max / sum, i.e. how close the step is to its own bound if compute, HBM and
+ICI fully overlap.
+
+MODEL_FLOPS = 6 * N * D (dense train) / 6 * N_active * D (MoE), or
+2 * N * D for inference; the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Optional
+
+from repro.roofline import hw
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_fraction: float     # max / sum of the three terms
+
+    def table_row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.compute_s:.3e} | {self.memory_s:.3e} "
+                f"| {self.collective_s:.3e} | {self.bottleneck} "
+                f"| {self.useful_ratio:.2f} | {self.roofline_fraction:.2f} |")
+
+
+def tokens_of(shape_name: str, record: dict) -> int:
+    from repro.configs import SHAPES
+    s = SHAPES[shape_name]
+    if s.kind == "train" or s.kind == "prefill":
+        return s.seq_len * s.global_batch
+    return s.global_batch           # decode: one token per sequence
+
+
+def model_flops(record: dict) -> float:
+    """6ND train / 2ND inference, with N = active params (from the live
+    config, so param-count fixes don't require re-running the sweep)."""
+    from repro.configs import SHAPES, get_config
+    s = SHAPES[record["shape"]]
+    try:
+        n = get_config(record["arch"]).active_param_count()
+    except Exception:
+        n = record["active_params"]
+    toks = tokens_of(record["shape"], record)
+    mult = 6.0 if s.kind == "train" else 2.0
+    return mult * n * toks
+
+
+def analyze(record: dict, *, dtype_peak: float = hw.PEAK_FLOPS_BF16,
+            ici_links: int = hw.ICI_LINKS) -> Optional[Roofline]:
+    if record.get("status") != "ok":
+        return None
+    flops_dev = record["cost"]["flops"] or 0.0
+    bytes_dev = record["cost"]["bytes_accessed"] or 0.0
+    coll_dev = record["collective_bytes"] or 0.0
+    compute_s = flops_dev / dtype_peak
+    memory_s = bytes_dev / hw.HBM_BW
+    coll_s = coll_dev / (ici_links * hw.ICI_LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    total = sum(terms.values()) or 1.0
+    mf = model_flops(record)
+    chips = record["chips"]
+    useful = mf / max(flops_dev * chips, 1.0)
+    return Roofline(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck, model_flops=mf,
+        hlo_flops=flops_dev * chips, useful_ratio=useful,
+        roofline_fraction=max(terms.values()) / total)
+
+
+def load_records(results_dir: str, mesh_tag: str = "pod16x16") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(results_dir,
+                                              f"*__{mesh_tag}.json"))):
+        with open(path) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def markdown_table(records: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        r = analyze(rec)
+        if r is None:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| — | — | — | {rec['status']} | — | — |")
+        else:
+            lines.append(r.table_row())
+    return "\n".join(lines)

@@ -1,0 +1,228 @@
+"""Optimized-HLO analysis: loop-aware flops / bytes / collective census.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scan body
+executed 24 times contributes 1/24 of its true cost (verified in
+tests/test_roofline.py). This module re-derives the three roofline inputs
+from ``compiled.as_text()`` with while-loop trip multiplication:
+
+  * flops        — 2 * prod(dot output dims) * prod(contracted dims),
+                   summed over `dot` ops, times the product of enclosing
+                   while trip counts (``backend_config known_trip_count``);
+                   elementwise flops are not counted (MXU roofline term).
+  * bytes        — per top-level op: output + operand bytes (fusion
+                   boundaries are materialization boundaries in optimized
+                   HLO), same loop multiplication. Pure-aliasing ops
+                   (bitcast, get-tuple-element, parameter, tuple, constant)
+                   count zero.
+  * collectives  — {kind: {count, bytes}} with loop multiplication;
+                   bytes = per-device output payload of each op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_ALIAS_OPS = ("bitcast", "get-tuple-element", "parameter", "tuple",
+              "constant", "after-all", "copy-done", "copy-start")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"\(((?:%?[\w.\-]+(?:,\s*)?)*)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "line")
+
+    def __init__(self, name, shape, op, line):
+        self.name = name
+        self.shape = shape
+        self.op = op
+        self.line = line
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.defs: dict[str, Instr] = {}
+        self.entry: str | None = None
+        current = None
+        for raw in text.splitlines():
+            stripped = raw.strip()
+            # computation header: '%name (params...) -> ret {' / 'ENTRY %...'
+            if stripped.endswith("{") and "->" in stripped and \
+                    (stripped.startswith("%") or stripped.startswith("ENTRY")):
+                tok = stripped.split()[1 if stripped.startswith("ENTRY") else 0]
+                current = tok.lstrip("%")
+                self.computations[current] = []
+                if stripped.startswith("ENTRY"):
+                    self.entry = current
+                continue
+            m = _DEF_RE.match(raw)
+            if m and current is not None:
+                instr = Instr(m.group(1), m.group(2), m.group(3), raw)
+                self.computations[current].append(instr)
+                self.defs[instr.name] = instr
+
+    # -- per-instruction costs ------------------------------------------------
+
+    def _dot_flops(self, instr: Instr) -> float:
+        out_elems = shape_elems(instr.shape)
+        m = _LHS_CONTRACT_RE.search(instr.line)
+        contract = 1
+        if m:
+            idxs = [int(i) for i in m.group(1).split(",") if i]
+            lhs_name = self._operands(instr.line)
+            if lhs_name:
+                lhs = self.defs.get(lhs_name[0])
+                if lhs is not None:
+                    dims = shape_dims(lhs.shape)
+                    for i in idxs:
+                        if i < len(dims):
+                            contract *= dims[i]
+        return 2.0 * out_elems * contract
+
+    def _operands(self, line: str) -> list[str]:
+        # operands of the op: first (...) after the op name
+        m = _DEF_RE.match(line)
+        if not m:
+            return []
+        rest = line[m.end():]
+        depth = 1
+        args = ""
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        return [a.strip().lstrip("%") for a in args.split(",")
+                if a.strip() and not a.strip()[0].isdigit()]
+
+    def _instr_bytes(self, instr: Instr) -> int:
+        """Materialization-traffic model: every non-alias op's output is
+        written once and read ~once by its consumers -> 2x output bytes.
+        (Counting operands too would double-count every intermediate —
+        validated against analytic traffic in tests/test_roofline.py.)"""
+        if instr.op in _ALIAS_OPS:
+            return 0
+        return 2 * shape_bytes(instr.shape)
+
+    # -- recursive, loop-aware traversal ---------------------------------------
+
+    def analyze(self) -> dict:
+        memo: dict[str, tuple] = {}
+
+        def visit(comp_name: str):
+            if comp_name in memo:
+                return memo[comp_name]
+            flops = 0.0
+            bytes_ = 0.0
+            coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+            for instr in self.computations.get(comp_name, []):
+                mult = 1.0
+                if instr.op == "while":
+                    t = _TRIP_RE.search(instr.line)
+                    mult = float(t.group(1)) if t else 1.0
+                    body = _CALL_RE.search(instr.line)
+                    if body:
+                        f, b, c = visit(body.group(1))
+                        flops += mult * f
+                        bytes_ += mult * b
+                        for k, v in c.items():
+                            coll[k]["count"] += mult * v["count"]
+                            coll[k]["bytes"] += mult * v["bytes"]
+                    cond = _COND_RE.search(instr.line)
+                    if cond:
+                        f, b, c = visit(cond.group(1))
+                        flops += mult * f
+                        bytes_ += mult * b
+                    continue
+                if instr.op in ("fusion", "call", "conditional", "map"):
+                    callee = _CALL_RE.search(instr.line)
+                    if callee:
+                        f, b, c = visit(callee.group(1))
+                        flops += f
+                        for k, v in c.items():
+                            coll[k]["count"] += v["count"]
+                            coll[k]["bytes"] += v["bytes"]
+                    bytes_ += self._instr_bytes(instr)
+                    continue
+                base = instr.op.replace("-start", "")
+                if base in COLL_KINDS and not instr.op.endswith("-done"):
+                    coll[base]["count"] += 1
+                    coll[base]["bytes"] += shape_bytes(instr.shape)
+                    bytes_ += self._instr_bytes(instr)
+                    continue
+                if instr.op in ("dot", "convolution"):
+                    flops += self._dot_flops(instr)
+                bytes_ += self._instr_bytes(instr)
+            memo[comp_name] = (flops, bytes_, dict(coll))
+            return memo[comp_name]
+
+        # fusions called from the entry are visited through their call sites;
+        # start at entry.
+        if self.entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        f, b, c = visit(self.entry)
+        return {"flops": f, "bytes": b,
+                "collectives": {k: dict(v) for k, v in c.items()}}
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloModule(text).analyze()
+
+
+def count_collectives(hlo_text: str) -> dict:
+    """Loop-aware collective census {kind: {count, bytes}}."""
+    return analyze_hlo(hlo_text)["collectives"]
+
+
+def collective_bytes(census: dict) -> float:
+    return sum(v["bytes"] for v in census.values())

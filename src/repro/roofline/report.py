@@ -1,0 +1,71 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run result cache.
+
+    PYTHONPATH=src python -m repro.roofline.report [results/dryrun]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from repro.roofline.analysis import analyze, load_records
+
+
+def gib(b):
+    return f"{(b or 0) / 2**30:.2f}"
+
+
+def dryrun_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | status | args/dev GiB | temp/dev GiB "
+        "| flops/dev | HBM bytes/dev | coll bytes/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| {r['status']}: {reason} | | | | | | |")
+            continue
+        m, c = r["memory"], r["cost"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {gib(m['argument_bytes'])} | {gib(m['temp_bytes'])} "
+            f"| {c['flops']:.3g} | {c['bytes_accessed']:.3g} "
+            f"| {r['collective_bytes']:.3g} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s "
+        "| bottleneck | useful (6ND/HLO) | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        r = analyze(rec)
+        if r is None:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                         f"| — | — | — | {rec['status']} | — | — |")
+            continue
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3g} "
+            f"| {r.memory_s:.3g} | {r.collective_s:.3g} | {r.bottleneck} "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+    results = os.path.abspath(results)
+    for tag in ("pod16x16", "pod2x16x16"):
+        records = load_records(results, tag)
+        print(f"\n### Dry-run — mesh {tag}\n")
+        print(dryrun_table(records))
+        print(f"\n### Roofline — mesh {tag}\n")
+        print(roofline_table(records))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.train.optimizer import TrainConfig, init_opt_state, adamw_update, lr_at
+from repro.train.steps import build_train_step, build_serve_steps
+
+__all__ = ["TrainConfig", "init_opt_state", "adamw_update", "lr_at",
+           "build_train_step", "build_serve_steps"]

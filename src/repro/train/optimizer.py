@@ -1,0 +1,119 @@
+"""AdamW with WSD / cosine schedules, sharded optimizer state.
+
+WSD (warmup-stable-decay) is MiniCPM's schedule (arXiv:2404.06395): linear
+warmup -> constant plateau -> short sharp decay; selected per arch via
+configs.train_schedule. Optimizer state dtype is configurable —
+``opt_state_dtype='bfloat16'`` halves the ZeRO-3 footprint for the 400B
+config (DESIGN.md §5 memory budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"        # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1
+    min_lr_frac: float = 0.1
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    opt_state_dtype: str = "float32"
+    compress_cross_pod: bool = False   # int8 gradient compression knob
+    grad_accum: int = 1                # microbatches per step (activation cap)
+    accum_dtype: str = "float32"       # grad-accumulation buffer dtype;
+                                       # bf16 halves the buffer + grad
+                                       # reduce traffic (400B configs)
+
+
+def lr_at(cfg: TrainConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    peak = cfg.learning_rate
+    if cfg.schedule == "constant":
+        return peak * warm
+    if cfg.schedule == "wsd":
+        decay_steps = max(int(cfg.total_steps * cfg.wsd_decay_frac), 1)
+        decay_start = cfg.total_steps - decay_steps
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        stable = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+        return peak * warm * stable
+    # cosine
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return peak * warm * cos
+
+
+def init_opt_state(params, cfg: TrainConfig):
+    dt = jnp.dtype(cfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(params_sds, cfg: TrainConfig):
+    dt = jnp.dtype(cfg.opt_state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(sds, params_sds),
+        "v": jax.tree_util.tree_map(sds, params_sds),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: TrainConfig):
+    """One AdamW step. Returns (params, opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    dt = jnp.dtype(cfg.opt_state_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "lr": lr, "grad_norm": gnorm}

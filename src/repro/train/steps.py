@@ -1,0 +1,237 @@
+"""Step builders: mesh-aware train_step and serve (prefill/decode) steps.
+
+These produce the exact jit'd callables the launchers AND the dry-run use —
+one code path from the CPU smoke tests to the 512-chip AOT compile.
+
+Sharding: parameters/optimizer state get name-based specs
+(dist/sharding.py); batch inputs shard over the data axes; decode caches
+get rank/shape-based specs (kv-heads over 'model' when divisible, else
+head_dim — GQA caches with few KV heads still shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.models.attention import KVCache
+from repro.models.model import LM
+from repro.train import optimizer as opt_mod
+from repro.ft import abft_dense
+
+
+def _batch_sharding(mesh: Mesh, spec_dict: dict) -> dict:
+    daxes = shd.data_axes(mesh)
+    row = daxes if len(daxes) > 1 else daxes[0]
+
+    def attach(sds):
+        if sds.ndim == 0:
+            sh = NamedSharding(mesh, P())
+        elif sds.shape[0] == 1:     # unshardable batch of 1 (long_500k)
+            sh = NamedSharding(mesh, P(*([None] * sds.ndim)))
+        else:
+            sh = NamedSharding(mesh, P(row, *([None] * (sds.ndim - 1))))
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return {k: attach(v) for k, v in spec_dict.items()}
+
+
+def _cache_shardings(cfg: ArchConfig, mesh: Mesh, caches):
+    """Rank/shape/name-based cache sharding (see module docstring).
+
+    Leaves (optionally stacked with a leading 'layers' dim from the period
+    scan):
+      kv cache k/v  (B, Len, KV, hd) -> batch over data; KV over 'model'
+                    when divisible, else hd (GQA with few KV heads)
+      kv positions  (Len,)           -> replicated
+      ssm state     (B, H, P, N)     -> batch over data; H over 'model'
+      conv carry    (B, W-1, C)      -> batch; C over 'model'
+      rglru state   (B, W)           -> batch; W over 'model'
+      encoder_out   (B, S, D)        -> batch only
+    """
+    model_n = mesh.shape.get("model", 1)
+    daxes = shd.data_axes(mesh)
+    row = daxes if len(daxes) > 1 else daxes[0]
+    dp = 1
+    for a in (row if isinstance(row, tuple) else (row,)):
+        dp *= mesh.shape[a]
+
+    def attach(path, leaf):
+        shape = leaf.shape
+        names = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(
+            p, "name", "")))) for p in path)
+        spec = [None] * len(shape)
+        stacked = "periods" in names
+        off = 1 if stacked else 0
+        rank = len(shape) - off
+        is_pos = leaf.dtype == jnp.int32 and rank == 1
+        if not is_pos and rank >= 2:
+            if shape[off] % dp == 0 and shape[off] >= dp:
+                spec[off] = row                      # batch dim
+            if "ssm/state" in names or ("ssm" in names and rank == 4
+                                        and "conv" not in names):
+                if shape[off + 1] % model_n == 0:
+                    spec[off + 1] = "model"          # SSD heads
+            elif rank == 4:                           # kv cache (B,L,KV,hd)
+                # Sequence-sharded cache: the decode contraction over L
+                # reduce-scatters tiny (B,H,hd) partials instead of
+                # all-reducing f32 score tensors (hd-sharded caches) or
+                # replicating 500k-token caches (unshardable KV heads).
+                if shape[off + 1] % model_n == 0:
+                    spec[off + 1] = "model"
+                elif shape[off + 2] % model_n == 0:
+                    spec[off + 2] = "model"
+            elif rank in (2, 3) and "encoder_out" not in names:
+                if shape[-1] % model_n == 0:
+                    spec[-1] = "model"               # conv/rglru channels
+        sh = NamedSharding(mesh, P(*spec))
+        return jax.ShapeDtypeStruct(shape, leaf.dtype, sharding=sh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out = [attach(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything a launcher (or the dry-run) needs for one cell."""
+    lm: LM
+    step_fn: Any                  # jit'd callable
+    arg_specs: tuple              # ShapeDtypeStructs with shardings
+    kind: str
+
+
+def abstract_train_state(cfg: ArchConfig, mesh: Mesh,
+                         tcfg: opt_mod.TrainConfig):
+    lm = LM(cfg)
+    params_sds, axes = lm.abstract_params()
+    params_sh = shd.shard_params(mesh, params_sds, axes)
+    opt_sds = opt_mod.abstract_opt_state(params_sds, tcfg)
+    opt_sh = {
+        "m": shd.shard_params(mesh, opt_sds["m"], axes),
+        "v": shd.shard_params(mesh, opt_sds["v"], axes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh, P())),
+    }
+    return lm, params_sh, opt_sh, axes
+
+
+def default_grad_accum(shape: ShapeConfig) -> int:
+    """Bound per-microbatch activations: the full 256 x 4k global batch
+    stores ~num_layers full-sequence residuals under remat-scan; 4-way
+    accumulation divides that by 4 at <1% step overhead (one extra
+    grad buffer, amortized weight all-gathers)."""
+    if shape.global_batch >= 64:
+        return 4
+    return 1
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                     tcfg: Optional[opt_mod.TrainConfig] = None,
+                     *, donate: bool = True) -> StepBundle:
+    from repro.configs.base import input_specs
+    tcfg = tcfg or opt_mod.TrainConfig(
+        opt_state_dtype=cfg.opt_state_dtype,
+        grad_accum=cfg.grad_accum_override or default_grad_accum(shape),
+        # bf16 moments imply the config accepts reduced-precision optimizer
+        # paths; extend it to the accumulation buffer (halves temp + grad
+        # reduce bytes on the 400B config — §Perf llama4 iteration 3).
+        accum_dtype=cfg.opt_state_dtype)
+    lm, params_sh, opt_sh, axes = abstract_train_state(cfg, mesh, tcfg)
+    batch_sh = _batch_sharding(mesh, input_specs(cfg, shape))
+    accum = max(tcfg.grad_accum, 1)
+
+    def loss_fn(p, b):
+        return lm.loss(p, b)
+
+    def train_step(params, opt_state, batch):
+        abft_dense.configure(cfg.abft)
+        shd.set_active_mesh(mesh)
+        try:
+            if accum > 1:
+                micro = jax.tree_util.tree_map(
+                    lambda x: x.reshape(
+                        (accum, x.shape[0] // accum) + x.shape[1:]), batch)
+
+                def mb_body(carry, mbatch):
+                    gsum, lsum = carry
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mbatch)
+                    gsum = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(a.dtype), gsum, grads)
+                    return (gsum, lsum + loss), metrics
+
+                # Accumulator MUST carry the param sharding: an unsharded
+                # zeros tree makes SPMD all-reduce full f32 expert grads
+                # (6.5 TB/device on the 400B config) instead of
+                # reduce-scattering into the ZeRO-3 layout.
+                acc_dt = jnp.dtype(tcfg.accum_dtype)
+                gzero = jax.tree_util.tree_map(
+                    lambda p, sds: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, acc_dt), sds.sharding),
+                    params, params_sh)
+                (grads, loss), metrics = jax.lax.scan(
+                    mb_body, (gzero, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+                loss = loss / accum
+                metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            new_params, new_opt, ometrics = opt_mod.adamw_update(
+                params, grads, opt_state, tcfg)
+            metrics = dict(metrics, loss=loss, **ometrics)
+            return new_params, new_opt, metrics
+        finally:
+            shd.set_active_mesh(None)
+
+    fn = jax.jit(train_step,
+                 donate_argnums=(0, 1) if donate else ())
+    return StepBundle(lm, fn, (params_sh, opt_sh, batch_sh), "train")
+
+
+def build_serve_steps(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig) -> StepBundle:
+    """Prefill bundle for 'prefill' cells; decode bundle for 'decode'."""
+    from repro.configs.base import input_specs
+    lm = LM(cfg)
+    params_sds, axes = lm.abstract_params()
+    params_sh = shd.shard_params(mesh, params_sds, axes)
+    specs = _batch_sharding(mesh, input_specs(cfg, shape))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            abft_dense.configure(cfg.abft)
+            shd.set_active_mesh(mesh)
+            try:
+                logits, caches = lm.prefill(params, batch,
+                                            max_len=shape.seq_len)
+                # serving returns greedy next token + caches
+                return jnp.argmax(logits[:, -1], axis=-1), caches
+            finally:
+                shd.set_active_mesh(None)
+        fn = jax.jit(prefill_step)
+        return StepBundle(lm, fn, (params_sh, specs), "prefill")
+
+    # decode
+    caches_sds = lm.init_caches(shape.global_batch, shape.seq_len,
+                                abstract=True)
+    caches_sh = _cache_shardings(cfg, mesh, caches_sds)
+
+    def serve_step(params, caches, batch):
+        abft_dense.configure(cfg.abft)
+        shd.set_active_mesh(mesh)
+        try:
+            logits, new_caches = lm.decode_step(
+                params, caches, batch["tokens"], batch["pos"])
+            return jnp.argmax(logits[:, -1], axis=-1), new_caches
+        finally:
+            shd.set_active_mesh(None)
+
+    fn = jax.jit(serve_step, donate_argnums=(1,))
+    return StepBundle(lm, fn, (params_sh, caches_sh, specs), "decode")

@@ -1,0 +1,7 @@
+import os
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# subprocess; see test_dryrun.py). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402  (imported so the platform pin takes effect early)

@@ -1,0 +1,74 @@
+"""Dry-run launcher tests: the production-mesh AOT path compiles for a
+representative cell subset in-process-isolated subprocesses (512 fake
+devices), exactly as deliverable (e) requires. The FULL 40-cell x 2-mesh
+sweep runs via `python -m repro.launch.dryrun --all --both-meshes`
+(results/dryrun_sweep.log); here we pin the machinery + one cell per
+step-kind so CI stays fast."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("JAX_PLATFORMS", None)
+    env.pop("XLA_FLAGS", None)   # dryrun.py sets its own
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("internlm2-1.8b", "train_4k"),     # train step
+    ("internlm2-1.8b", "decode_32k"),   # decode step + kv cache shardings
+    ("mamba2-1.3b", "long_500k"),       # ssm state decode
+])
+def test_cell_compiles_single_pod(arch, shape):
+    out = run_dryrun(["--arch", arch, "--shape", shape])
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert " OK " in out.stdout
+
+
+def test_cell_compiles_multi_pod():
+    out = run_dryrun(["--arch", "internlm2-1.8b", "--shape", "prefill_32k",
+                      "--multi-pod"])
+    assert out.returncode == 0, out.stdout + out.stderr[-2000:]
+    assert "2x16x16" in out.stdout and " OK " in out.stdout
+
+
+def test_long_500k_skips_full_attention_archs():
+    out = run_dryrun(["--arch", "nemotron-4-15b", "--shape", "long_500k"])
+    assert out.returncode == 0
+    assert "SKIP" in out.stdout
+
+
+def test_records_have_roofline_inputs():
+    path = os.path.join(REPO, "results", "dryrun",
+                        "internlm2-1.8b__train_4k__pod16x16.json")
+    if not os.path.exists(path):
+        pytest.skip("cell not yet run")
+    with open(path) as fh:
+        rec = json.load(fh)
+    assert rec["status"] == "ok"
+    assert rec["cost"]["flops"] > 0
+    assert rec["memory"]["temp_bytes"] > 0
+    assert rec["collective_bytes"] > 0
+    assert rec["collectives"]           # census present
+
+
+def test_mesh_factory_does_not_touch_devices_on_import():
+    # make_production_mesh is a function; importing launch.mesh must not
+    # initialize jax devices (the dry-run relies on this ordering).
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.launch.mesh, jax\n"
+         "assert not jax._src.xla_bridge._backends, 'devices initialized'"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert out.returncode == 0, out.stderr[-1500:]

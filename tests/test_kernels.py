@@ -1,0 +1,142 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py oracles,
+interpret=True (kernel body executes in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autotune import parameter_space, feasible
+from repro.kernels import ops, ref
+from repro.kernels.distance_argmin import distance_argmin
+from repro.kernels.distance_argmin_ft import (distance_argmin_ft,
+                                              make_injection, no_injection)
+from repro.kernels.matmul_abft import matmul_abft
+from repro.kernels.ops import KernelParams
+
+
+def _data(m, k, f, seed=0, dtype=jnp.float32):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, f), dtype)
+    c = jax.random.normal(kc, (k, f), dtype)
+    return x, c
+
+
+def _assert_assign_matches(am, md, x, c, atol=1e-3):
+    """Robust check: chosen centroid's distance equals the row minimum
+    (immune to fp ties), plus exact-index match rate ~1 for random data."""
+    d_ref = ref.distance_matrix(x, c)
+    chosen = jnp.take_along_axis(d_ref, am[:, None].astype(jnp.int32),
+                                 axis=1)[:, 0]
+    best = jnp.min(d_ref, axis=1)
+    np.testing.assert_allclose(chosen, best, rtol=1e-4, atol=atol)
+
+
+class TestFusedDistanceArgmin:
+    @pytest.mark.parametrize("m,k,f", [
+        (256, 128, 512),          # exactly one tile
+        (512, 256, 1024),         # multi-tile all dims
+        (1024, 128, 512),
+        (300, 77, 130),           # ragged: exercises padding
+        (64, 8, 32),              # tiny: block clamping
+    ])
+    def test_matches_oracle(self, m, k, f):
+        x, c = _data(m, k, f)
+        am, md = ops.fused_assign(x, c, interpret=True)
+        rmd, ram = ref.distance_argmin(x, c)
+        assert am.shape == (m,) and md.shape == (m,)
+        _assert_assign_matches(am, md, x, c)
+        match = float(jnp.mean((am == ram).astype(jnp.float32)))
+        assert match > 0.999, f"argmin mismatch rate {1-match:.4f}"
+
+    @pytest.mark.parametrize("params", [
+        KernelParams(64, 128, 128),
+        KernelParams(128, 256, 256),
+        KernelParams(512, 128, 512),
+    ])
+    def test_parameter_sweep(self, params):
+        """The code-generation analogue: every feasible parameter set is a
+        correct kernel (paper's compile-and-run filter)."""
+        x, c = _data(512, 256, 512, seed=3)
+        am, md = ops.fused_assign(x, c, params, interpret=True)
+        _assert_assign_matches(am, md, x, c)
+
+    def test_bf16_inputs(self):
+        x, c = _data(256, 128, 256, seed=4)
+        am, _ = ops.fused_assign(x.astype(jnp.bfloat16),
+                                 c.astype(jnp.bfloat16), interpret=True)
+        rmd, ram = ref.distance_argmin(x, c)
+        # bf16 rounding can flip near-ties; demand 99% agreement
+        assert float(jnp.mean((am == ram).astype(jnp.float32))) > 0.99
+
+
+class TestFusedDistanceArgminFT:
+    def test_clean_no_detection(self):
+        x, c = _data(512, 256, 1024, seed=5)
+        am, md, det = ops.fused_assign_ft(x, c, interpret=True)
+        assert int(det) == 0
+        _assert_assign_matches(am, md, x, c)
+
+    # injections address tile coordinates -> pin the tile parameters
+    PARAMS = KernelParams(block_m=256, block_k=128, block_f=512)
+
+    @pytest.mark.parametrize("tile", [(0, 0, 0), (1, 1, 0), (0, 1, 1)])
+    @pytest.mark.parametrize("delta", [1e4, -1e4])
+    def test_injected_error_corrected(self, tile, delta):
+        x, c = _data(512, 256, 1024, seed=6)
+        inj = make_injection(tile[0], tile[1], tile[2], 13, 57, delta)
+        am, md, det = ops.fused_assign_ft(x, c, self.PARAMS, inj=inj,
+                                          interpret=True)
+        assert int(det) == 1
+        _assert_assign_matches(am, md, x, c)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1), st.integers(0, 1), st.integers(0, 255),
+           st.integers(0, 127), st.floats(1e2, 1e6))
+    def test_property_any_tile_position(self, mt, ct, row, col, delta):
+        x, c = _data(512, 256, 512, seed=7)
+        inj = make_injection(mt, ct, 0, row, col, delta)
+        am, md, det = ops.fused_assign_ft(x, c, self.PARAMS, inj=inj,
+                                          interpret=True)
+        assert int(det) == 1
+        _assert_assign_matches(am, md, x, c)
+
+
+class TestMatmulABFT:
+    @pytest.mark.parametrize("m,k,n", [(256, 512, 256), (512, 512, 512)])
+    def test_clean(self, m, k, n):
+        x = jax.random.normal(jax.random.PRNGKey(8), (m, k))
+        y = jax.random.normal(jax.random.PRNGKey(9), (k, n))
+        d, det = ops.abft_matmul(x, y, interpret=True)
+        assert int(det) == 0
+        np.testing.assert_allclose(d, ref.matmul(x, y), rtol=2e-4, atol=2e-3)
+
+    def test_injected_corrected(self):
+        x = jax.random.normal(jax.random.PRNGKey(10), (256, 512))
+        y = jax.random.normal(jax.random.PRNGKey(11), (512, 256))
+        inj = make_injection(0, 0, 0, 7, 31, 5e4)
+        d, det = ops.abft_matmul(x, y, inj=inj, interpret=True)
+        assert int(det) == 1
+        np.testing.assert_allclose(d, ref.matmul(x, y), rtol=2e-4, atol=2e-2)
+
+    def test_ragged_shapes(self):
+        x = jax.random.normal(jax.random.PRNGKey(12), (100, 300))
+        y = jax.random.normal(jax.random.PRNGKey(13), (300, 50))
+        d, det = ops.abft_matmul(x, y, interpret=True)
+        np.testing.assert_allclose(d, ref.matmul(x, y), rtol=2e-4, atol=2e-3)
+
+
+class TestAutotuneSpace:
+    def test_paper_pruning_rules(self):
+        space = [p for p in parameter_space() if feasible(p)]
+        assert len(space) >= 20   # paper: ~150 kernels; pruned set is rich
+        for p in space:
+            assert p.block_m % 8 == 0
+            assert p.block_k % 128 == 0
+            assert p.block_f % 128 == 0
+            assert p.vmem_bytes() <= 96 * 2**20
+
+    def test_model_selection_prefers_balanced_tiles_for_big_problems(self):
+        from repro.core.autotune import select_params
+        p = select_params(131072, 128, 128, mode="model")
+        assert p.block_k <= 256   # K=128 padded: huge block_k wastes MXU

@@ -1,0 +1,87 @@
+"""Launcher + optimizer + autotune-table coverage."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_module(mod, args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-m", mod] + args,
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stdout[-1500:] + out.stderr[-2500:]
+    return out.stdout
+
+
+class TestTrainLauncher:
+    def test_train_and_restore(self, tmp_path):
+        common = ["--arch", "internlm2-1.8b", "--smoke", "--lr", "1e-3",
+                  "--ckpt-dir", str(tmp_path), "--ckpt-every", "5"]
+        out = _run_module("repro.launch.train", common + ["--steps", "10"])
+        assert "done; snapshots:" in out
+        # crash/restore: continue to 15 from the step-10 snapshot
+        out2 = _run_module("repro.launch.train",
+                           common + ["--steps", "15", "--restore"])
+        assert "restored checkpoint at step 10" in out2
+
+    def test_serve_launcher(self):
+        out = _run_module("repro.launch.serve",
+                          ["--arch", "whisper-medium", "--requests", "2",
+                           "--batch", "2", "--gen", "4", "--prompt-len", "8"])
+        assert "served 2/2" in out
+
+
+class TestSchedules:
+    def test_wsd_shape(self):
+        from repro.train.optimizer import TrainConfig, lr_at
+        cfg = TrainConfig(learning_rate=1.0, warmup_steps=10,
+                          total_steps=100, schedule="wsd",
+                          wsd_decay_frac=0.2, min_lr_frac=0.1)
+        assert float(lr_at(cfg, 0)) == 0.0
+        assert abs(float(lr_at(cfg, 10)) - 1.0) < 1e-6       # warm
+        assert abs(float(lr_at(cfg, 50)) - 1.0) < 1e-6       # stable
+        assert float(lr_at(cfg, 90)) < 1.0                   # decaying
+        assert abs(float(lr_at(cfg, 100)) - 0.1) < 1e-6      # floor
+
+    def test_cosine_monotone_after_warmup(self):
+        from repro.train.optimizer import TrainConfig, lr_at
+        cfg = TrainConfig(learning_rate=1.0, warmup_steps=5,
+                          total_steps=50, schedule="cosine")
+        vals = [float(lr_at(cfg, s)) for s in range(5, 51)]
+        assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+    def test_adamw_descends_quadratic(self):
+        import jax
+        from repro.train.optimizer import (TrainConfig, adamw_update,
+                                           init_opt_state)
+        cfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=50,
+                          weight_decay=0.0, schedule="constant")
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        opt = init_opt_state(params, cfg)
+        for _ in range(50):
+            grads = {"w": 2 * params["w"]}
+            params, opt, m = adamw_update(params, grads, opt, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+class TestAutotuneTable:
+    def test_build_and_lookup_roundtrip(self, tmp_path, monkeypatch):
+        import repro.core.autotune as at
+        path = str(tmp_path / "table.json")
+        monkeypatch.setenv(at._TABLE_ENV, path)
+        monkeypatch.setattr(at, "_cached_table", None)
+        table = at.build_table([(16384, 64, 64), (131072, 128, 128)],
+                               mode="model", path=path)
+        assert len(table) == 2
+        p = at.lookup_params(16384, 64, 64)
+        assert [p.block_m, p.block_k, p.block_f] == table["14-6-6"]
+        with open(path) as fh:
+            assert json.load(fh) == table

@@ -1,0 +1,123 @@
+"""Roofline tooling tests: the HLO analyzer's loop-aware accounting is
+validated against exact analytic flop counts, and the documented
+cost_analysis limitation (loop bodies counted once) is pinned down."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+SCAN_PROBE = """
+import jax, jax.numpy as jnp
+from repro.roofline.hlo import analyze_hlo
+
+def scanned(w, x):
+    def body(x, wi):
+        return jnp.tanh(x @ wi), None
+    x, _ = jax.lax.scan(body, x, w)
+    return x.sum()
+
+w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+c = jax.jit(scanned).lower(w, x).compile()
+a = analyze_hlo(c.as_text())
+xla = c.cost_analysis()
+print("ANALYZED", a["flops"])
+print("XLA_ONCE", xla["flops"])
+print("EXACT", 2 * 8 * 128 * 256 * 256)
+"""
+
+
+class TestHloAnalyzer:
+    def test_loop_aware_flops_exact(self):
+        out = run_with_devices(SCAN_PROBE, n=1)
+        vals = {l.split()[0]: float(l.split()[1])
+                for l in out.strip().splitlines()}
+        assert vals["ANALYZED"] == vals["EXACT"]
+        # and the raw cost_analysis undercounts by ~the trip count —
+        # the documented reason the analyzer exists
+        assert vals["XLA_ONCE"] < vals["EXACT"] / 4
+
+    def test_sharded_per_device_flops_and_collectives(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.roofline.hlo import analyze_hlo
+
+        def scanned(w, x):
+            def body(x, wi):
+                return jnp.tanh(x @ wi), None
+            x, _ = jax.lax.scan(body, x, w)
+            return x.sum()
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32,
+            sharding=NamedSharding(mesh, P(None, None, "model")))
+        x = jax.ShapeDtypeStruct((128, 256), jnp.float32,
+            sharding=NamedSharding(mesh, P("data", None)))
+        a = analyze_hlo(jax.jit(scanned).lower(w, x).compile().as_text())
+        print("FLOPS", a["flops"])
+        print("AG", a["collectives"].get("all-gather", {}).get("count", 0))
+        """)
+        flops = float(out.split("FLOPS ")[1].split()[0])
+        assert flops == 2 * 8 * 128 * 256 * 256 / 8   # per-device
+        ag = float(out.split("AG ")[1].split()[0])
+        assert ag >= 8   # one gather per scan iteration (loop-multiplied)
+
+    def test_shape_parsing(self):
+        from repro.roofline.hlo import shape_bytes, shape_dims
+        assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+        assert shape_bytes("bf16[2,3,4]") == 48
+        assert shape_bytes("(f32[2]{0}, s32[4]{0})") == 24
+        assert shape_dims("f32[8,16]{1,0}") == [8, 16]
+
+
+class TestRooflineModel:
+    def test_three_terms_and_bottleneck(self):
+        from repro.roofline.analysis import analyze
+        record = {
+            "status": "ok", "arch": "x", "shape": "train_4k",
+            "mesh": "16x16", "chips": 256,
+            "active_params": 2e9,
+            "cost": {"flops": 1e14, "bytes_accessed": 1e11},
+            "collective_bytes": 1e9,
+        }
+        r = analyze(record)
+        assert r.bottleneck == "compute"
+        assert abs(r.compute_s - 1e14 / 197e12) < 1e-6
+        assert 0 < r.roofline_fraction <= 1.0
+
+    def test_dryrun_records_analyzable(self):
+        """Every OK record produced by the sweep feeds the roofline."""
+        import glob, json
+        from repro.roofline.analysis import analyze
+        paths = glob.glob(os.path.join(REPO, "results", "dryrun", "*.json"))
+        if not paths:
+            pytest.skip("dry-run sweep has not been run")
+        ok = 0
+        for p in paths:
+            with open(p) as fh:
+                rec = json.load(fh)
+            if rec["status"] == "ok":
+                r = analyze(rec)
+                assert r is not None
+                assert r.compute_s >= 0 and r.memory_s >= 0
+                ok += 1
+        assert ok >= 20
