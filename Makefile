@@ -1,0 +1,19 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-smoke quickstart
+
+test:            ## tier-1 suite
+	$(PY) -m pytest -x -q
+
+test-fast:       ## API + kmeans + kernels only (quick signal)
+	$(PY) -m pytest -q tests/test_api.py tests/test_kmeans.py tests/test_kernels.py
+
+bench:           ## all paper-figure benchmark modules
+	$(PY) -m benchmarks.run
+
+bench-smoke:     ## one fast module (Fig. 7 ladder) as a smoke check
+	$(PY) -m benchmarks.bench_stepwise
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,19 +1,17 @@
 """Paper Fig. 15/16 — FT K-means with fault tolerance vs without.
 
 Two layers of evidence on this host:
-  * measured: full Lloyd iterations with the ABFT-checksummed assignment
-    (jnp path) vs the unprotected assignment — wall-clock overhead;
+  * measured: full Lloyd iterations through ``repro.api.KMeans`` under
+    ``FaultPolicy.off()`` vs ``FaultPolicy.detect()`` (the ABFT-checksummed
+    jnp path) — wall-clock overhead;
   * analytic: the fused kernel's checksum flop overhead per tile
     (2*(bm+bk)*bf extra vs 2*bm*bk*bf), the quantity the paper's 11%
     average reflects after fusion into memory gaps.
 """
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import row, time_call
-from repro.core import KMeans, KMeansConfig
-from repro.core.autotune import lookup_params
+from repro.api import FaultPolicy, KMeans, default_cache
 from repro.data.blobs import make_blobs
 
 CASES = [  # (K clusters, F features) — paper's K=8/128, N=8/128 slices
@@ -22,25 +20,25 @@ CASES = [  # (K clusters, F features) — paper's K=8/128, N=8/128 slices
 M = 16_384
 
 
-def _fit_time(x, assignment, k):
-    cfg = KMeansConfig(k=k, max_iters=8, tol=0.0, assignment=assignment,
-                       dmr_update=False, seed=0)
-    km = KMeans(cfg)
+def _fit_time(x, policy, k):
+    km = KMeans(n_clusters=k, max_iter=8, tol=0.0, fault=policy,
+                random_state=0)
     c0 = km.init_centroids(x)
     return time_call(lambda: km.fit(x, centroids=c0), iters=3, warmup=1)
 
 
 def run() -> list[str]:
     out = []
+    cache = default_cache()
     for k, f in CASES:
         x, _ = make_blobs(M, f, k, seed=2)
-        t_plain = _fit_time(x, "gemm_fused", k)
-        t_ft = _fit_time(x, "abft_offline", k)
+        t_plain = _fit_time(x, FaultPolicy.off(), k)
+        t_ft = _fit_time(x, FaultPolicy.detect(update_dmr=False), k)
         ovh = (t_ft - t_plain) / t_plain * 100
         out.append(row(f"fig15_K{k}_N{f}_noft", t_plain, ""))
         out.append(row(f"fig15_K{k}_N{f}_ft", t_ft,
                        f"overhead={ovh:.1f}%"))
-        p = lookup_params(M, k, f)
+        p = cache.lookup(M, k, f)
         kernel_ovh = (2 * (p.block_m + p.block_k) * p.block_f) / \
             (2 * p.block_m * p.block_k * p.block_f) * 100 * 2
         out.append(row(f"fig15_K{k}_N{f}_kernel_flop_ovh", 0.0,

@@ -3,14 +3,14 @@ baselines: Wu-style offline ABFT and Taamneh checkpoint/restart.
 
 Metrics: wall-clock overhead vs the unprotected run AND solution quality
 (inertia must match the clean solution — silent corruption is the failure
-mode checkpointing cannot see).
+mode checkpointing cannot see). All K-means runs go through
+``repro.api.KMeans`` with a ``FaultPolicy``; the checkpoint/restart
+baseline keeps its legacy-config surface (it *is* the legacy scheme).
 """
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import row, time_call
-from repro.core import FaultConfig, KMeans, KMeansConfig
+from repro.api import FaultPolicy, InjectionCampaign, KMeans
 from repro.core.baselines import CheckpointRestartKMeans
 from repro.data.blobs import make_blobs
 
@@ -22,27 +22,29 @@ RATES = (0.5, 1.0)   # injections per Lloyd iteration (paper: tens/second)
 def run() -> list[str]:
     x, _ = make_blobs(M, F, K, seed=4)
     out = []
-    base_cfg = KMeansConfig(k=K, max_iters=ITERS, tol=0.0,
-                            assignment="gemm_fused", dmr_update=False, seed=0)
-    km = KMeans(base_cfg)
+    km = KMeans(n_clusters=K, max_iter=ITERS, tol=0.0,
+                fault=FaultPolicy.off(), random_state=0)
     c0 = km.init_centroids(x)
     t_clean = time_call(lambda: km.fit(x, centroids=c0), iters=2, warmup=1)
-    clean_inertia = float(km.fit(x, centroids=c0).inertia)
+    clean_inertia = km.fit(x, centroids=c0).inertia_
     out.append(row("fig17_clean", t_clean, f"inertia={clean_inertia:.4g}"))
 
     for rate in RATES:
-        fc = FaultConfig(rate=rate, seed=11)
-        ft_cfg = KMeansConfig(k=K, max_iters=ITERS, tol=0.0,
-                              assignment="abft_offline", dmr_update=True,
-                              seed=0)
-        ft = KMeans(ft_cfg)
+        ft = KMeans(n_clusters=K, max_iter=ITERS, tol=0.0,
+                    fault=FaultPolicy.detect(), random_state=0)
         t_ft = time_call(lambda: ft.fit(x, centroids=c0), iters=2, warmup=1)
-        res = ft.fit(x, centroids=c0)
+        inertia = ft.fit(x, centroids=c0).inertia_
         out.append(row(f"fig17_ftkmeans_rate{rate}", t_ft,
                        f"overhead={(t_ft - t_clean) / t_clean * 100:.1f}%;"
-                       f"inertia_ok={abs(float(res.inertia) - clean_inertia) < abs(clean_inertia) * 1e-3}"))
+                       f"inertia_ok={abs(inertia - clean_inertia) < abs(clean_inertia) * 1e-3}"))
 
+        campaign = InjectionCampaign(rate=rate, seed=11)
+        from repro.core.kmeans import KMeansConfig
+        base_cfg = KMeansConfig(k=K, max_iters=ITERS, tol=0.0,
+                                assignment="gemm_fused",
+                                dmr_update=False, seed=0)
         ckr = CheckpointRestartKMeans(base_cfg)
+        fc = campaign.to_fault_config()
         t_ck = time_call(lambda: ckr.fit(x, fault=fc, centroids=c0),
                          iters=2, warmup=1)
         _, stats = ckr.fit(x, fault=fc, centroids=c0)

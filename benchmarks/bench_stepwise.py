@@ -1,9 +1,11 @@
 """Paper Fig. 7 — stepwise optimization ladder for the distance step.
 
-naive (per-sample loop, no GEMM) -> V1 GEMM + separate reduction kernel ->
-V2/V3 fused reduction (single compiled program; on TPU this is the Pallas
-fused kernel, on this CPU host the XLA-fused analogue) -> V4 + tuned
-parameters / low-precision matmul units (bf16 = the TF32 analogue).
+Walks the registered assignment backends in ladder order — naive (per-sample
+loop, no GEMM) -> V1 GEMM + separate reduction -> V2/V3 fused reduction
+(cuML analogue) -> V4 low-precision — through the ``repro.api`` registry
+(uniform ``backend(x, c)`` calls, no magic strings), then times one full
+``repro.api.KMeans`` iteration loop with and without a ``FaultPolicy`` to
+anchor the ladder in estimator terms.
 """
 from __future__ import annotations
 
@@ -11,9 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import distance_flops, gflops, row, time_call
-from repro.core import assignment as assign_mod
+from repro.api import FaultPolicy, KMeans, get_backend
 
 M, K, F = 16_384, 128, 128   # paper Fig. 7: M=131072, N=128 (scaled to CPU)
+
+LADDER = [                    # (row label, registered backend)
+    ("fig7_naive", "naive"),
+    ("fig7_v1_gemm", "gemm"),
+    ("fig7_v2_fused", "gemm_fused"),
+]
 
 
 def _bf16_fused(x, c):
@@ -30,25 +38,29 @@ def run() -> list[str]:
     fl = distance_flops(M, K, F)
     out = []
 
-    naive = jax.jit(lambda x, c: assign_mod.assign_naive(x, c)[0])
-    t = time_call(naive, x, c, iters=3, warmup=1)
-    base = t
-    out.append(row("fig7_naive", t, f"GFLOPS={gflops(fl, t):.1f};x1.00"))
-
-    v1 = jax.jit(lambda x, c: assign_mod.assign_gemm(x, c)[0])
-    t = time_call(v1, x, c)
-    out.append(row("fig7_v1_gemm", t,
-                   f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
-
-    v2 = jax.jit(lambda x, c: assign_mod.assign_gemm_fused(x, c)[0])
-    t = time_call(v2, x, c)
-    out.append(row("fig7_v2_fused", t,
-                   f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
+    base = None
+    for label, name in LADDER:
+        backend = get_backend(name)
+        fn = jax.jit(lambda x, c, b=backend: b(x, c)[0])
+        iters, warmup = (3, 1) if name == "naive" else (5, 2)
+        t = time_call(fn, x, c, iters=iters, warmup=warmup)
+        base = base if base is not None else t
+        out.append(row(label, t,
+                       f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
 
     v4 = jax.jit(_bf16_fused)
     t = time_call(v4, x, c)
     out.append(row("fig7_v4_lowprec_tuned", t,
                    f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
+
+    # estimator-level anchor: 4 Lloyd iterations, unprotected vs FT policy
+    for label, policy in (("fig7_e2e_off", FaultPolicy.off()),
+                          ("fig7_e2e_detect", FaultPolicy.detect())):
+        km = KMeans(n_clusters=K, max_iter=4, tol=0.0, fault=policy,
+                    random_state=0)
+        c0 = km.init_centroids(x)
+        t = time_call(lambda: km.fit(x, centroids=c0), iters=2, warmup=1)
+        out.append(row(label, t, f"mode={policy.mode}"))
     return out
 
 

@@ -2,21 +2,22 @@
 
 The full production loop on one host (the same code path the multi-pod
 launcher uses): sharded synthetic ingest, distributed Lloyd iterations with
-psum centroid reduction, ABFT-protected assignment, asynchronous
-checkpointing — then a SIMULATED FAIL-STOP mid-run and a restart from the
-latest snapshot, finishing to convergence.
+psum centroid reduction, ABFT-protected assignment via
+``FaultPolicy.correct()``, asynchronous checkpointing — then a SIMULATED
+FAIL-STOP mid-run and a restart from the latest snapshot, finishing to
+convergence. Fault tolerance covers both halves of the paper's fault model:
+SDCs in-kernel (ABFT), fail-stop via checkpoint/restart.
 
     PYTHONPATH=src python examples/e2e_kmeans.py [--m 262144] [--f 32] [--k 32]
 """
 import argparse
-import os
 import shutil
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeans import KMeans, KMeansConfig
+from repro.api import FaultPolicy, KMeans
 from repro.data.blobs import make_blobs
 from repro.dist.kmeans_dist import DistributedKMeans
 from repro.ft.checkpoint import Checkpointer
@@ -37,11 +38,11 @@ def main():
     print(f"mesh: {dict(mesh.shape)} ({len(jax.devices())} devices)")
 
     x, _ = make_blobs(args.m, args.f, args.k, seed=0)
-    cfg = KMeansConfig(k=args.k, max_iters=args.iters, tol=1e-4,
-                       assignment="fused_ft", seed=0)
-    dk = DistributedKMeans(cfg, mesh)
+    km = KMeans(n_clusters=args.k, max_iter=args.iters, tol=1e-4,
+                fault=FaultPolicy.correct(), random_state=0)
+    dk = DistributedKMeans(km, mesh)
     xs = dk.shard_data(x)
-    c0 = KMeans(cfg).init_centroids(x)
+    c0 = km.init_centroids(x)
     ck = Checkpointer(args.ckpt_dir, keep=3, async_write=True)
 
     # ---- phase 1: run, checkpointing every 5 iterations, "crash" at 40 ----

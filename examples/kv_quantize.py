@@ -12,8 +12,8 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.api import FaultPolicy, InjectionCampaign, KMeans
 from repro.configs import get_config
-from repro.core import FaultConfig, KMeans, KMeansConfig
 from repro.models import LM
 
 
@@ -37,15 +37,17 @@ def main():
     print(f"KV vectors: {vecs.shape[0]} x {vecs.shape[1]} "
           f"({vecs.size * 2 / 2**20:.1f} MiB bf16)")
 
-    km = KMeans(KMeansConfig(k=args.codebook, max_iters=25,
-                             assignment="fused_ft", seed=0))
-    res = km.fit(vecs, fault=FaultConfig(rate=0.5))
-    recon = res.centroids[res.assign]
+    km = KMeans(n_clusters=args.codebook, max_iter=25,
+                fault=FaultPolicy.correct(
+                    injection=InjectionCampaign(rate=0.5)), random_state=0)
+    km.fit(vecs)
+    recon = km.cluster_centers_[km.labels_]
     err = float(jnp.linalg.norm(vecs - recon) / jnp.linalg.norm(vecs))
-    ratio = vecs.shape[1] * 2 / (2 + res.centroids.size * 2 / vecs.shape[0])
+    ratio = vecs.shape[1] * 2 / (
+        2 + km.cluster_centers_.size * 2 / vecs.shape[0])
     print(f"codebook {args.codebook}: rel recon err {err:.3f}, "
           f"~{ratio:.0f}x smaller cache, "
-          f"SDCs corrected during clustering: {int(res.detected_errors)}")
+          f"SDCs corrected during clustering: {km.detected_errors_}")
 
 
 if __name__ == "__main__":

@@ -1,31 +1,34 @@
 """Quickstart: fault-tolerant K-means in five lines.
 
-Clusters Gaussian blobs with the fused Pallas assignment kernel (ABFT
-dual-checksum protection inside), injecting one SEU per iteration to show
-online correction.
+Clusters Gaussian blobs through the ``repro.api`` estimator with a
+``FaultPolicy.correct()`` policy — the paper's fully-fused ABFT kernel
+(dual-checksum detect -> locate -> correct, §IV) — while an injection
+campaign fires one SEU per iteration to show online correction.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import FaultConfig, KMeans, KMeansConfig
+from repro.api import FaultPolicy, InjectionCampaign, KMeans
 from repro.data.blobs import make_blobs
 
 
 def main():
     x, true_labels = make_blobs(m=20_000, f=32, k=8, seed=0)
 
-    km = KMeans(KMeansConfig(k=8, max_iters=50, assignment="fused_ft"))
-    result = km.fit(x, fault=FaultConfig(rate=1.0))   # 1 SEU / iteration
+    km = KMeans(n_clusters=8, max_iter=50,
+                fault=FaultPolicy.correct(
+                    injection=InjectionCampaign(rate=1.0)))  # 1 SEU / iter
+    labels = km.fit_predict(x)
 
-    assign = np.asarray(result.assign)
-    labels = np.asarray(true_labels)
-    purity = sum(np.bincount(labels[assign == j]).max()
-                 for j in range(8) if np.any(assign == j)) / len(labels)
-    print(f"converged in {result.iterations} iterations")
-    print(f"inertia: {float(result.inertia):.1f}  purity: {purity:.3f}")
-    print(f"SDCs detected & corrected in-kernel: {int(result.detected_errors)}")
-    print(f"centroids shape: {result.centroids.shape}")
+    assign = np.asarray(labels)
+    truth = np.asarray(true_labels)
+    purity = sum(np.bincount(truth[assign == j]).max()
+                 for j in range(8) if np.any(assign == j)) / len(truth)
+    print(f"converged in {km.n_iter_} iterations")
+    print(f"inertia: {km.inertia_:.1f}  purity: {purity:.3f}")
+    print(f"SDCs detected & corrected in-kernel: {km.detected_errors_}")
+    print(f"centroids shape: {km.cluster_centers_.shape}")
 
 
 if __name__ == "__main__":

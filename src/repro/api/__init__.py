@@ -1,0 +1,29 @@
+"""``repro.api`` — the stable estimator surface of FT K-means.
+
+Everything downstream (examples, benchmarks, streaming/sharding subsystems)
+builds on four objects:
+
+  * :class:`KMeans`          — cuML/sklearn-shaped estimator
+                               (fit / fit_predict / predict / partial_fit /
+                               transform / score, get_state / from_state);
+  * :class:`FaultPolicy`     — typed protection policy (off|detect|correct,
+                               DMR on the update step, injection campaigns);
+  * the backend registry     — :func:`get_backend` / :func:`list_backends` /
+                               :func:`register_backend` over uniform
+                               :class:`AssignmentBackend` objects;
+  * :class:`AutotuneCache`   — injectable kernel-selection table
+                               (paper §III-B), passed per-estimator.
+"""
+from repro.api.cache import AutotuneCache, default_cache, shape_bucket
+from repro.api.estimator import KMeans, NotFittedError
+from repro.api.policy import FaultPolicy, InjectionCampaign
+from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
+                                get_backend, list_backends, register_backend)
+
+__all__ = [
+    "KMeans", "NotFittedError",
+    "FaultPolicy", "InjectionCampaign",
+    "AssignmentBackend", "BackendCapabilityError",
+    "get_backend", "list_backends", "register_backend",
+    "AutotuneCache", "default_cache", "shape_bucket",
+]

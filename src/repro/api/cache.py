@@ -1,0 +1,124 @@
+"""Injectable kernel-selection cache (paper §III-B selection pipeline).
+
+The paper benchmarks ~150 generated kernels over 64 problem sizes and
+persists the per-shape winners; the runtime consults that table. The legacy
+implementation hid the table behind a module global plus an env var —
+untestable and shared across every estimator in the process.
+
+:class:`AutotuneCache` is that table as an object: it owns load/save/lookup
+and is passed per-estimator (``KMeans(..., autotune=cache)``), so two
+estimators can run with different tables in one process and tests get a
+fresh cache per case.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+from typing import Iterable, Optional
+
+from repro.kernels.ops import KernelParams
+
+_DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "core", "autotune_table.json")
+_PATH_ENV = "REPRO_AUTOTUNE_TABLE"   # still honoured, but only here
+
+
+def shape_bucket(m: int, k: int, f: int) -> str:
+    """log2 bucket per dimension — the paper's 64-discrete-sizes granularity:
+    shapes in a bucket share a winner."""
+    b = lambda v: int(math.log2(max(v, 1)))
+    return f"{b(m)}-{b(k)}-{b(f)}"
+
+
+class AutotuneCache:
+    """Shape-bucketed winner table with lazy file backing.
+
+    path=None keeps the cache purely in-memory; a string path loads the
+    JSON table on first lookup and ``save()`` writes winners back.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._table: Optional[dict[str, list[int]]] = None
+        self._computed: dict[tuple[int, int, int], KernelParams] = {}
+        self._lock = threading.RLock()   # build() holds it across put/save
+
+    @classmethod
+    def default(cls) -> "AutotuneCache":
+        """Process-default cache: $REPRO_AUTOTUNE_TABLE or the packaged
+        table location. Estimators that want isolation pass their own."""
+        return cls(os.environ.get(_PATH_ENV, _DEFAULT_PATH))
+
+    # -- table I/O ---------------------------------------------------------
+
+    def _load(self) -> dict:
+        if self._table is None:
+            table: dict[str, list[int]] = {}
+            if self.path and os.path.exists(self.path):
+                with open(self.path) as fh:
+                    table = json.load(fh)
+            self._table = table
+        return self._table
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Persist the current table (sorted, stable) and return the path."""
+        path = path or self.path
+        if not path:
+            raise ValueError("AutotuneCache has no backing path to save to")
+        with self._lock:
+            table = self._load()   # before open(..., "w") truncates the file
+            with open(path, "w") as fh:
+                json.dump(table, fh, indent=1, sort_keys=True)
+        return path
+
+    # -- lookup / update ---------------------------------------------------
+
+    def put(self, m: int, k: int, f: int, params: KernelParams) -> None:
+        with self._lock:
+            self._load()[shape_bucket(m, k, f)] = [
+                params.block_m, params.block_k, params.block_f]
+
+    def lookup(self, m: int, k: int, f: int) -> KernelParams:
+        """Persisted winner for the shape bucket, else the analytical winner
+        computed on the fly (memoized per cache instance)."""
+        with self._lock:
+            hit = self._load().get(shape_bucket(m, k, f))
+            if hit is not None:
+                bm, bk, bf = hit
+                return KernelParams(bm, bk, bf)
+            key = (m, k, f)
+            if key not in self._computed:
+                from repro.core.autotune import select_params
+                self._computed[key] = select_params(m, k, f, mode="model")
+            return self._computed[key]
+
+    def build(self, shapes: Iterable[tuple[int, int, int]], *,
+              mode: str = "model", dtype=None) -> dict:
+        """Run the selection pipeline over ``shapes``, record the winners,
+        and persist if file-backed. Returns the bucket -> blocks table."""
+        import jax.numpy as jnp
+        from repro.core.autotune import select_params
+        dtype = dtype if dtype is not None else jnp.float32
+        with self._lock:
+            for (m, k, f) in shapes:
+                self.put(m, k, f,
+                         select_params(m, k, f, mode=mode, dtype=dtype))
+            if self.path:
+                self.save()
+            return dict(self._load())
+
+
+_default_cache: Optional[AutotuneCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> AutotuneCache:
+    """Shared fallback for call sites with no estimator in scope
+    (e.g. ``ops.fused_assign(x, c)`` with no explicit params)."""
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = AutotuneCache.default()
+        return _default_cache

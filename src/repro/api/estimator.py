@@ -1,0 +1,373 @@
+"""cuML/sklearn-compatible K-means estimator over the FT kernel stack.
+
+One front end for every scenario in the paper and the roadmap:
+
+    km = KMeans(n_clusters=8, fault=FaultPolicy.correct())
+    labels = km.fit_predict(x)            # full-batch Lloyd
+    km.partial_fit(block)                 # streaming / mini-batch path
+    state = km.get_state()                # serializable fitted state
+    km2 = KMeans.from_state(state)        # restore (checkpoint/restart)
+
+Protection is a :class:`~repro.api.policy.FaultPolicy` — policy resolution
+picks the assignment kernel from the backend registry; kernel-tile selection
+comes from an injectable :class:`~repro.api.cache.AutotuneCache`. The
+estimator never branches on backend names.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.cache import AutotuneCache, default_cache
+from repro.api.policy import FaultPolicy, InjectionCampaign
+from repro.api.registry import AssignmentBackend
+from repro.kernels import ops, ref
+
+_INITS = ("kmeans++", "random")
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class KMeans:
+    """K-means estimator with composable fault tolerance.
+
+    Parameters mirror sklearn/cuML: ``n_clusters``, ``max_iter``, ``tol``
+    (centroid-shift convergence threshold), ``init`` ("kmeans++"/"random"),
+    ``random_state``. Additions:
+
+    fault:      :class:`FaultPolicy` — off / detect / correct (+ optional
+                SEU injection campaign). Default: no protection.
+    backend:    pin a registered assignment backend by name; default lets
+                the policy resolve one (paper §III-B selection).
+    batch_size: when set, ``fit`` runs sampled mini-batches per iteration;
+                ``partial_fit`` streams caller-provided batches either way.
+    params:     explicit :class:`KernelParams` tile override.
+    autotune:   injectable :class:`AutotuneCache`; default = process cache.
+
+    Fitted attributes: ``cluster_centers_``, ``labels_``, ``inertia_``,
+    ``n_iter_``, ``detected_errors_``.
+    """
+
+    def __init__(self, n_clusters: int = 8, *, max_iter: int = 100,
+                 tol: float = 1e-4, init: str = "kmeans++",
+                 fault: Optional[FaultPolicy] = None,
+                 backend: Optional[str] = None,
+                 batch_size: Optional[int] = None,
+                 params=None,
+                 autotune: Optional[AutotuneCache] = None,
+                 random_state: int = 0):
+        if n_clusters < 1:
+            raise ValueError(f"n_clusters must be >= 1, got {n_clusters}")
+        if init not in _INITS:
+            raise ValueError(f"init must be one of {_INITS}, got {init!r}")
+        self.n_clusters = n_clusters
+        self.max_iter = max_iter
+        self.tol = tol
+        self.init = init
+        self.fault = fault if fault is not None else FaultPolicy.off()
+        self.backend = backend
+        self.batch_size = batch_size
+        self.params = params
+        self.autotune = autotune if autotune is not None else default_cache()
+        self.random_state = random_state
+
+        self._backend: AssignmentBackend = self.fault.resolve_backend(backend)
+        self._step_cache: dict = {}
+        # streaming state (partial_fit)
+        self._counts: Optional[jax.Array] = None
+
+        self.cluster_centers_: Optional[jax.Array] = None
+        self.labels_: Optional[jax.Array] = None
+        self.inertia_: Optional[float] = None
+        self.n_iter_: int = 0
+        self.detected_errors_: int = 0
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _check_fitted(self):
+        if self.cluster_centers_ is None:
+            raise NotFittedError(
+                "this KMeans instance is not fitted yet; call fit() or "
+                "partial_fit() first")
+
+    def _resolve_params(self, m: int, f: int):
+        """Tile selection for one problem shape: explicit override, else the
+        injectable autotune cache (paper §III-B table lookup)."""
+        if not self._backend.takes_params:
+            return None
+        p = self.params or self.autotune.lookup(m, self.n_clusters, f)
+        return ops.clamp_params(m, self.n_clusters, f, p)
+
+    def _assign_fn(self, params):
+        """jit'd (x, c[, inj]) -> (assign, true sq-dist, detected)."""
+        key = ("assign", params)
+        if key not in self._step_cache:
+            backend = self._backend
+            if backend.takes_injection:
+                fn = jax.jit(lambda x, c, inj: backend(
+                    x, c, params=params, inj=inj))
+            else:
+                fn = jax.jit(lambda x, c: backend(x, c, params=params))
+            self._step_cache[key] = fn
+        return self._step_cache[key]
+
+    def _lloyd_step_fn(self, params):
+        """jit'd full Lloyd step: assignment + (DMR-)protected update."""
+        from repro.core.kmeans import centroid_update
+        key = ("lloyd", params)
+        if key not in self._step_cache:
+            backend, k = self._backend, self.n_clusters
+            use_dmr = self.fault.update_dmr
+
+            def step(x, centroids, inj=None):
+                am, md, det = backend(x, centroids, params=params, inj=inj)
+                new_c, counts = centroid_update(x, am, k, centroids,
+                                                use_dmr=use_dmr)
+                inertia = jnp.sum(md)
+                shift = jnp.sqrt(jnp.sum((new_c - centroids) ** 2))
+                return new_c, am, counts, md, inertia, shift, det
+
+            static = () if backend.takes_injection else ("inj",)
+            self._step_cache[key] = jax.jit(step, static_argnames=static)
+        return self._step_cache[key]
+
+    def _stream_step_fn(self, params):
+        """jit'd streaming (mini-batch) step with per-center count decay —
+        the partial_fit update rule (Sculley-style online k-means)."""
+        from repro.core.kmeans import protected_sums
+        key = ("stream", params)
+        if key not in self._step_cache:
+            backend, k = self._backend, self.n_clusters
+            use_dmr = self.fault.update_dmr
+
+            def step(x, centroids, counts, inj=None):
+                am, md, det = backend(x, centroids, params=params, inj=inj)
+                sums, bcnt = protected_sums(x, am, k, use_dmr=use_dmr)
+                new_counts = counts + bcnt
+                eta = (bcnt / jnp.maximum(new_counts, 1.0))[:, None]
+                bmean = sums / jnp.maximum(bcnt, 1.0)[:, None]
+                new_c = jnp.where((bcnt > 0)[:, None],
+                                  (1.0 - eta) * centroids + eta * bmean,
+                                  centroids)
+                return new_c, new_counts, am, jnp.sum(md), det
+
+            static = () if backend.takes_injection else ("inj",)
+            self._step_cache[key] = jax.jit(step, static_argnames=static)
+        return self._step_cache[key]
+
+    def _campaign_rng(self, offset: int = 0):
+        """Injection-schedule RNG: keyed by the campaign's own seed (so
+        repeated campaigns vary independently of data sampling), mixed
+        with random_state for distinct estimators. The leading tag keeps
+        the stream disjoint from the data-sampling rng even at seed 0."""
+        camp = self.fault.injection
+        camp_seed = camp.seed if camp is not None else 0
+        return np.random.default_rng(
+            [0x1427, camp_seed, self.random_state, offset])
+
+    def _draw_injection(self, rng, m: int, f: int, params):
+        """Per-iteration campaign draw -> in-kernel injection descriptor."""
+        from repro.core.fault import draw_tile_injection
+        camp = self.fault.injection
+        from repro.kernels.distance_argmin_ft import no_injection
+        if camp is None or not camp.enabled() or \
+                rng.uniform() > min(camp.rate, 1.0):
+            return no_injection()
+        return draw_tile_injection(rng, m, self.n_clusters, f, params)
+
+    def init_centroids(self, x: jax.Array,
+                        key: Optional[jax.Array] = None) -> jax.Array:
+        from repro.core.kmeans import init_kmeanspp, init_random
+        key = key if key is not None else jax.random.PRNGKey(self.random_state)
+        fn = init_kmeanspp if self.init == "kmeans++" else init_random
+        return fn(key, x, self.n_clusters)
+
+    # ------------------------------------------------------------------
+    # estimator API
+    # ------------------------------------------------------------------
+
+    def fit(self, x: jax.Array, *, centroids: Optional[jax.Array] = None,
+            on_iteration: Optional[Callable] = None) -> "KMeans":
+        """Run Lloyd iterations to convergence (or ``max_iter``).
+
+        ``centroids`` seeds the run (checkpoint restart / warm start);
+        ``on_iteration(it, centroids, inertia, shift)`` observes progress.
+        """
+        from repro.core.kmeans import reseed_empty
+        x = jnp.asarray(x)
+        key = jax.random.PRNGKey(self.random_state)
+        if centroids is None:
+            key, sub = jax.random.split(key)
+            centroids = self.init_centroids(x, sub)
+        rng = np.random.default_rng(self.random_state + 1)
+        inj_rng = self._campaign_rng()
+        takes_inj = self._backend.takes_injection
+
+        total_det = jnp.zeros((), jnp.int32)
+        am = jnp.zeros((x.shape[0],), jnp.int32)
+        inertia = jnp.asarray(jnp.inf)
+        it = 0
+        for it in range(self.max_iter):
+            batch = x
+            if self.batch_size is not None:
+                idx = rng.choice(x.shape[0], min(self.batch_size, x.shape[0]),
+                                 replace=False)
+                batch = x[jnp.asarray(idx)]
+            params = self._resolve_params(batch.shape[0], batch.shape[1])
+            step = self._lloyd_step_fn(params)
+
+            inj = self._draw_injection(inj_rng, batch.shape[0],
+                                       batch.shape[1], params) \
+                if takes_inj else None
+            centroids, am_b, counts, md, inertia, shift, det = step(
+                batch, centroids, inj=inj)
+            total_det = total_det + det
+            if self.batch_size is None:
+                am = am_b
+                centroids = reseed_empty(
+                    jax.random.fold_in(key, it), batch, centroids, counts, md)
+            if on_iteration is not None:
+                on_iteration(it, centroids, float(inertia), float(shift))
+            if float(shift) < self.tol:
+                break
+
+        self.cluster_centers_ = centroids
+        self.n_iter_ = it + 1
+        self.detected_errors_ = int(total_det)
+        self._counts = None
+        if self.batch_size is not None:
+            am, dist, det = self._predict_full(x)
+            inertia = jnp.sum(dist)
+            self.detected_errors_ += int(det)
+        self.labels_ = am
+        self.inertia_ = float(inertia)
+        return self
+
+    def partial_fit(self, x: jax.Array) -> "KMeans":
+        """One streaming update from a data block (first call initializes).
+
+        Centers move by count-weighted running means, so a stream of blocks
+        converges like mini-batch k-means regardless of block order."""
+        x = jnp.asarray(x)
+        if self.cluster_centers_ is None:
+            self.cluster_centers_ = self.init_centroids(x)
+            self._counts = jnp.zeros((self.n_clusters,), jnp.float32)
+            self.detected_errors_ = 0
+            self.n_iter_ = 0
+        elif self._counts is None:   # fitted by fit(); restart streaming
+            self._counts = jnp.zeros((self.n_clusters,), jnp.float32)
+        params = self._resolve_params(x.shape[0], x.shape[1])
+        step = self._stream_step_fn(params)
+        if self._backend.takes_injection:
+            inj = self._draw_injection(self._campaign_rng(self.n_iter_),
+                                       x.shape[0], x.shape[1], params)
+        else:
+            inj = None
+        c, counts, am, inertia, det = step(
+            x, self.cluster_centers_, self._counts, inj=inj)
+        self.cluster_centers_ = c
+        self._counts = counts
+        self.labels_ = am
+        self.inertia_ = float(inertia)
+        self.n_iter_ += 1
+        self.detected_errors_ += int(det)
+        return self
+
+    def _predict_full(self, x: jax.Array):
+        params = self._resolve_params(x.shape[0], x.shape[1])
+        fn = self._assign_fn(params)
+        if self._backend.takes_injection:
+            from repro.kernels.distance_argmin_ft import no_injection
+            return fn(x, self.cluster_centers_, no_injection())
+        return fn(x, self.cluster_centers_)
+
+    def predict(self, x: jax.Array) -> jax.Array:
+        """Nearest-centroid labels for new data (no injection, ever)."""
+        self._check_fitted()
+        am, _, _ = self._predict_full(jnp.asarray(x))
+        return am
+
+    def fit_predict(self, x: jax.Array) -> jax.Array:
+        return self.fit(x).labels_
+
+    def transform(self, x: jax.Array) -> jax.Array:
+        """Distances to every centroid, shape (M, n_clusters)."""
+        self._check_fitted()
+        d = ref.distance_matrix(jnp.asarray(x), self.cluster_centers_)
+        return jnp.sqrt(jnp.maximum(d, 0.0))
+
+    def score(self, x: jax.Array) -> float:
+        """Negative inertia on ``x`` (sklearn convention: higher = better)."""
+        self._check_fitted()
+        _, dist, _ = self._predict_full(jnp.asarray(x))
+        return -float(jnp.sum(dist))
+
+    # ------------------------------------------------------------------
+    # serializable state
+    # ------------------------------------------------------------------
+
+    def get_state(self) -> dict:
+        """Fitted state as a flat dict of plain types + numpy arrays —
+        feed it to ``np.savez``, JSON+base64, or ``ft.checkpoint``."""
+        self._check_fitted()
+        camp = self.fault.injection
+        return {
+            "cluster_centers": np.asarray(self.cluster_centers_),
+            "counts": (np.asarray(self._counts)
+                       if self._counts is not None else None),
+            "n_iter": int(self.n_iter_),
+            "inertia": (float(self.inertia_)
+                        if self.inertia_ is not None else None),
+            "detected_errors": int(self.detected_errors_),
+            "config": {
+                "n_clusters": self.n_clusters,
+                "max_iter": self.max_iter,
+                "tol": self.tol,
+                "init": self.init,
+                "backend": self.backend,
+                "batch_size": self.batch_size,
+                "random_state": self.random_state,
+                "params": (None if self.params is None else
+                           [self.params.block_m, self.params.block_k,
+                            self.params.block_f]),
+                "fault": {
+                    "mode": self.fault.mode,
+                    "update_dmr": self.fault.update_dmr,
+                    "injection": (None if camp is None else {
+                        "rate": camp.rate, "bit_low": camp.bit_low,
+                        "bit_high": camp.bit_high, "seed": camp.seed}),
+                },
+            },
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, *,
+                   autotune: Optional[AutotuneCache] = None) -> "KMeans":
+        """Reconstruct a fitted estimator from :meth:`get_state` output."""
+        cfg = state["config"]
+        fp = cfg["fault"]
+        camp = fp.get("injection")
+        fault = FaultPolicy(
+            mode=fp["mode"], update_dmr=fp["update_dmr"],
+            injection=None if camp is None else InjectionCampaign(**camp))
+        tiles = cfg.get("params")
+        params = None if tiles is None else ops.KernelParams(*tiles)
+        km = cls(cfg["n_clusters"], max_iter=cfg["max_iter"], tol=cfg["tol"],
+                 init=cfg["init"], fault=fault, backend=cfg["backend"],
+                 batch_size=cfg["batch_size"], params=params,
+                 random_state=cfg["random_state"], autotune=autotune)
+        km.cluster_centers_ = jnp.asarray(state["cluster_centers"])
+        counts = state.get("counts")
+        km._counts = None if counts is None else jnp.asarray(counts)
+        km.n_iter_ = int(state["n_iter"])
+        inertia = state.get("inertia")
+        km.inertia_ = None if inertia is None else float(inertia)
+        km.detected_errors_ = int(state.get("detected_errors", 0))
+        return km

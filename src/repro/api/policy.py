@@ -1,0 +1,136 @@
+"""Typed fault-tolerance policy — one object instead of three knobs.
+
+The legacy front end scattered protection across an ``assignment`` magic
+string, a ``dmr_update`` bool and a ``FaultConfig`` smuggled into ``fit()``.
+:class:`FaultPolicy` replaces the triple:
+
+  * ``mode`` picks the protection level of the *assignment* step
+    (compute-bound, ABFT per paper §IV):
+      - ``"off"``     no checksums — the paper's "FT K-means without fault
+                      tolerance outperforms cuML" configuration;
+      - ``"detect"``  checksummed GEMM with offline verification on the
+                      materialized product (Wu-et-al-style baseline);
+      - ``"correct"`` the paper's fully-fused online ABFT
+                      detect -> locate -> correct kernel.
+  * ``update_dmr`` protects the *centroid update* step (memory-bound,
+    DMR per §IV intro; <1 % overhead). Independent of ``mode``:
+    ``FaultPolicy(mode="off", update_dmr=True)`` expresses DMR-only
+    protection (unchecksummed assignment, duplicated update arithmetic).
+  * ``injection`` optionally attaches an SEU injection campaign — the
+    evaluation harness of §V-C — which requires a backend that takes
+    in-kernel injection descriptors.
+
+Policy resolution (:meth:`FaultPolicy.resolve_backend`) picks the kernel;
+callers never name kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
+                                get_backend)
+
+MODES = ("off", "detect", "correct")
+
+
+@dataclasses.dataclass(frozen=True)
+class InjectionCampaign:
+    """SEU injection campaign parameters (paper §II-A fault model).
+
+    rate:     expected injections per Lloyd step (Bernoulli when <= 1).
+    bit_low/bit_high: inclusive bit-position range of the flip; the default
+              range exercises high-mantissa + exponent bits (detectable).
+    seed:     host-side RNG seed for the campaign schedule.
+    """
+
+    rate: float = 1.0
+    bit_low: int = 20
+    bit_high: int = 30
+    seed: int = 0
+
+    def enabled(self) -> bool:
+        return self.rate > 0
+
+    def to_fault_config(self):
+        """The low-level descriptor used by ft_gemm/checksum internals."""
+        from repro.core.fault import FaultConfig
+        return FaultConfig(rate=self.rate, bit_low=self.bit_low,
+                           bit_high=self.bit_high, seed=self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Composable protection policy for one estimator."""
+
+    mode: str = "off"                 # "off" | "detect" | "correct"
+    update_dmr: bool = True           # DMR on the centroid-update step
+    injection: Optional[InjectionCampaign] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"FaultPolicy.mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if self.injection is not None and self.mode == "off":
+            raise ValueError(
+                "an injection campaign needs a protected assignment backend; "
+                "use mode='correct' (or 'detect') with injection=...")
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def off(cls) -> "FaultPolicy":
+        """No protection anywhere (performance baseline)."""
+        return cls(mode="off", update_dmr=False)
+
+    @classmethod
+    def detect(cls, *, update_dmr: bool = True,
+               injection: Optional[InjectionCampaign] = None) -> "FaultPolicy":
+        return cls(mode="detect", update_dmr=update_dmr, injection=injection)
+
+    @classmethod
+    def correct(cls, *, update_dmr: bool = True,
+                injection: Optional[InjectionCampaign] = None) -> "FaultPolicy":
+        return cls(mode="correct", update_dmr=update_dmr, injection=injection)
+
+    # -- resolution --------------------------------------------------------
+
+    @property
+    def protected(self) -> bool:
+        return self.mode != "off"
+
+    def resolve_backend(self, name: Optional[str] = None,
+                        *, on_tpu: Optional[bool] = None) -> AssignmentBackend:
+        """Pick the assignment kernel for this policy.
+
+        ``name`` pins an explicit backend (validated against the policy);
+        otherwise the policy selects: fused Pallas (TPU) / XLA-fused (host)
+        when unprotected, the offline-ABFT baseline for ``detect``, and the
+        fused online-ABFT kernel for ``correct``.
+        """
+        if on_tpu is None:
+            from repro.kernels.ops import on_tpu as _on_tpu
+            on_tpu = _on_tpu()
+        if name is None:
+            if self.injection is not None:
+                # campaigns need in-kernel injection; only the fused FT
+                # kernel provides it, so it hosts detect-mode campaigns too
+                name = "fused_ft"
+            elif self.mode == "off":
+                name = "fused" if on_tpu else "gemm_fused"
+            elif self.mode == "detect":
+                name = "abft_offline"
+            else:
+                name = "fused_ft"
+        backend = get_backend(name)
+        if self.protected and not backend.supports_ft:
+            raise BackendCapabilityError(
+                f"FaultPolicy(mode={self.mode!r}) needs a fault-tolerant "
+                f"assignment backend, but {backend.name!r} declares "
+                f"supports_ft=False")
+        if self.injection is not None and not backend.takes_injection:
+            raise BackendCapabilityError(
+                f"injection campaign requires takes_injection=True, but "
+                f"backend {backend.name!r} cannot inject in-kernel; "
+                f"use backend='fused_ft'")
+        return backend

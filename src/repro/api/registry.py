@@ -1,0 +1,98 @@
+"""Assignment-backend registry — the paper's kernel-selection surface.
+
+The paper's code-generation pipeline (§III-B) produces a *set* of kernels
+and a selection layer that picks one per problem; the stepwise ladder
+(§III-A) and the ABFT variants (§IV) are alternative implementations of the
+same contract. This module makes that contract explicit: every assignment
+implementation is an :class:`AssignmentBackend` with declared capabilities
+and one uniform call signature
+
+    backend(x, c, *, params=None, inj=None) -> (assign, min_dist, detected)
+
+so the driver (``repro.api.KMeans``) never branches on backend names.
+Capability mismatches (e.g. an injection campaign routed into a backend
+without in-kernel injection support) are rejected here, at the boundary,
+instead of failing silently inside a kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+
+class BackendCapabilityError(TypeError):
+    """A backend was asked for a capability it does not declare."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AssignmentBackend:
+    """One cluster-assignment implementation plus its capability flags.
+
+    fn: the raw callable. Its positional signature may be any of
+        ``(x, c)``, ``(x, c, params)`` or ``(x, c, params, inj=...)`` —
+        the flags say which; ``__call__`` adapts uniformly.
+    supports_ft:     detects (and possibly corrects) SDCs, returning a
+                     nonzero detected-error count when one fires.
+    takes_params:    accepts a :class:`~repro.kernels.ops.KernelParams`
+                     tile selection (Pallas-backed kernels).
+    takes_injection: accepts an in-kernel SEU injection descriptor.
+    """
+
+    name: str
+    fn: Callable
+    supports_ft: bool = False
+    takes_params: bool = False
+    takes_injection: bool = False
+    doc: str = ""
+
+    def __call__(self, x: jax.Array, c: jax.Array, *,
+                 params=None, inj: Optional[jax.Array] = None):
+        if inj is not None and not self.takes_injection:
+            raise BackendCapabilityError(
+                f"backend {self.name!r} does not take in-kernel injections "
+                f"(takes_injection=False); use a fault-tolerant backend or "
+                f"drop the injection campaign")
+        if params is not None and not self.takes_params:
+            raise BackendCapabilityError(
+                f"backend {self.name!r} does not take kernel parameters "
+                f"(takes_params=False)")
+        if self.takes_injection:
+            if self.takes_params:
+                return self.fn(x, c, params, inj=inj)
+            return self.fn(x, c, inj=inj)
+        if self.takes_params:
+            return self.fn(x, c, params)
+        return self.fn(x, c)
+
+
+_REGISTRY: dict[str, AssignmentBackend] = {}
+
+
+def register_backend(backend: AssignmentBackend) -> AssignmentBackend:
+    """Register (or replace) a backend under its name."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> AssignmentBackend:
+    _ensure_builtin_backends()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown assignment backend {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def list_backends() -> dict[str, AssignmentBackend]:
+    """Name -> backend, a snapshot of the registry."""
+    _ensure_builtin_backends()
+    return dict(_REGISTRY)
+
+
+def _ensure_builtin_backends() -> None:
+    # The built-in ladder registers itself on import; importing here (not at
+    # module top) keeps registry.py import-cycle-free.
+    from repro.core import assignment as _assignment  # noqa: F401

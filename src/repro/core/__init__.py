@@ -1,12 +1,21 @@
-"""FT K-means core — the paper's contribution as a composable JAX module."""
+"""FT K-means core — algorithm numerics behind the ``repro.api`` surface.
+
+Prefer ``repro.api`` (typed ``KMeans`` + ``FaultPolicy`` + backend registry
++ injectable ``AutotuneCache``) for anything user-facing; this package holds
+the pieces it composes — assignment backends (stepwise ladder §III-A),
+DMR/ABFT protection (§IV), kernel search/selection (§III-B) — plus
+deprecated legacy shims (``KMeansConfig``, ``fit_kmeans``).
+"""
 from repro.core.kmeans import (KMeans, KMeansConfig, KMeansResult, fit_kmeans,
-                               init_kmeanspp, init_random)
+                               centroid_update, init_kmeanspp, init_random,
+                               protected_sums, reseed_empty)
 from repro.core.fault import FaultConfig
 from repro.core.ft_gemm import ft_matmul, abft_dot
 from repro.core import checksum, assignment, autotune, baselines, dmr
 
 __all__ = [
     "KMeans", "KMeansConfig", "KMeansResult", "fit_kmeans",
-    "init_kmeanspp", "init_random", "FaultConfig", "ft_matmul", "abft_dot",
+    "centroid_update", "init_kmeanspp", "init_random", "protected_sums",
+    "reseed_empty", "FaultConfig", "ft_matmul", "abft_dot",
     "checksum", "assignment", "autotune", "baselines", "dmr",
 ]

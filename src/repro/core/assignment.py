@@ -1,6 +1,7 @@
-"""Cluster-assignment strategies — the paper's stepwise ladder (§III-A).
+"""Cluster-assignment backends — the paper's stepwise ladder (§III-A).
 
-Each strategy maps (x (M, F), c (K, F)) -> (assign (M,) int32, extra):
+Each implementation maps (x (M, F), c (K, F)) ->
+(assign (M,) int32, true squared distance (M,), detected errors):
 
   naive        the paper's "basic implementation": per-sample loop over all
                centroids, elementwise distances (no GEMM). O(M K F) scalar
@@ -16,12 +17,16 @@ Each strategy maps (x (M, F), c (K, F)) -> (assign (M,) int32, extra):
                paper argues breaks down post-Ampere; here it demonstrates
                the fusion win, not the register-reuse mechanics).
 
-Strategies return a second element: detected-error count (0 where N/A).
+Every implementation is published through the ``repro.api`` backend
+registry as an :class:`~repro.api.registry.AssignmentBackend` declaring its
+capabilities (``supports_ft`` / ``takes_params`` / ``takes_injection``);
+drivers obtain one via ``repro.api.get_backend(name)`` or let a
+``FaultPolicy`` resolve it, and call it with the uniform
+``backend(x, c, *, params=None, inj=None)`` signature.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -82,11 +87,28 @@ def assign_abft_offline(x: jax.Array, c: jax.Array):
             detected.astype(jnp.int32))
 
 
-STRATEGIES: dict[str, Callable] = {
-    "naive": assign_naive,
-    "gemm": assign_gemm,
-    "gemm_fused": assign_gemm_fused,
-    "fused": assign_fused,
-    "fused_ft": assign_fused_ft,
-    "abft_offline": assign_abft_offline,
-}
+# ---------------------------------------------------------------------------
+# Registry publication: the ladder as capability-declaring backends.
+# ---------------------------------------------------------------------------
+
+from repro.api.registry import AssignmentBackend, register_backend
+
+register_backend(AssignmentBackend(
+    "naive", assign_naive,
+    doc="paper's basic implementation: per-sample scalar loop, no GEMM"))
+register_backend(AssignmentBackend(
+    "gemm", assign_gemm,
+    doc="paper V1: GEMM + materialized D + separate argmin pass"))
+register_backend(AssignmentBackend(
+    "gemm_fused", assign_gemm_fused,
+    doc="paper V2/V3 analogue: XLA fuses the GEMM epilogue (cuML baseline)"))
+register_backend(AssignmentBackend(
+    "fused", assign_fused, takes_params=True,
+    doc="paper V4/V5: Pallas fused kernel (MXU + in-VMEM argmin)"))
+register_backend(AssignmentBackend(
+    "fused_ft", assign_fused_ft, supports_ft=True, takes_params=True,
+    takes_injection=True,
+    doc="paper §IV: fused kernel + dual-checksum online ABFT correction"))
+register_backend(AssignmentBackend(
+    "abft_offline", assign_abft_offline, supports_ft=True,
+    doc="Wu-et-al-style baseline: checksummed GEMM, offline verification"))

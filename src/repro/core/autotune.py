@@ -16,16 +16,17 @@ closure specialization, but the search/selection pipeline is the same:
                                this container), "measure": wall-time of the
                                real kernel (used on device; also drives the
                                CPU benchmark figures via the jnp fallback).
-  4. ``build_table()``       — per-shape winners, persisted as JSON: the
+  4. ``AutotuneCache``       — per-shape winners, persisted as JSON: the
                                kernel-selection table the runtime consults.
+                               Lives in ``repro.api.cache`` as an injectable
+                               object (passed per-estimator); this module
+                               keeps only the search/selection pipeline.
 """
 from __future__ import annotations
 
-import functools
 import itertools
-import json
-import os
 import time
+import warnings
 from typing import Iterable, Optional
 
 import jax
@@ -121,52 +122,28 @@ def select_params(m: int, k: int, f: int, *, mode: str = "model",
 
 
 # ---------------------------------------------------------------------------
-# Winner table: shape-bucketed lookup, persisted like the paper's selected-
-# kernel list. Buckets are log2 in each dimension (shapes in a bucket share
-# a winner; the paper benchmarks 64 discrete sizes — same granularity).
+# Winner table: owned by repro.api.cache.AutotuneCache (an injectable object,
+# passed per-estimator). The deprecated helpers below delegate to the
+# process-default cache for callers not yet migrated.
 # ---------------------------------------------------------------------------
-
-_TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
-_DEFAULT_TABLE = os.path.join(os.path.dirname(__file__), "autotune_table.json")
-_cached_table: Optional[dict] = None
-
-
-def _bucket(m: int, k: int, f: int) -> str:
-    import math
-    b = lambda v: int(math.log2(max(v, 1)))
-    return f"{b(m)}-{b(k)}-{b(f)}"
 
 
 def build_table(shapes: Iterable[tuple[int, int, int]], *, mode: str = "model",
                 dtype=jnp.float32, path: Optional[str] = None) -> dict:
-    table = {}
-    for (m, k, f) in shapes:
-        p = select_params(m, k, f, mode=mode, dtype=dtype)
-        table[_bucket(m, k, f)] = [p.block_m, p.block_k, p.block_f]
-    path = path or os.environ.get(_TABLE_ENV, _DEFAULT_TABLE)
-    with open(path, "w") as fh:
-        json.dump(table, fh, indent=1, sort_keys=True)
-    return table
+    """Deprecated: use ``AutotuneCache(path).build(shapes, mode=...)``."""
+    warnings.warn("autotune.build_table is deprecated; use "
+                  "repro.api.AutotuneCache(path).build(...)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.api.cache import AutotuneCache, default_cache
+    cache = AutotuneCache(path) if path else default_cache()
+    return cache.build(shapes, mode=mode, dtype=dtype)
 
 
 def lookup_params(m: int, k: int, f: int) -> KernelParams:
-    """Runtime lookup: persisted winner for the shape bucket, else the
-    analytical winner computed on the fly (memoized)."""
-    global _cached_table
-    if _cached_table is None:
-        path = os.environ.get(_TABLE_ENV, _DEFAULT_TABLE)
-        if os.path.exists(path):
-            with open(path) as fh:
-                _cached_table = json.load(fh)
-        else:
-            _cached_table = {}
-    key = _bucket(m, k, f)
-    if key in _cached_table:
-        bm, bk, bf = _cached_table[key]
-        return KernelParams(bm, bk, bf)
-    return _select_cached(m, k, f)
-
-
-@functools.lru_cache(maxsize=1024)
-def _select_cached(m: int, k: int, f: int) -> KernelParams:
-    return select_params(m, k, f, mode="model")
+    """Deprecated: use ``repro.api.AutotuneCache.lookup`` (injectable) or
+    ``repro.api.default_cache()`` for the process-wide table."""
+    warnings.warn("autotune.lookup_params is deprecated; use "
+                  "repro.api.default_cache().lookup(m, k, f)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.api.cache import default_cache
+    return default_cache().lookup(m, k, f)

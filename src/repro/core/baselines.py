@@ -5,11 +5,11 @@
   assignment step, caught by a post-hoc checksum audit) rolls back to the
   snapshot and recomputes the lost iterations. Cannot catch silent errors
   in-flight; pays recomputation on every hit.
-* ``abft_offline`` assignment (see assignment.py) — Wu-style ABFT on the
-  materialized product: detects online but corrects by locating on the full
-  D, with the extra HBM round trip the paper's fused scheme eliminates.
-* cuML-analogue — the ``gemm_fused`` strategy (XLA-fused, fixed parameters,
-  no FT), used as the performance baseline in benchmarks.
+* ``abft_offline`` backend (``FaultPolicy.detect()``) — Wu-style ABFT on
+  the materialized product: detects online but corrects by locating on the
+  full D, with the extra HBM round trip the paper's fused scheme eliminates.
+* cuML-analogue — the ``gemm_fused`` backend (XLA-fused, fixed parameters,
+  ``FaultPolicy.off()``), used as the performance baseline in benchmarks.
 """
 from __future__ import annotations
 
@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import assignment as assign_mod
+from repro.api.registry import get_backend
 from repro.core.fault import FaultConfig, inject
 from repro.core.kmeans import (KMeansConfig, KMeansResult, centroid_update,
                                init_kmeanspp, init_random)
@@ -44,10 +44,10 @@ class CheckpointRestartKMeans:
     def __init__(self, cfg: KMeansConfig, policy: CheckpointPolicy = CheckpointPolicy()):
         self.cfg = cfg
         self.policy = policy
-        strat = assign_mod.STRATEGIES["gemm_fused"]
+        backend = get_backend("gemm_fused")
 
         def clean_step(x, centroids):
-            am, md, _ = strat(x, centroids)
+            am, md, _ = backend(x, centroids)
             new_c, counts = centroid_update(x, am, cfg.k, centroids,
                                             use_dmr=False)
             return new_c, am, jnp.sum(md), jnp.sqrt(jnp.sum((new_c - centroids) ** 2))

@@ -8,6 +8,11 @@ error occurs per detection/correction interval.
 
 Injection targets *compute results* (accumulators, products), never stored
 inputs: memory errors are ECC's job per the fault model.
+
+User-facing campaigns are configured through
+``repro.api.InjectionCampaign`` on a ``FaultPolicy``; the
+:class:`FaultConfig` here is the low-level descriptor those translate to
+(and what ``ft_gemm``/``checksum`` consume directly).
 """
 from __future__ import annotations
 
@@ -77,6 +82,25 @@ def inject_delta(key: jax.Array, x: jax.Array, cfg: FaultConfig) -> jax.Array:
     """
     corrupted = inject(key, x, cfg)
     return corrupted - x
+
+
+def draw_tile_injection(rng, m: int, k: int, f: int, params) -> jax.Array:
+    """Sample one in-kernel SEU for the fused FT kernel (campaign step).
+
+    Picks a random tile of the (m, k, f) grid under ``params`` tiling, a
+    random element of that tile, and a bit-flip-magnitude delta — the
+    paper's threadblock-level injection model mapped to TPU tiles.
+    ``params`` must already be clamped to the problem shape.
+    """
+    from repro.kernels.distance_argmin_ft import make_injection
+    mp = -(-m // params.block_m)
+    kp = -(-k // params.block_k)
+    fp = -(-f // params.block_f)
+    delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(4, 24))
+    return make_injection(int(rng.integers(mp)), int(rng.integers(kp)),
+                          int(rng.integers(fp)),
+                          int(rng.integers(params.block_m)),
+                          int(rng.integers(params.block_k)), delta)
 
 
 def host_injection_plan(cfg: FaultConfig, steps: int) -> list[Optional[tuple[int, int]]]:

@@ -1,37 +1,25 @@
-"""FT K-means — the paper's algorithm as a composable JAX module.
+"""K-means numerics + legacy shims.
 
-Lloyd iterations with: pluggable assignment strategy (the paper's stepwise
-ladder, see ``assignment.py``), DMR-protected centroid update (§IV intro),
-k-means++ / random init, mini-batch mode, empty-cluster reseeding, and an
-SEU injection campaign hook for the fault-tolerance benchmarks.
+The estimator front end lives in ``repro.api`` (:class:`repro.api.KMeans`,
+:class:`repro.api.FaultPolicy`). This module keeps the algorithmic pieces it
+is built from — initialization (k-means++ / random), the DMR-protected
+centroid update (paper §IV intro), empty-cluster reseeding — plus thin
+deprecation shims (:class:`KMeansConfig`, :class:`KMeans`,
+:func:`fit_kmeans`) that translate the old magic-string surface onto the
+typed one.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import assignment as assign_mod
 from repro.core import dmr as dmr_mod
 from repro.core.fault import FaultConfig
-from repro.kernels import ops, ref
-
-
-@dataclasses.dataclass(frozen=True)
-class KMeansConfig:
-    k: int
-    max_iters: int = 100
-    tol: float = 1e-4
-    init: str = "kmeans++"            # "kmeans++" | "random"
-    assignment: str = "fused"          # key into assignment.STRATEGIES
-    dmr_update: bool = True            # DMR on the memory-bound update phase
-    minibatch: Optional[int] = None    # None = full-batch Lloyd
-    seed: int = 0
-    dtype: str = "float32"
+from repro.kernels import ref
 
 
 class KMeansState(NamedTuple):
@@ -83,30 +71,34 @@ def init_kmeanspp(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# One Lloyd step
+# Centroid update (paper step 3: memory-bound, DMR-protected)
 # ---------------------------------------------------------------------------
 
-def centroid_update(x: jax.Array, assign: jax.Array, k: int,
-                    prev: jax.Array, *, use_dmr: bool = True):
-    """Means of assigned points; empty clusters keep their previous centroid.
+def protected_sums(x: jax.Array, assign: jax.Array, k: int, *,
+                   use_dmr: bool = True):
+    """Per-cluster (sums, counts), optionally under DMR.
 
-    The paper's step 3: memory-bound, protected by DMR (arithmetic is
-    duplicated over once-loaded data; <1 % overhead in the paper)."""
+    DMR duplicates the arithmetic over once-loaded data (<1 % overhead in
+    the paper); a mismatch triggers one recompute (fail-continue fix)."""
     def _sums(x, assign):
         return ref.centroid_update(x, assign, k)
 
-    if use_dmr:
-        (sums, counts), bad = dmr_mod.dmr(_sums, x, assign)
-        # SEU model: a mismatch triggers one recompute (fail-continue fix).
-        def recompute(_):
-            s, c = _sums(jax.lax.optimization_barrier(x),
-                         jax.lax.optimization_barrier(assign))
-            return s, c
-        sums, counts = jax.lax.cond(bad, recompute, lambda _: (sums, counts),
-                                    operand=None)
-    else:
-        sums, counts = _sums(x, assign)
+    if not use_dmr:
+        return _sums(x, assign)
+    (sums, counts), bad = dmr_mod.dmr(_sums, x, assign)
 
+    def recompute(_):
+        return _sums(jax.lax.optimization_barrier(x),
+                     jax.lax.optimization_barrier(assign))
+
+    return jax.lax.cond(bad, recompute, lambda _: (sums, counts),
+                        operand=None)
+
+
+def centroid_update(x: jax.Array, assign: jax.Array, k: int,
+                    prev: jax.Array, *, use_dmr: bool = True):
+    """Means of assigned points; empty clusters keep their previous centroid."""
+    sums, counts = protected_sums(x, assign, k, use_dmr=use_dmr)
     counts_safe = jnp.maximum(counts, 1.0)
     means = sums / counts_safe[:, None]
     return jnp.where((counts > 0)[:, None], means, prev), counts
@@ -123,104 +115,86 @@ def reseed_empty(key: jax.Array, x: jax.Array, centroids: jax.Array,
     return jnp.where((counts == 0)[:, None], x[donor], centroids)
 
 
-def make_step(cfg: KMeansConfig, params=None):
-    """Build a jit-able (x, centroids, inj_or_None) -> (state pieces) step."""
-    strat = assign_mod.STRATEGIES[cfg.assignment]
-
-    def step(x, centroids, inj=None):
-        if cfg.assignment == "fused_ft":
-            am, md, det = strat(x, centroids, params, inj=inj)
-        elif cfg.assignment == "fused":
-            am, md, det = strat(x, centroids, params)
-        else:
-            am, md, det = strat(x, centroids)
-        new_c, counts = centroid_update(
-            x, am, cfg.k, centroids, use_dmr=cfg.dmr_update)
-        inertia = jnp.sum(md)
-        shift = jnp.sqrt(jnp.sum((new_c - centroids) ** 2))
-        return new_c, am, counts, md, inertia, shift, det
-
-    return step
-
-
 # ---------------------------------------------------------------------------
-# Driver
+# Legacy shims (deprecated): magic-string config -> repro.api
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KMeansConfig:
+    """Deprecated: construct ``repro.api.KMeans`` with a ``FaultPolicy``."""
+
+    k: int
+    max_iters: int = 100
+    tol: float = 1e-4
+    init: str = "kmeans++"            # "kmeans++" | "random"
+    assignment: str = "fused"          # registered backend name
+    dmr_update: bool = True            # DMR on the memory-bound update phase
+    minibatch: Optional[int] = None    # None = full-batch Lloyd
+    seed: int = 0
+    dtype: str = "float32"
+
+
+def _policy_for(cfg: KMeansConfig, fault: Optional[FaultConfig]):
+    """Translate (assignment string, dmr_update, FaultConfig) -> FaultPolicy."""
+    from repro.api import FaultPolicy, InjectionCampaign, get_backend
+    backend = get_backend(cfg.assignment)
+    campaign = None
+    if fault is not None and fault.enabled() and backend.takes_injection:
+        campaign = InjectionCampaign(rate=fault.rate, bit_low=fault.bit_low,
+                                     bit_high=fault.bit_high, seed=fault.seed)
+    if backend.supports_ft:
+        mode = "correct" if backend.takes_injection else "detect"
+        return FaultPolicy(mode=mode, update_dmr=cfg.dmr_update,
+                           injection=campaign)
+    # unprotected assignment, but dmr_update is honoured independently
+    # (legacy default was DMR-on even for plain backends)
+    return FaultPolicy(mode="off", update_dmr=cfg.dmr_update)
+
+
+def _make_estimator(cfg: KMeansConfig, params,
+                    fault: Optional[FaultConfig] = None):
+    from repro.api import KMeans as ApiKMeans
+    return ApiKMeans(cfg.k, max_iter=cfg.max_iters, tol=cfg.tol,
+                     init=cfg.init, fault=_policy_for(cfg, fault),
+                     backend=cfg.assignment, batch_size=cfg.minibatch,
+                     params=params, random_state=cfg.seed)
+
 
 class KMeans:
-    """scikit-learn-flavoured front end over the jit'd Lloyd step."""
+    """Deprecated front end kept for compatibility; delegates to
+    ``repro.api.KMeans``. New code should use the typed API directly."""
 
     def __init__(self, cfg: KMeansConfig, params=None):
+        warnings.warn(
+            "repro.core.KMeans/KMeansConfig are deprecated; use "
+            "repro.api.KMeans(n_clusters=..., fault=FaultPolicy(...))",
+            DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.params = params
-        self._step = jax.jit(make_step(cfg, params))
+        # one estimator for the shim's lifetime so repeated fits reuse the
+        # jit cache (a per-fit FaultConfig only changes the host-side
+        # injection schedule, never the compiled step)
+        self._est = _make_estimator(cfg, params)
 
     def init_centroids(self, x: jax.Array, key: Optional[jax.Array] = None):
-        key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
-        fn = init_kmeanspp if self.cfg.init == "kmeans++" else init_random
-        return fn(key, x, self.cfg.k)
+        return self._est.init_centroids(x, key)
 
     def fit(self, x: jax.Array, *, centroids: Optional[jax.Array] = None,
             fault: Optional[FaultConfig] = None,
             on_iteration: Optional[Callable] = None) -> KMeansResult:
-        cfg = self.cfg
-        key = jax.random.PRNGKey(cfg.seed)
-        if centroids is None:
-            key, sub = jax.random.split(key)
-            centroids = self.init_centroids(x, sub)
-
-        total_det = jnp.zeros((), jnp.int32)
-        am = jnp.zeros((x.shape[0],), jnp.int32)
-        inertia = jnp.asarray(jnp.inf)
-        rng = np.random.default_rng(cfg.seed + 1)
-        it = 0
-        for it in range(cfg.max_iters):
-            batch = x
-            if cfg.minibatch is not None:
-                idx = rng.choice(x.shape[0], cfg.minibatch, replace=False)
-                batch = x[jnp.asarray(idx)]
-
-            inj = None
-            if cfg.assignment == "fused_ft":
-                inj = self._draw_injection(rng, batch, fault)
-
-            centroids, am_b, counts, md, inertia, shift, det = self._step(
-                batch, centroids, inj)
-            total_det = total_det + det
-            if cfg.minibatch is None:
-                am = am_b
-                centroids = reseed_empty(
-                    jax.random.fold_in(key, it), batch, centroids, counts, md)
-            if on_iteration is not None:
-                on_iteration(it, centroids, float(inertia), float(shift))
-            if float(shift) < cfg.tol:
-                break
-
-        if cfg.minibatch is not None:   # final full assignment
-            am, _, _ = assign_mod.STRATEGIES["gemm_fused"](x, centroids)
-        return KMeansResult(centroids, am, inertia, it + 1, total_det)
-
-    def _draw_injection(self, rng, batch, fault: Optional[FaultConfig]):
-        from repro.kernels.distance_argmin_ft import no_injection
-        if fault is None or not fault.enabled() or rng.uniform() > min(fault.rate, 1.0):
-            return no_injection()
-        m, f = batch.shape
-        k = self.cfg.k
-        from repro.core.autotune import lookup_params
-        p = self.params or lookup_params(m, k, f)
-        p = ops.clamp_params(m, k, f, p)
-        # Random tile/element + a large delta (bit-flip magnitude scale).
-        mp = -(-m // p.block_m)
-        kp = -(-k // p.block_k)
-        fp = -(-f // p.block_f)
-        from repro.kernels.distance_argmin_ft import make_injection
-        delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(4, 24))
-        return make_injection(int(rng.integers(mp)), int(rng.integers(kp)),
-                              int(rng.integers(fp)), int(rng.integers(p.block_m)),
-                              int(rng.integers(p.block_k)), delta)
+        est = self._est
+        est.fault = _policy_for(self.cfg, fault)
+        est.fit(x, centroids=centroids, on_iteration=on_iteration)
+        return KMeansResult(est.cluster_centers_, est.labels_,
+                            jnp.asarray(est.inertia_), est.n_iter_,
+                            jnp.asarray(est.detected_errors_, jnp.int32))
 
 
 def fit_kmeans(x, k: int, **kw) -> KMeansResult:
-    """Convenience one-shot API."""
-    cfg = KMeansConfig(k=k, **kw)
-    return KMeans(cfg).fit(x)
+    """Deprecated convenience one-shot API (``repro.api.KMeans(...).fit``)."""
+    warnings.warn("fit_kmeans is deprecated; use repro.api.KMeans",
+                  DeprecationWarning, stacklevel=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        cfg = KMeansConfig(k=k, **kw)
+        return KMeans(cfg).fit(x)

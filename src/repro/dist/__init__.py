@@ -1,0 +1,5 @@
+"""Distributed runtime: logical-axis sharding, data-parallel K-means,
+gradient compression. See ``sharding.py`` for the axis-name conventions."""
+from repro.dist import sharding
+
+__all__ = ["sharding"]

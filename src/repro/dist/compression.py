@@ -1,0 +1,50 @@
+"""Gradient/update compression for cross-host reductions.
+
+Blockwise int8 quantization with error feedback: the quantization residual
+is returned to the caller, who folds it into the *next* step's local value
+(standard EF-SGD), so the compression error accumulates as O(1) instead of
+O(steps).
+
+``compressed_psum`` here models the *numerics* of the scheme — it
+quantizes, dequantizes and psums the dequantized values, so accuracy and
+the error-feedback residual are exactly what a real int8 transport would
+produce. The wire-level byte reduction (~4x for f32 -> int8 + scales) is
+NOT realized by this simulation: XLA's psum still moves f32. Realizing it
+needs an int8 all-gather + local dequant-accumulate, which only pays off
+on real cross-pod links.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def quantize(x: jax.Array, block: int = BLOCK):
+    """Blockwise symmetric int8. Returns (q int8 (N/b, b), scale (N/b, 1))."""
+    n = x.shape[-1]
+    pad = (-n) % block
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(xp.shape[:-1] + (-1, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, n: int | None = None):
+    x = (q.astype(jnp.float32) * scale).reshape(q.shape[:-2] + (-1,))
+    return x if n is None else x[..., :n]
+
+
+def compressed_psum(g: jax.Array, axis_name: str, *, block: int = BLOCK):
+    """psum of the int8-quantized value + local error-feedback residual.
+
+    Inside shard_map: ``red, res = compressed_psum(grad + carried_res, ax)``.
+    """
+    q, scale = quantize(g, block)
+    deq = dequantize(q, scale, g.shape[-1])
+    res = g - deq
+    red = jax.lax.psum(deq, axis_name)
+    return red, res

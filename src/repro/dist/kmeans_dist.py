@@ -1,0 +1,151 @@
+"""Data-parallel FT K-means over a device mesh.
+
+Rows of X shard over the data axes; centroids replicate. Each Lloyd step
+runs the policy-resolved assignment backend on the local shard (the fused
+ABFT kernel protects each shard independently — SEU detection is local by
+construction) and ``psum``s per-cluster (sums, counts) across the mesh:
+the distributed equality ``mean = psum(sums) / psum(counts)`` makes the
+result bit-comparable to the single-device iteration.
+
+Accepts either a ``repro.api.KMeans`` estimator (preferred) or a legacy
+``KMeansConfig``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import data_axes
+from repro.kernels import ref
+
+
+class DistributedKMeans:
+    def __init__(self, config, mesh):
+        from repro.api import KMeans as ApiKMeans
+        if isinstance(config, ApiKMeans):
+            self.est = config
+        else:   # legacy KMeansConfig
+            from repro.core.kmeans import _make_estimator
+            self.est = _make_estimator(config, None)
+        self.mesh = mesh
+        self._daxes = data_axes(mesh)
+        assert self._daxes, ("DistributedKMeans needs a mesh with at least "
+                             "one data axis (got model-parallel-only mesh)")
+        self._row = self._daxes if len(self._daxes) > 1 else self._daxes[0]
+        self._dp = 1
+        for a in self._daxes:
+            self._dp *= mesh.shape[a]
+        self._step = None
+
+    # -- data placement -----------------------------------------------------
+
+    def shard_data(self, x: jax.Array) -> jax.Array:
+        x = jnp.asarray(x)
+        assert x.shape[0] % self._dp == 0, (
+            f"rows {x.shape[0]} must divide data parallelism {self._dp}")
+        return jax.device_put(
+            x, NamedSharding(self.mesh, P(self._row, None)))
+
+    # -- one psum'd Lloyd step ----------------------------------------------
+
+    def _shard_backend(self):
+        """The per-shard assignment backend. Off-TPU, Pallas kernels run in
+        interpret mode — Python-loop bound and far too slow to trace once
+        per shard — so they resolve to their jnp analogues with the same
+        protection level (fused_ft -> offline ABFT, fused -> XLA-fused)."""
+        from repro.api import get_backend
+        from repro.kernels.ops import on_tpu
+        backend = self.est._backend
+        if not on_tpu():
+            backend = get_backend({
+                "fused": "gemm_fused", "fused_ft": "abft_offline",
+            }.get(backend.name, backend.name))
+        return backend
+
+    def _build_step(self, m_local: int, f: int):
+        est = self.est
+        backend = self._shard_backend()
+        k = est.n_clusters
+        params = est._resolve_params(m_local, f) if backend.takes_params \
+            else None
+        daxes = self._daxes
+
+        use_dmr = est.fault.update_dmr
+
+        def local_step(x, c, inj):
+            am, md, det = backend(
+                x, c, params=params,
+                inj=inj if backend.takes_injection else None)
+            from repro.core.kmeans import protected_sums
+            sums, cnt = protected_sums(x, am, k, use_dmr=use_dmr)
+            sums = jax.lax.psum(sums, daxes)
+            cnt = jax.lax.psum(cnt, daxes)
+            inertia = jax.lax.psum(jnp.sum(md), daxes)
+            det = jax.lax.psum(det, daxes)
+            new_c = jnp.where((cnt > 0)[:, None],
+                              sums / jnp.maximum(cnt, 1.0)[:, None], c)
+            shift = jnp.sqrt(jnp.sum((new_c - c) ** 2))
+            return am, new_c, inertia, shift, det
+
+        return jax.jit(shard_map(
+            local_step, mesh=self.mesh,
+            in_specs=(P(self._row, None), P(None, None), P(None)),
+            out_specs=(P(self._row), P(None, None), P(), P(), P()),
+            check_rep=False))
+
+    # -- driver --------------------------------------------------------------
+
+    def fit(self, xs: jax.Array, centroids: jax.Array, *,
+            max_iters: Optional[int] = None, start_iteration: int = 0,
+            checkpointer=None, checkpoint_interval: int = 5):
+        """Run Lloyd iterations on sharded data.
+
+        Returns (centroids, assign, inertia, iterations, detected) —
+        ``iterations`` counts completed iterations from zero, so a restart
+        with ``start_iteration`` continues the same trajectory.
+        """
+        import numpy as np
+        est = self.est
+        max_iters = max_iters if max_iters is not None else est.max_iter
+        m, f = xs.shape
+        if self._step is None:
+            self._step = self._build_step(m // self._dp, f)
+        shard_backend = self._shard_backend()
+        if shard_backend.takes_injection:
+            rng = est._campaign_rng()
+            params = est._resolve_params(m // self._dp, f)
+        from repro.kernels.distance_argmin_ft import no_injection
+
+        centroids = jnp.asarray(centroids)
+        am = jnp.zeros((m,), jnp.int32)
+        inertia = jnp.asarray(jnp.inf)
+        total_det = jnp.zeros((), jnp.int32)
+        completed = start_iteration
+        saved = False
+        for it in range(start_iteration, max_iters):
+            inj = no_injection()
+            if shard_backend.takes_injection:
+                inj = est._draw_injection(rng, m // self._dp, f, params)
+            am, centroids, inertia, shift, det = self._step(
+                xs, centroids, inj)
+            total_det = total_det + det
+            completed = it + 1
+            saved = completed % checkpoint_interval == 0
+            if checkpointer is not None and saved:
+                checkpointer.save(completed, {
+                    "centroids": centroids,
+                    "iteration": jnp.asarray(completed, jnp.int32)})
+            if float(shift) < est.tol:
+                break
+        if checkpointer is not None and not saved and \
+                completed > start_iteration:
+            # final durable snapshot: a run that converges (or crashes the
+            # loop) between intervals must still be restartable
+            checkpointer.save(completed, {
+                "centroids": centroids,
+                "iteration": jnp.asarray(completed, jnp.int32)})
+        return centroids, am, inertia, completed, total_det

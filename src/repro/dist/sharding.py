@@ -1,0 +1,146 @@
+"""Logical-axis sharding: name-based specs over a (data, model) mesh.
+
+Parameters carry *logical* axis names (``("embed", "mlp")``, see
+``models/layers.py``); this module maps them onto mesh axes:
+
+  * model-parallel names ("mlp", "heads", "vocab", "experts", "seq_tp", ...)
+    shard over the ``model`` mesh axis;
+  * ``fsdp`` (promoted onto the embed dim of large weights by
+    :func:`fsdp_hint`) shards over the data axes — ZeRO-3 layout;
+  * everything else replicates.
+
+Activations use :func:`constrain` with the same names; it is a no-op
+outside a mesh context, so single-device code paths (CPU tests) run the
+exact code the 512-chip launch runs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical name -> mesh-axis role. "data" expands to the data axes of the
+# active mesh (("pod", "data") on multi-pod meshes).
+_MODEL_NAMES = frozenset(
+    {"mlp", "expert_mlp", "heads", "vocab", "experts", "seq_tp", "model"})
+_DATA_NAMES = frozenset({"batch", "fsdp", "data"})
+
+_FSDP_MIN_SIZE = 2 ** 20   # elements; below this replication is cheaper
+
+_state = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# Active-mesh context (explicit, not ambient jax state: works under jit)
+# ---------------------------------------------------------------------------
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def active_mesh() -> Optional[Mesh]:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is not None:
+        return mesh
+    # fall back to an enclosing `with mesh:` context if one is active
+    try:
+        env = jax.interpreters.pxla.thread_resources.env
+        phys = env.physical_mesh
+        if phys.axis_names:
+            return Mesh(phys.devices, phys.axis_names)
+    except Exception:
+        pass
+    return None
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything that isn't 'model').
+    Empty for a tensor-parallel-only mesh — never the 'model' axis, which
+    would let one PartitionSpec claim it twice."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# ---------------------------------------------------------------------------
+# Logical axes -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+def fsdp_hint(shape: tuple, axes: tuple) -> tuple:
+    """Promote the embed dim of large weights to 'fsdp' (ZeRO-3 layout).
+
+    Small tensors stay replicated: their all-gather latency costs more than
+    the memory they would save."""
+    size = 1
+    for s in shape:
+        size *= s
+    if size < _FSDP_MIN_SIZE:
+        return tuple(axes)
+    out = []
+    promoted = False
+    for s, name in zip(shape, axes):
+        if not promoted and name == "embed":
+            out.append("fsdp")
+            promoted = True
+        else:
+            out.append(name)
+    return tuple(out)
+
+
+def _spec_for(mesh: Mesh, shape: tuple, axes: tuple) -> P:
+    """One PartitionSpec: first divisible model-name dim gets 'model', first
+    data-name dim gets the data axes; a mesh axis is never used twice."""
+    daxes = data_axes(mesh)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    model_n = mesh.shape.get("model", 1)
+    spec: list = [None] * len(shape)
+    used_model = used_data = False
+    for i, (dim, name) in enumerate(zip(shape, axes)):
+        if name is None:
+            continue
+        if name in _MODEL_NAMES and not used_model and model_n > 1 \
+                and dim % model_n == 0:
+            spec[i] = "model"
+            used_model = True
+        elif name in _DATA_NAMES and not used_data and daxes \
+                and dp > 1 and dim % dp == 0:
+            spec[i] = daxes if len(daxes) > 1 else daxes[0]
+            used_data = True
+    return P(*spec)
+
+
+def shard_params(mesh: Mesh, params, axes):
+    """Attach NamedShardings to a params pytree from its logical-axes tree.
+
+    Works on both concrete arrays (device_put) and ShapeDtypeStructs
+    (returns SDS-with-sharding, for AOT compilation / the dry-run).
+    """
+    def leaf_axes(ax):
+        return isinstance(ax, tuple) and all(
+            a is None or isinstance(a, str) for a in ax)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_a = jax.tree_util.tree_flatten(axes, is_leaf=leaf_axes)[0]
+    out = []
+    for leaf, ax in zip(flat_p, flat_a):
+        ax = tuple(ax) if ax else (None,) * len(leaf.shape)
+        if len(ax) < len(leaf.shape):   # stacked ('layers', ...) prefix etc.
+            ax = (None,) * (len(leaf.shape) - len(ax)) + ax
+        sh = NamedSharding(mesh, _spec_for(mesh, leaf.shape, ax))
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            out.append(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                            sharding=sh))
+        else:
+            out.append(jax.device_put(leaf, sh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """Pin an activation's sharding by logical names; no-op without a mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = _spec_for(mesh, x.shape, tuple(logical_axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,14 @@
+"""Version compatibility for the Pallas TPU surface.
+
+The TPU compiler-parameter dataclass was renamed between JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this
+installation provides so the kernels lower on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # pragma: no cover - depends on installed jax
+    CompilerParams = pltpu.TPUCompilerParams

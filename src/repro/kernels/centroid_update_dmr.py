@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, a_ref, sums_ref, counts_ref, sums2_ref, counts2_ref,
             bad_ref):
@@ -101,7 +103,7 @@ def centroid_update_dmr(x: jax.Array, assign: jax.Array, k: int,
             jax.ShapeDtypeStruct((1, k), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, assign[:, None].astype(jnp.int32))

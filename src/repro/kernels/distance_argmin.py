@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_LIMIT = float(jnp.finfo(jnp.float32).max)
 
 
@@ -116,7 +118,7 @@ def distance_argmin(
             jax.ShapeDtypeStruct((m, 1), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((block_m, block_k), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 from repro.kernels.distance_argmin import NEG_LIMIT
 
 # Injection descriptor layout (SMEM scalars):
@@ -219,7 +221,7 @@ def distance_argmin_ft(
             pltpu.VMEM((block_m, 1), jnp.float32),
             pltpu.VMEM((block_m, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )

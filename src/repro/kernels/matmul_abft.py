@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 from repro.kernels.distance_argmin_ft import INJ_LEN, make_injection, no_injection  # re-export
 
 
@@ -156,7 +158,7 @@ def matmul_abft(
             pltpu.VMEM((block_m, 1), jnp.float32),
             pltpu.VMEM((block_m, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )

@@ -88,8 +88,8 @@ def fused_assign(
     ``sum(x**2, -1)`` for true squared distances.
     """
     if params is None:
-        from repro.core.autotune import lookup_params
-        params = lookup_params(x.shape[0], c.shape[0], x.shape[1])
+        from repro.api.cache import default_cache
+        params = default_cache().lookup(x.shape[0], c.shape[0], x.shape[1])
     params = clamp_params(x.shape[0], c.shape[0], x.shape[1], params)
     if interpret is None:
         interpret = not on_tpu()
@@ -114,8 +114,8 @@ def fused_assign_ft(
     Returns (assign, partial min distance, corrected_error_count).
     """
     if params is None:
-        from repro.core.autotune import lookup_params
-        params = lookup_params(x.shape[0], c.shape[0], x.shape[1])
+        from repro.api.cache import default_cache
+        params = default_cache().lookup(x.shape[0], c.shape[0], x.shape[1])
     params = clamp_params(x.shape[0], c.shape[0], x.shape[1], params)
     if interpret is None:
         interpret = not on_tpu()

@@ -70,7 +70,10 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        with jax.set_mesh(mesh):
+        # jax >= 0.6 spells the ambient-mesh context jax.set_mesh; older
+        # releases use the Mesh itself as the context manager
+        set_mesh = getattr(jax, "set_mesh", None)
+        with (set_mesh(mesh) if set_mesh is not None else mesh):
             if shape.kind == "train":
                 bundle = build_train_step(cfg, mesh, shape)
             else:
@@ -82,6 +85,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):   # jax < 0.5 returns one dict per device
+            cost = cost[0] if cost else None
         hlo = compiled.as_text()
         t_an = time.time()
         analyzed = analyze_hlo(hlo)   # loop-aware (scan bodies x trip count)

@@ -142,8 +142,33 @@ class HloModule:
                 if depth == 0:
                     break
             args += ch
-        return [a.strip().lstrip("%") for a in args.split(",")
+        # operand uses are %-prefixed in optimized dumps ("f32[8]{0} %x");
+        # naive comma-splitting breaks on layout braces like {1,0}
+        named = re.findall(r"%([\w.\-]+)", args)
+        if named:
+            return named
+        return [a.strip() for a in args.split(",")
                 if a.strip() and not a.strip()[0].isdigit()]
+
+    def _trip_count(self, instr: Instr) -> float:
+        """While trip count: backend_config known_trip_count when present
+        (TPU), else recovered from the `i < N` condition of the canonical
+        scan lowering (CPU dumps omit the annotation)."""
+        t = _TRIP_RE.search(instr.line)
+        if t:
+            return float(t.group(1))
+        cond = _COND_RE.search(instr.line)
+        if cond:
+            for ci in self.computations.get(cond.group(1), []):
+                if ci.op != "compare" or "direction=LT" not in ci.line:
+                    continue
+                for name in self._operands(ci.line):
+                    bound = self.defs.get(name)
+                    if bound is not None and bound.op == "constant":
+                        m = re.search(r"constant\((\d+)\)", bound.line)
+                        if m:
+                            return float(m.group(1))
+        return 1.0
 
     def _instr_bytes(self, instr: Instr) -> int:
         """Materialization-traffic model: every non-alias op's output is
@@ -168,8 +193,7 @@ class HloModule:
             for instr in self.computations.get(comp_name, []):
                 mult = 1.0
                 if instr.op == "while":
-                    t = _TRIP_RE.search(instr.line)
-                    mult = float(t.group(1)) if t else 1.0
+                    mult = self._trip_count(instr)
                     body = _CALL_RE.search(instr.line)
                     if body:
                         f, b, c = visit(body.group(1))

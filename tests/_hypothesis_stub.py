@@ -1,0 +1,59 @@
+"""Deterministic fallback for the ``hypothesis`` property-testing API.
+
+When hypothesis is installed (see requirements-dev.txt) the real library is
+used; otherwise this stub expands ``@given(...)`` into a seeded
+``pytest.mark.parametrize`` sweep — fewer, deterministic examples, but the
+suite collects and the properties still get exercised.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+import pytest
+
+N_EXAMPLES = 10
+_SEED = 20240801
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:           # inclusive bounds
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+st = strategies
+
+
+def settings(**_kw):
+    """No-op decorator factory (max_examples etc. are fixed in the stub)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Expand into N_EXAMPLES deterministic cases via parametrize."""
+    def deco(fn):
+        names = [p for p in inspect.signature(fn).parameters
+                 if p != "self"][-len(strats):]
+        rng = np.random.default_rng(_SEED)
+        cases = [tuple(s.sample(rng) for s in strats)
+                 for _ in range(N_EXAMPLES)]
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+    return deco

@@ -16,7 +16,10 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: without the pin, jax probes the TPU plugin, which retries
+    # cloud metadata fetches for minutes on non-TPU hosts. The 8 virtual
+    # devices come from xla_force_host_platform_device_count either way.
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=timeout)
@@ -129,18 +132,20 @@ class TestDistributedKMeans:
         cfg = get_config("internlm2-1.8b", smoke=True)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         shape = ShapeConfig("tiny", 32, 8, "train")
-        b = build_train_step(cfg, mesh, shape,
-                             TrainConfig(grad_accum=2, total_steps=4))
+        # 4-step smoke: no warmup, lr high enough that descent beats noise
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0,
+                           total_steps=4, grad_accum=2)
+        b = build_train_step(cfg, mesh, shape, tcfg)
         lm = b.lm
         params, axes = lm.init(jax.random.PRNGKey(0))
         from repro.dist.sharding import shard_params
         params = shard_params(mesh, params, axes)
         from repro.train.optimizer import init_opt_state
-        opt = init_opt_state(params, TrainConfig(grad_accum=2))
+        opt = init_opt_state(params, tcfg)
         pipe = TokenPipeline(cfg.vocab_size, 32, 8)
+        batch = pipe.next_batch(0)   # fixed batch: loss must descend
         losses = []
         for step in range(4):
-            batch = pipe.next_batch(step)
             params, opt, m = b.step_fn(params, opt, batch)
             losses.append(float(m["loss"]))
         print("LOSSES", losses)

@@ -17,7 +17,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def run_dryrun(args, timeout=560):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # pin CPU: the TPU plugin probe retries cloud metadata for minutes here
+    env["JAX_PLATFORMS"] = "cpu"
     env.pop("XLA_FLAGS", None)   # dryrun.py sets its own
     return subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun"] + args,

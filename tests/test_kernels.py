@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # deterministic fallback (see _hypothesis_stub)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.autotune import parameter_space, feasible
 from repro.kernels import ops, ref

@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import get_backend
 from repro.core import (KMeans, KMeansConfig, FaultConfig, baselines, dmr)
-from repro.core import assignment as assign_mod
 from repro.core.kmeans import init_kmeanspp, reseed_empty
 from repro.data.blobs import make_blobs
 from repro.kernels import ref
@@ -35,7 +35,7 @@ class TestStrategiesAgree:
     def test_assignment_matches_reference(self, strategy, blobs):
         x, _ = blobs
         c = x[:16]
-        am, md, det = assign_mod.STRATEGIES[strategy](x, c)
+        am, md, det = get_backend(strategy)(x, c)
         d_ref = ref.distance_matrix(x, c)
         ram = jnp.argmin(d_ref, axis=1)
         assert float(jnp.mean((am == ram).astype(jnp.float32))) > 0.999
@@ -43,7 +43,7 @@ class TestStrategiesAgree:
     def test_fused_pallas_matches(self, blobs):
         x, _ = blobs
         c = x[:16]
-        am, md, det = assign_mod.STRATEGIES["fused"](x, c)
+        am, md, det = get_backend("fused")(x, c)
         ram = jnp.argmin(ref.distance_matrix(x, c), axis=1)
         assert float(jnp.mean((am == ram).astype(jnp.float32))) > 0.999
 

@@ -73,15 +73,30 @@ class TestSchedules:
 
 
 class TestAutotuneTable:
-    def test_build_and_lookup_roundtrip(self, tmp_path, monkeypatch):
-        import repro.core.autotune as at
+    def test_build_and_lookup_roundtrip(self, tmp_path):
+        from repro.api import AutotuneCache, shape_bucket
         path = str(tmp_path / "table.json")
-        monkeypatch.setenv(at._TABLE_ENV, path)
-        monkeypatch.setattr(at, "_cached_table", None)
-        table = at.build_table([(16384, 64, 64), (131072, 128, 128)],
-                               mode="model", path=path)
+        cache = AutotuneCache(path)
+        table = cache.build([(16384, 64, 64), (131072, 128, 128)],
+                            mode="model")
         assert len(table) == 2
-        p = at.lookup_params(16384, 64, 64)
+        p = cache.lookup(16384, 64, 64)
         assert [p.block_m, p.block_k, p.block_f] == table["14-6-6"]
+        # a fresh cache instance reloads the persisted winners
+        fresh = AutotuneCache(path)
+        q = fresh.lookup(131072, 128, 128)
+        assert [q.block_m, q.block_k, q.block_f] == \
+            table[shape_bucket(131072, 128, 128)]
         with open(path) as fh:
             assert json.load(fh) == table
+
+    def test_caches_are_isolated_per_instance(self, tmp_path):
+        from repro.api import AutotuneCache
+        from repro.kernels.ops import KernelParams
+        a = AutotuneCache(str(tmp_path / "a.json"))
+        b = AutotuneCache()               # in-memory only
+        a.put(1024, 64, 64, KernelParams(64, 128, 128))
+        pa = a.lookup(1024, 64, 64)
+        pb = b.lookup(1024, 64, 64)       # falls back to the model winner
+        assert [pa.block_m, pa.block_k, pa.block_f] == [64, 128, 128]
+        assert (pb.block_m, pb.block_k, pb.block_f) != (0, 0, 0)
