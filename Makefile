@@ -12,8 +12,8 @@ test-fast:       ## API + kmeans + kernels only (quick signal)
 bench:           ## all paper-figure benchmark modules
 	$(PY) -m benchmarks.run
 
-bench-smoke:     ## one fast module (Fig. 7 ladder) as a smoke check
-	$(PY) -m benchmarks.bench_stepwise
+bench-smoke:     ## Fig. 7 ladder at tiny shapes (interpret-mode Pallas rung)
+	$(PY) -m benchmarks.bench_stepwise --smoke --model --json BENCH_stepwise.json
 
 quickstart:
 	$(PY) examples/quickstart.py

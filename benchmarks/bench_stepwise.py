@@ -2,20 +2,40 @@
 
 Walks the registered assignment backends in ladder order — naive (per-sample
 loop, no GEMM) -> V1 GEMM + separate reduction -> V2/V3 fused reduction
-(cuML analogue) -> V4 low-precision — through the ``repro.api`` registry
-(uniform ``backend(x, c)`` calls, no magic strings), then times one full
-``repro.api.KMeans`` iteration loop with and without a ``FaultPolicy`` to
-anchor the ladder in estimator terms.
+(cuML analogue) -> V4 low-precision -> V5 one-pass Lloyd (this repo's
+fused-update iteration, DESIGN.md §3) — through the ``repro.api`` registry,
+then times one full ``repro.api.KMeans`` iteration loop with and without a
+``FaultPolicy`` to anchor the ladder in estimator terms.
+
+The one-pass rung is measured at *iteration* granularity against the
+two-pass pipeline (fused assignment, separate centroid update): the paper's
+Fig. 4 argument is about per-iteration HBM traffic, so that is what the
+pair of rungs compares. ``--model`` additionally emits the analytical
+per-iteration HBM byte table (``autotune.iteration_traffic``) that the
+DESIGN.md §3 table is generated from.
+
+CLI:
+  --smoke        tiny shapes + the Pallas one-pass kernel in interpret mode
+                 (CI wiring; wall-times are then smoke signals, not data)
+  --json PATH    write rows + traffic model to PATH (CI artifact)
+  --model        print the HBM traffic model rows
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import distance_flops, gflops, row, time_call
 from repro.api import FaultPolicy, KMeans, get_backend
+from repro.core.autotune import iteration_traffic
+from repro.core.kmeans import centroid_update, means_from_sums
+from repro.kernels.ops import KernelParams, clamp_params
 
 M, K, F = 16_384, 128, 128   # paper Fig. 7: M=131072, N=128 (scaled to CPU)
+SMOKE_M, SMOKE_K, SMOKE_F = 1024, 16, 32
 
 LADDER = [                    # (row label, registered backend)
     ("fig7_naive", "naive"),
@@ -31,11 +51,35 @@ def _bf16_fused(x, c):
     return jnp.argmin(d, axis=1), jnp.min(d, axis=1)
 
 
-def run() -> list[str]:
+def _traffic_rows(m: int, k: int, f: int) -> tuple[list[str], dict]:
+    """Model-mode verification of the DESIGN.md §3 byte table: per-iteration
+    HBM traffic of the two-pass pipeline vs the one-pass kernel."""
+    p = clamp_params(m, k, f, KernelParams())
+    two = iteration_traffic(m, k, f, p, pipeline="two_pass")
+    one = iteration_traffic(m, k, f, p, pipeline="one_pass")
+    rows = []
+    for name, t in (("model_twopass_hbm", two), ("model_onepass_hbm", one)):
+        rows.append(row(name, 0.0,
+                        f"x_read={t['x_read']};total={t['total']}"))
+    rows.append(row("model_onepass_saving", 0.0,
+                    f"x{two['total'] / one['total']:.2f}"))
+    return rows, {"two_pass": two, "one_pass": one}
+
+
+def run(smoke: bool = False, model: bool = False) -> list[str]:
+    """run.py contract: the printable CSV rows."""
+    return _collect(smoke=smoke, model=model)[0]
+
+
+def _collect(smoke: bool = False, model: bool = False
+             ) -> tuple[list[str], dict]:
+    """The ladder rows plus the machine-readable artifact payload (single
+    source of truth for the shape and traffic model)."""
+    m, k, f = (SMOKE_M, SMOKE_K, SMOKE_F) if smoke else (M, K, F)
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (M, F), jnp.float32)
-    c = jax.random.normal(jax.random.PRNGKey(1), (K, F), jnp.float32)
-    fl = distance_flops(M, K, F)
+    x = jax.random.normal(key, (m, f), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (k, f), jnp.float32)
+    fl = distance_flops(m, k, f)
     out = []
 
     base = None
@@ -53,16 +97,83 @@ def run() -> list[str]:
     out.append(row("fig7_v4_lowprec_tuned", t,
                    f"GFLOPS={gflops(fl, t):.1f};x{base / t:.2f}"))
 
+    # --- iteration-granularity pair: two-pass vs one-pass Lloyd ----------
+    # two-pass (seed pipeline): fused assignment kernel, then a separate
+    # update launch that re-reads X — two dispatches, argmin round trip.
+    assign = jax.jit(lambda x, c: get_backend("gemm_fused")(x, c)[0])
+    update = jax.jit(lambda x, am, c: centroid_update(x, am, k, c,
+                                                      use_dmr=False))
+
+    def two_pass_iter():
+        am = assign(x, c)
+        jax.block_until_ready(am)      # the inter-kernel HBM round trip
+        return update(x, am, c)
+
+    t_two = time_call(two_pass_iter)
+    out.append(row("fig7_v4_fused_twopass", t_two,
+                   f"GFLOPS={gflops(fl, t_two):.1f};x{base / t_two:.2f}"))
+
+    # one-pass: assignment + update in a single fused launch (lloyd_xla is
+    # the XLA analogue of kernels/lloyd_step.py; benchmarks/common.py
+    # explains why CPU perf points avoid Pallas interpret mode).
+    onepass_backend = get_backend("lloyd_xla")
+
+    def onepass(x, c):
+        am, md, det, sums, counts = onepass_backend(x, c)
+        return means_from_sums(sums, counts, c), am
+
+    one_fn = jax.jit(onepass)
+    t_one = time_call(one_fn, x, c)
+    out.append(row("fig7_v5_onepass", t_one,
+                   f"GFLOPS={gflops(fl, t_one):.1f};x{base / t_one:.2f};"
+                   f"vs_twopass=x{t_two / t_one:.2f}"))
+
+    if smoke:
+        # CI smoke: drive the real Pallas one-pass kernel (interpret mode)
+        # end-to-end through the estimator at the tiny shape.
+        from repro.kernels import ops
+        t = time_call(lambda: jax.block_until_ready(
+            ops.fused_lloyd(x, c, KernelParams(256, 128, 128))), iters=2,
+            warmup=1)
+        out.append(row("fig7_v5_onepass_pallas_interp", t, "interpret=True"))
+
     # estimator-level anchor: 4 Lloyd iterations, unprotected vs FT policy
     for label, policy in (("fig7_e2e_off", FaultPolicy.off()),
                           ("fig7_e2e_detect", FaultPolicy.detect())):
-        km = KMeans(n_clusters=K, max_iter=4, tol=0.0, fault=policy,
+        km = KMeans(n_clusters=k, max_iter=4, tol=0.0, fault=policy,
                     random_state=0)
         c0 = km.init_centroids(x)
         t = time_call(lambda: km.fit(x, centroids=c0), iters=2, warmup=1)
         out.append(row(label, t, f"mode={policy.mode}"))
-    return out
+
+    traffic_rows, traffic = _traffic_rows(m, k, f)
+    if model:
+        out.extend(traffic_rows)
+    payload = {
+        "shape": {"m": m, "k": k, "f": f},
+        "smoke": smoke,
+        "rows": [r.split(",", 2) for r in out],
+        "traffic_model_bytes": traffic,
+    }
+    return out, payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + Pallas interpret rung (CI)")
+    ap.add_argument("--model", action="store_true",
+                    help="emit the analytical HBM traffic rows")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + traffic model to PATH")
+    args = ap.parse_args(argv)
+    rows, payload = _collect(smoke=args.smoke,
+                             model=args.model or bool(args.json))
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -9,6 +9,14 @@ untestable and shared across every estimator in the process.
 and is passed per-estimator (``KMeans(..., autotune=cache)``), so two
 estimators can run with different tables in one process and tests get a
 fresh cache per case.
+
+Schema v2: entries are keyed by *kernel kind* as well as shape bucket. The
+assignment-only kernel and the one-pass Lloyd kernel share a tile-parameter
+type but have different VMEM footprints and traffic profiles, so a winner
+tuned for one must never be handed to the other (the v1 table, keyed only
+by shape, did exactly that). v1 files still load: their flat entries are
+interpreted as ``assign``-kind winners; other kinds fall through to the
+analytical selector.
 """
 from __future__ import annotations
 
@@ -24,6 +32,8 @@ _DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "core", "autotune_table.json")
 _PATH_ENV = "REPRO_AUTOTUNE_TABLE"   # still honoured, but only here
 
+SCHEMA_VERSION = 2
+
 
 def shape_bucket(m: int, k: int, f: int) -> str:
     """log2 bucket per dimension — the paper's 64-discrete-sizes granularity:
@@ -33,7 +43,7 @@ def shape_bucket(m: int, k: int, f: int) -> str:
 
 
 class AutotuneCache:
-    """Shape-bucketed winner table with lazy file backing.
+    """Kind- and shape-bucketed winner table with lazy file backing.
 
     path=None keeps the cache purely in-memory; a string path loads the
     JSON table on first lookup and ``save()`` writes winners back.
@@ -41,8 +51,8 @@ class AutotuneCache:
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
-        self._table: Optional[dict[str, list[int]]] = None
-        self._computed: dict[tuple[int, int, int], KernelParams] = {}
+        self._table: Optional[dict[str, dict[str, list[int]]]] = None
+        self._computed: dict[tuple, KernelParams] = {}
         self._lock = threading.RLock()   # build() holds it across put/save
 
     @classmethod
@@ -55,59 +65,77 @@ class AutotuneCache:
 
     def _load(self) -> dict:
         if self._table is None:
-            table: dict[str, list[int]] = {}
+            kinds: dict[str, dict[str, list[int]]] = {}
             if self.path and os.path.exists(self.path):
                 with open(self.path) as fh:
-                    table = json.load(fh)
-            self._table = table
+                    raw = json.load(fh)
+                if isinstance(raw, dict) and raw.get("schema", 1) >= 2:
+                    kinds = {k: dict(v) for k, v in raw["kinds"].items()}
+                else:
+                    # legacy v1 flat {bucket: blocks}: those winners were
+                    # tuned for the assignment-only kernel
+                    kinds = {"assign": dict(raw)}
+            self._table = kinds
         return self._table
 
     def save(self, path: Optional[str] = None) -> str:
-        """Persist the current table (sorted, stable) and return the path."""
+        """Persist the current table (schema v2, sorted, stable) and return
+        the path. Legacy v1 tables are upgraded on save."""
         path = path or self.path
         if not path:
             raise ValueError("AutotuneCache has no backing path to save to")
         with self._lock:
-            table = self._load()   # before open(..., "w") truncates the file
+            kinds = self._load()   # before open(..., "w") truncates the file
             with open(path, "w") as fh:
-                json.dump(table, fh, indent=1, sort_keys=True)
+                json.dump({"schema": SCHEMA_VERSION, "kinds": kinds},
+                          fh, indent=1, sort_keys=True)
         return path
 
     # -- lookup / update ---------------------------------------------------
 
-    def put(self, m: int, k: int, f: int, params: KernelParams) -> None:
+    def put(self, m: int, k: int, f: int, params: KernelParams, *,
+            kind: str = "assign") -> None:
         with self._lock:
-            self._load()[shape_bucket(m, k, f)] = [
+            self._load().setdefault(kind, {})[shape_bucket(m, k, f)] = [
                 params.block_m, params.block_k, params.block_f]
 
-    def lookup(self, m: int, k: int, f: int) -> KernelParams:
-        """Persisted winner for the shape bucket, else the analytical winner
-        computed on the fly (memoized per cache instance)."""
+    def lookup(self, m: int, k: int, f: int, *,
+               kind: str = "assign") -> KernelParams:
+        """Persisted winner for (kind, shape bucket), else the analytical
+        winner for that kind computed on the fly (memoized per cache
+        instance). An entry of a *different* kind is never returned —
+        that's the v1 bug this schema fixes."""
         with self._lock:
-            hit = self._load().get(shape_bucket(m, k, f))
+            hit = self._load().get(kind, {}).get(shape_bucket(m, k, f))
             if hit is not None:
                 bm, bk, bf = hit
                 return KernelParams(bm, bk, bf)
-            key = (m, k, f)
+            key = (m, k, f, kind)
             if key not in self._computed:
                 from repro.core.autotune import select_params
-                self._computed[key] = select_params(m, k, f, mode="model")
+                self._computed[key] = select_params(m, k, f, mode="model",
+                                                    kind=kind)
             return self._computed[key]
 
     def build(self, shapes: Iterable[tuple[int, int, int]], *,
-              mode: str = "model", dtype=None) -> dict:
-        """Run the selection pipeline over ``shapes``, record the winners,
-        and persist if file-backed. Returns the bucket -> blocks table."""
+              mode: str = "model", dtype=None,
+              kinds: Iterable[str] = ("assign",)) -> dict:
+        """Run the selection pipeline over ``shapes`` for each kernel kind,
+        record the winners, and persist if file-backed. Returns the
+        kind -> bucket -> blocks table."""
         import jax.numpy as jnp
         from repro.core.autotune import select_params
         dtype = dtype if dtype is not None else jnp.float32
         with self._lock:
-            for (m, k, f) in shapes:
-                self.put(m, k, f,
-                         select_params(m, k, f, mode=mode, dtype=dtype))
+            for kind in kinds:
+                for (m, k, f) in shapes:
+                    self.put(m, k, f,
+                             select_params(m, k, f, mode=mode, dtype=dtype,
+                                           kind=kind),
+                             kind=kind)
             if self.path:
                 self.save()
-            return dict(self._load())
+            return {k: dict(v) for k, v in self._load().items()}
 
 
 _default_cache: Optional[AutotuneCache] = None

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.api.cache import AutotuneCache, default_cache
 from repro.api.policy import FaultPolicy, InjectionCampaign
-from repro.api.registry import AssignmentBackend
+from repro.api.registry import AssignmentBackend, BackendCapabilityError
 from repro.kernels import ops, ref
 
 _INITS = ("kmeans++", "random")
@@ -31,6 +31,15 @@ _INITS = ("kmeans++", "random")
 
 class NotFittedError(RuntimeError):
     pass
+
+
+def _host_read(value):
+    """The single device->host funnel of the fit loop.
+
+    Every synchronization the full-batch fit performs goes through here —
+    once per ``sync_every``-iteration chunk plus once for the final
+    counters — so tests can count host transfers by patching one name."""
+    return jax.device_get(value)
 
 
 class KMeans:
@@ -48,6 +57,10 @@ class KMeans:
                 ``partial_fit`` streams caller-provided batches either way.
     params:     explicit :class:`KernelParams` tile override.
     autotune:   injectable :class:`AutotuneCache`; default = process cache.
+    sync_every: full-batch ``fit`` runs the Lloyd loop device-resident in
+                chunks of this many iterations (a ``lax.scan`` with the
+                convergence test on device); the host observes progress —
+                and replays ``on_iteration`` — only at chunk boundaries.
 
     Fitted attributes: ``cluster_centers_``, ``labels_``, ``inertia_``,
     ``n_iter_``, ``detected_errors_``.
@@ -60,11 +73,14 @@ class KMeans:
                  batch_size: Optional[int] = None,
                  params=None,
                  autotune: Optional[AutotuneCache] = None,
+                 sync_every: int = 10,
                  random_state: int = 0):
         if n_clusters < 1:
             raise ValueError(f"n_clusters must be >= 1, got {n_clusters}")
         if init not in _INITS:
             raise ValueError(f"init must be one of {_INITS}, got {init!r}")
+        if sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
         self.n_clusters = n_clusters
         self.max_iter = max_iter
         self.tol = tol
@@ -74,10 +90,17 @@ class KMeans:
         self.batch_size = batch_size
         self.params = params
         self.autotune = autotune if autotune is not None else default_cache()
+        self.sync_every = sync_every
         self.random_state = random_state
 
         self._backend: AssignmentBackend = self.fault.resolve_backend(backend)
+        if self.fault.update_dmr and self._backend.fuses_update:
+            raise BackendCapabilityError(
+                f"backend {self._backend.name!r} fuses the centroid update "
+                f"into the assignment kernel; DMR on the update step "
+                f"(FaultPolicy.update_dmr=True) requires a two-pass backend")
         self._step_cache: dict = {}
+        self._n_host_syncs: int = 0   # fit-loop host reads (observability)
         # streaming state (partial_fit)
         self._counts: Optional[jax.Array] = None
 
@@ -97,19 +120,35 @@ class KMeans:
                 "this KMeans instance is not fitted yet; call fit() or "
                 "partial_fit() first")
 
-    def _resolve_params(self, m: int, f: int):
+    def _resolve_params(self, m: int, f: int, *, backend=None):
         """Tile selection for one problem shape: explicit override, else the
-        injectable autotune cache (paper §III-B table lookup)."""
-        if not self._backend.takes_params:
+        injectable autotune cache (paper §III-B table lookup). One-pass
+        backends consult the ``lloyd``-kind entries — an assignment-only
+        winner must never be handed to the fused-update kernel."""
+        backend = backend if backend is not None else self._backend
+        if not backend.takes_params:
             return None
-        p = self.params or self.autotune.lookup(m, self.n_clusters, f)
+        kind = "lloyd" if backend.fuses_update else "assign"
+        p = self.params or self.autotune.lookup(m, self.n_clusters, f,
+                                                kind=kind)
         return ops.clamp_params(m, self.n_clusters, f, p)
+
+    def _predict_backend(self) -> AssignmentBackend:
+        """Prediction is assignment-only. A one-pass backend would compute
+        the whole fused-update epilogue and throw it away (Pallas outputs
+        are not dead-code-eliminated), so predict/score route through the
+        matching assignment kernel instead."""
+        from repro.api.registry import get_backend
+        b = self._backend
+        if not b.fuses_update:
+            return b
+        return get_backend("fused" if b.takes_params else "gemm_fused")
 
     def _assign_fn(self, params):
         """jit'd (x, c[, inj]) -> (assign, true sq-dist, detected)."""
         key = ("assign", params)
         if key not in self._step_cache:
-            backend = self._backend
+            backend = self._predict_backend()
             if backend.takes_injection:
                 fn = jax.jit(lambda x, c, inj: backend(
                     x, c, params=params, inj=inj))
@@ -118,18 +157,30 @@ class KMeans:
             self._step_cache[key] = fn
         return self._step_cache[key]
 
+    def _apply_update(self, out, x, centroids):
+        """One centroid update from a backend result: one-pass backends
+        already carry (sums, counts); two-pass backends pay the second
+        pass over X (optionally DMR-protected)."""
+        from repro.core.kmeans import centroid_update, means_from_sums
+        if self._backend.fuses_update:
+            am, md, det, sums, counts = out
+            new_c = means_from_sums(sums, counts, centroids)
+        else:
+            am, md, det = out
+            new_c, counts = centroid_update(x, am, self.n_clusters, centroids,
+                                            use_dmr=self.fault.update_dmr)
+        return am, md, det, new_c, counts
+
     def _lloyd_step_fn(self, params):
-        """jit'd full Lloyd step: assignment + (DMR-)protected update."""
-        from repro.core.kmeans import centroid_update
+        """jit'd full Lloyd step: assignment + update (fused or two-pass)."""
         key = ("lloyd", params)
         if key not in self._step_cache:
-            backend, k = self._backend, self.n_clusters
-            use_dmr = self.fault.update_dmr
+            backend = self._backend
 
             def step(x, centroids, inj=None):
-                am, md, det = backend(x, centroids, params=params, inj=inj)
-                new_c, counts = centroid_update(x, am, k, centroids,
-                                                use_dmr=use_dmr)
+                out = backend(x, centroids, params=params, inj=inj)
+                am, md, det, new_c, counts = self._apply_update(
+                    out, x, centroids)
                 inertia = jnp.sum(md)
                 shift = jnp.sqrt(jnp.sum((new_c - centroids) ** 2))
                 return new_c, am, counts, md, inertia, shift, det
@@ -146,10 +197,15 @@ class KMeans:
         if key not in self._step_cache:
             backend, k = self._backend, self.n_clusters
             use_dmr = self.fault.update_dmr
+            fuses = backend.fuses_update
 
             def step(x, centroids, counts, inj=None):
-                am, md, det = backend(x, centroids, params=params, inj=inj)
-                sums, bcnt = protected_sums(x, am, k, use_dmr=use_dmr)
+                out = backend(x, centroids, params=params, inj=inj)
+                if fuses:   # block sums/counts come out of the kernel
+                    am, md, det, sums, bcnt = out
+                else:
+                    am, md, det = out
+                    sums, bcnt = protected_sums(x, am, k, use_dmr=use_dmr)
                 new_counts = counts + bcnt
                 eta = (bcnt / jnp.maximum(new_counts, 1.0))[:, None]
                 bmean = sums / jnp.maximum(bcnt, 1.0)[:, None]
@@ -161,6 +217,63 @@ class KMeans:
             static = () if backend.takes_injection else ("inj",)
             self._step_cache[key] = jax.jit(step, static_argnames=static)
         return self._step_cache[key]
+
+    def _chunk_fn(self, params, n_steps: int):
+        """jit'd device-resident chunk of up to ``n_steps`` Lloyd iterations.
+
+        The convergence test runs on device inside a ``lax.scan``: once the
+        centroid shift drops below ``tol`` the remaining steps freeze into
+        carry passthroughs (a ``lax.cond`` whose dead branch costs nothing),
+        so a chunk never round-trips to the host mid-flight. The stacked
+        per-iteration history (centroids, inertia, shift, active mask) lets
+        the host replay ``on_iteration`` faithfully at the chunk boundary.
+        """
+        from repro.core.kmeans import reseed_empty
+        tol = self.tol   # baked into the trace -> part of the cache key
+        cache_key = ("chunk", params, n_steps, tol)
+        if cache_key in self._step_cache:
+            return self._step_cache[cache_key]
+        backend = self._backend
+        takes_inj = backend.takes_injection
+        takes_params = backend.takes_params
+
+        def chunk(plan, centroids, am0, det0, inertia0, key, it0, inj_stack):
+            def body(carry, xs):
+                centroids, am, inertia, done, det = carry
+                inj, t = xs
+
+                def live(_):
+                    xa = plan if takes_params else plan.x
+                    out = backend(xa, centroids,
+                                  params=params if takes_params else None,
+                                  inj=inj if takes_inj else None)
+                    am_b, md, det_i, new_c, counts = self._apply_update(
+                        out, plan.x, centroids)
+                    inertia_i = jnp.sum(md)
+                    shift = jnp.sqrt(jnp.sum((new_c - centroids) ** 2))
+                    new_c = reseed_empty(jax.random.fold_in(key, it0 + t),
+                                         plan.x, new_c, counts, md)
+                    return (new_c, am_b, inertia_i, shift,
+                            det + det_i.astype(jnp.int32))
+
+                def frozen(_):
+                    return centroids, am, inertia, jnp.float32(0.0), det
+
+                new_c, am_n, inertia_n, shift, det_n = jax.lax.cond(
+                    done, frozen, live, None)
+                active = jnp.logical_not(done)
+                done_n = jnp.logical_or(done, shift < tol)
+                return ((new_c, am_n, inertia_n, done_n, det_n),
+                        (new_c, inertia_n, shift, active))
+
+            init = (centroids, am0, inertia0, jnp.bool_(False), det0)
+            (centroids, am, inertia, done, det), hist = jax.lax.scan(
+                body, init, (inj_stack, jnp.arange(n_steps)), length=n_steps)
+            return centroids, am, inertia, det, done, hist
+
+        fn = jax.jit(chunk)
+        self._step_cache[cache_key] = fn
+        return fn
 
     def _campaign_rng(self, offset: int = 0):
         """Injection-schedule RNG: keyed by the campaign's own seed (so
@@ -199,27 +312,98 @@ class KMeans:
 
         ``centroids`` seeds the run (checkpoint restart / warm start);
         ``on_iteration(it, centroids, inertia, shift)`` observes progress.
+
+        Full-batch fits run device-resident: the loop is a chunked
+        ``lax.scan`` with the convergence test on device, the data plan
+        (padding + row norms) built once, and the host synchronizing only
+        every ``sync_every`` iterations (``on_iteration`` is replayed from
+        the chunk history, so its per-iteration semantics are preserved).
         """
-        from repro.core.kmeans import reseed_empty
         x = jnp.asarray(x)
         key = jax.random.PRNGKey(self.random_state)
         if centroids is None:
             key, sub = jax.random.split(key)
             centroids = self.init_centroids(x, sub)
+        if self.batch_size is not None:
+            return self._fit_minibatch(x, centroids, on_iteration)
+        return self._fit_fullbatch(x, centroids, key, on_iteration)
+
+    def _fit_fullbatch(self, x: jax.Array, centroids: jax.Array,
+                       key: jax.Array, on_iteration: Optional[Callable]
+                       ) -> "KMeans":
+        m, f = x.shape
+        params = self._resolve_params(m, f)
+        takes_inj = self._backend.takes_injection
+        inj_rng = self._campaign_rng()
+        # per-fit data plan: pad + row-norm X exactly once, reuse every
+        # iteration (two-pass pipelines re-did both per kernel call)
+        plan = ops.plan_data(x, params)
+
+        am = jnp.zeros((m,), jnp.int32)
+        det = jnp.zeros((), jnp.int32)
+        inertia = jnp.float32(jnp.inf)
+        inertia_host = float("inf")
+        it0 = 0
+        self._n_host_syncs = 0
+        while it0 < self.max_iter:
+            n_steps = min(self.sync_every, self.max_iter - it0)
+            chunk = self._chunk_fn(params, n_steps)
+            if takes_inj:
+                # pre-draw the chunk's campaign schedule: same host RNG
+                # consumption order as the per-iteration loop had
+                inj_stack = jnp.stack([
+                    self._draw_injection(inj_rng, m, f, params)
+                    for _ in range(n_steps)])
+            else:
+                inj_stack = jnp.zeros((n_steps, 1), jnp.int32)
+            centroids, am, inertia, det, done_d, hist = chunk(
+                plan, centroids, am, det, inertia, key,
+                jnp.int32(it0), inj_stack)
+            # the chunk boundary: the only device->host sync of the window.
+            # The (n_steps, K, F) centroid history crosses only when a
+            # callback will actually read it.
+            cs_d, in_d, sh_d, act_d = hist
+            if on_iteration is None:
+                done, in_h, sh_h, act_h = _host_read(
+                    (done_d, in_d, sh_d, act_d))
+            else:
+                done, cs_h, in_h, sh_h, act_h = _host_read((done_d, *hist))
+            self._n_host_syncs += 1
+            executed = int(act_h.sum())
+            if on_iteration is not None:
+                for t in range(executed):
+                    on_iteration(it0 + t, cs_h[t], float(in_h[t]),
+                                 float(sh_h[t]))
+            if executed:
+                inertia_host = float(in_h[executed - 1])
+            it0 += executed
+            if bool(done):
+                break
+
+        self.cluster_centers_ = centroids
+        self.n_iter_ = max(1, it0)
+        self.detected_errors_ = int(_host_read(det))
+        self._n_host_syncs += 1
+        self._counts = None
+        self.labels_ = am
+        self.inertia_ = inertia_host
+        return self
+
+    def _fit_minibatch(self, x: jax.Array, centroids: jax.Array,
+                       on_iteration: Optional[Callable]) -> "KMeans":
+        """Sampled mini-batch Lloyd: batch selection is host-driven by
+        construction, so this path keeps the per-iteration loop."""
         rng = np.random.default_rng(self.random_state + 1)
         inj_rng = self._campaign_rng()
         takes_inj = self._backend.takes_injection
 
         total_det = jnp.zeros((), jnp.int32)
-        am = jnp.zeros((x.shape[0],), jnp.int32)
         inertia = jnp.asarray(jnp.inf)
         it = 0
         for it in range(self.max_iter):
-            batch = x
-            if self.batch_size is not None:
-                idx = rng.choice(x.shape[0], min(self.batch_size, x.shape[0]),
-                                 replace=False)
-                batch = x[jnp.asarray(idx)]
+            idx = rng.choice(x.shape[0], min(self.batch_size, x.shape[0]),
+                             replace=False)
+            batch = x[jnp.asarray(idx)]
             params = self._resolve_params(batch.shape[0], batch.shape[1])
             step = self._lloyd_step_fn(params)
 
@@ -229,10 +413,6 @@ class KMeans:
             centroids, am_b, counts, md, inertia, shift, det = step(
                 batch, centroids, inj=inj)
             total_det = total_det + det
-            if self.batch_size is None:
-                am = am_b
-                centroids = reseed_empty(
-                    jax.random.fold_in(key, it), batch, centroids, counts, md)
             if on_iteration is not None:
                 on_iteration(it, centroids, float(inertia), float(shift))
             if float(shift) < self.tol:
@@ -242,12 +422,10 @@ class KMeans:
         self.n_iter_ = it + 1
         self.detected_errors_ = int(total_det)
         self._counts = None
-        if self.batch_size is not None:
-            am, dist, det = self._predict_full(x)
-            inertia = jnp.sum(dist)
-            self.detected_errors_ += int(det)
+        am, dist, det = self._predict_full(x)
+        self.detected_errors_ += int(det)
         self.labels_ = am
-        self.inertia_ = float(inertia)
+        self.inertia_ = float(jnp.sum(dist))
         return self
 
     def partial_fit(self, x: jax.Array) -> "KMeans":
@@ -281,9 +459,11 @@ class KMeans:
         return self
 
     def _predict_full(self, x: jax.Array):
-        params = self._resolve_params(x.shape[0], x.shape[1])
+        backend = self._predict_backend()
+        params = self._resolve_params(x.shape[0], x.shape[1],
+                                      backend=backend)
         fn = self._assign_fn(params)
-        if self._backend.takes_injection:
+        if backend.takes_injection:
             from repro.kernels.distance_argmin_ft import no_injection
             return fn(x, self.cluster_centers_, no_injection())
         return fn(x, self.cluster_centers_)
@@ -333,6 +513,7 @@ class KMeans:
                 "init": self.init,
                 "backend": self.backend,
                 "batch_size": self.batch_size,
+                "sync_every": self.sync_every,
                 "random_state": self.random_state,
                 "params": (None if self.params is None else
                            [self.params.block_m, self.params.block_k,
@@ -362,6 +543,7 @@ class KMeans:
         km = cls(cfg["n_clusters"], max_iter=cfg["max_iter"], tol=cfg["tol"],
                  init=cfg["init"], fault=fault, backend=cfg["backend"],
                  batch_size=cfg["batch_size"], params=params,
+                 sync_every=cfg.get("sync_every", 10),  # pre-v2 states
                  random_state=cfg["random_state"], autotune=autotune)
         km.cluster_centers_ = jnp.asarray(state["cluster_centers"])
         counts = state.get("counts")

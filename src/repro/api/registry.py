@@ -36,8 +36,12 @@ class AssignmentBackend:
     supports_ft:     detects (and possibly corrects) SDCs, returning a
                      nonzero detected-error count when one fires.
     takes_params:    accepts a :class:`~repro.kernels.ops.KernelParams`
-                     tile selection (Pallas-backed kernels).
+                     tile selection (Pallas-backed kernels). ``x`` may then
+                     also be a prebuilt :class:`~repro.kernels.ops.DataPlan`.
     takes_injection: accepts an in-kernel SEU injection descriptor.
+    fuses_update:    one-pass Lloyd backend — returns the extended 5-tuple
+                     ``(assign, min_dist, detected, sums, counts)`` so the
+                     driver skips the separate centroid-update pass over X.
     """
 
     name: str
@@ -45,6 +49,7 @@ class AssignmentBackend:
     supports_ft: bool = False
     takes_params: bool = False
     takes_injection: bool = False
+    fuses_update: bool = False
     doc: str = ""
 
     def __call__(self, x: jax.Array, c: jax.Array, *,

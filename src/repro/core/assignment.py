@@ -16,6 +16,11 @@ Each implementation maps (x (M, F), c (K, F)) ->
                detection happens on the materialized product (the scheme the
                paper argues breaks down post-Ampere; here it demonstrates
                the fusion win, not the register-reuse mechanics).
+  lloyd        one-pass Lloyd (paper Fig. 4 shape): the Pallas kernel's
+               epilogue also accumulates per-cluster sums/counts, so a full
+               iteration reads X from HBM once. Extended 5-tuple contract
+               (``fuses_update=True``).
+  lloyd_xla    XLA analogue of the one-pass kernel (non-TPU fast path).
 
 Every implementation is published through the ``repro.api`` backend
 registry as an :class:`~repro.api.registry.AssignmentBackend` declaring its
@@ -67,15 +72,46 @@ def assign_gemm_fused(x: jax.Array, c: jax.Array):
     return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1), _zero()
 
 
-def assign_fused(x: jax.Array, c: jax.Array, params=None):
+def _row_norms(x) -> jax.Array:
+    """True-distance correction term; reuses the DataPlan's precomputed
+    norms instead of re-norming X every iteration."""
+    if isinstance(x, ops.DataPlan):
+        return x.xn
+    return jnp.sum(x * x, axis=1)
+
+
+def assign_fused(x, c: jax.Array, params=None):
     am, md = ops.fused_assign(x, c, params)
-    return am, md + jnp.sum(x * x, axis=1), _zero()
+    return am, md + _row_norms(x), _zero()
 
 
-def assign_fused_ft(x: jax.Array, c: jax.Array, params=None,
+def assign_fused_ft(x, c: jax.Array, params=None,
                     inj: Optional[jax.Array] = None):
     am, md, det = ops.fused_assign_ft(x, c, params, inj=inj)
-    return am, md + jnp.sum(x * x, axis=1), det
+    return am, md + _row_norms(x), det
+
+
+def assign_lloyd(x, c: jax.Array, params=None):
+    # One-pass Lloyd (paper Fig. 4 shape): the Pallas kernel's epilogue
+    # also accumulates per-cluster sums/counts, so the driver never
+    # re-reads X for the centroid update. Extended 5-tuple contract.
+    am, md, sums, counts = ops.fused_lloyd(x, c, params)
+    return am, md, _zero(), sums, counts
+
+
+@jax.jit
+def assign_lloyd_xla(x: jax.Array, c: jax.Array):
+    # XLA analogue of the one-pass kernel: assignment and the one-hot
+    # update GEMM in a single fused graph (the non-TPU fast path; also the
+    # benchmark ladder's one-pass rung).
+    d = ref.distance_matrix(x, c)
+    am = jnp.argmin(d, axis=1).astype(jnp.int32)
+    md = jnp.min(d, axis=1)
+    onehot = jax.nn.one_hot(am, c.shape[0], dtype=x.dtype)
+    sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    return am, md, _zero(), sums, counts
 
 
 @jax.jit
@@ -112,3 +148,10 @@ register_backend(AssignmentBackend(
 register_backend(AssignmentBackend(
     "abft_offline", assign_abft_offline, supports_ft=True,
     doc="Wu-et-al-style baseline: checksummed GEMM, offline verification"))
+register_backend(AssignmentBackend(
+    "lloyd", assign_lloyd, takes_params=True, fuses_update=True,
+    doc="one-pass Lloyd Pallas kernel: fused assignment + in-epilogue "
+        "centroid accumulation (X read once per iteration)"))
+register_backend(AssignmentBackend(
+    "lloyd_xla", assign_lloyd_xla, fuses_update=True,
+    doc="XLA analogue of the one-pass kernel (non-TPU fast path)"))

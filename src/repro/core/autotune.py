@@ -24,6 +24,7 @@ closure specialization, but the search/selection pipeline is the same:
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import time
 import warnings
@@ -32,13 +33,18 @@ from typing import Iterable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import KernelParams, clamp_params
+from repro.kernels.ops import (KernelParams, clamp_params, lloyd_vmem_bytes,
+                               _round_up)
 
 # TPU v5e constants (roofline/hw.py mirrors these).
 MXU_FLOPS = 197e12        # bf16 peak; f32 ~ 1/2
 HBM_BW = 819e9            # bytes/s
 VMEM_BUDGET = 96 * 2**20  # bytes usable per core (half of 128 MiB v5e VMEM,
                           # leaving room for Mosaic's own buffers)
+
+# Kernel kinds sharing the tile-parameter space but with distinct VMEM
+# footprints and HBM-traffic profiles (winners must not cross kinds).
+KINDS = ("assign", "lloyd")
 
 
 def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
@@ -53,25 +59,82 @@ def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
     return out
 
 
-def feasible(p: KernelParams, dtype=jnp.float32) -> bool:
+def feasible(p: KernelParams, dtype=jnp.float32, *, kind: str = "assign",
+             shape: Optional[tuple[int, int, int]] = None) -> bool:
     """VMEM fit + alignment. The lowering check happens once in tests
     (tests/test_autotune.py) — analogous to the paper's compile-and-run
-    filter; here we apply the cheap structural conditions."""
-    if p.vmem_bytes() > VMEM_BUDGET:
-        return False
+    filter; here we apply the cheap structural conditions.
+
+    The one-pass Lloyd kernel additionally keeps the whole stashed X row
+    tile and its (K, F) partial-sum output block resident, so its VMEM
+    model depends on the problem shape (``shape=(m, k, f)``)."""
     if p.block_m % 8 or p.block_k % 128 or p.block_f % 128:
         return False
-    return True
+    if kind == "lloyd" and shape is not None:
+        _, k, f = shape
+        return lloyd_vmem_bytes(p, k, f) <= VMEM_BUDGET
+    return p.vmem_bytes() <= VMEM_BUDGET
+
+
+def iteration_traffic(m: int, k: int, f: int, p: KernelParams, *,
+                      pipeline: str = "one_pass",
+                      dtype=jnp.float32) -> dict[str, int]:
+    """Per-Lloyd-iteration HBM byte traffic, itemized by source.
+
+    ``pipeline`` names the iteration structure (distinct from the kernel
+    ``kind`` vocabulary used by selection):
+
+    ``"two_pass"``: the seed pipeline — fused assignment kernel, then
+    a separate centroid-update pass that re-reads all of X, plus the
+    per-iteration re-pad/re-norm of X the seed estimator performed inside
+    every kernel call.
+
+    ``"one_pass"``: the fused ``lloyd_step`` kernel — X enters the
+    kernel once per centroid tile and is never read again; the update
+    costs only the per-row-tile partial sums/counts round trip of the
+    tree-reduction. Padding and norms are amortized by the per-fit
+    :class:`~repro.kernels.ops.DataPlan` (zero per-iteration bytes).
+    """
+    if pipeline not in ("one_pass", "two_pass"):
+        raise ValueError(f"pipeline must be 'one_pass' or 'two_pass', "
+                         f"got {pipeline!r}")
+    p = clamp_params(m, k, f, p)
+    b = jnp.dtype(dtype).itemsize
+    mp = _round_up(m, p.block_m)
+    kp = _round_up(k, p.block_k)
+    fp = _round_up(f, p.block_f)
+    n_ktiles = kp // p.block_k
+    n_mtiles = mp // p.block_m
+    t = {
+        "x_read": mp * fp * n_ktiles * b,         # once per centroid tile
+        "c_read": kp * fp * n_mtiles * b,         # once per sample tile
+        "assign_out": mp * (b + 4),               # min-dist f32 + argmin i32
+    }
+    if pipeline == "two_pass":
+        t["prep"] = (mp * fp + 2 * m * f) * b     # re-pad write + 2x re-read
+        t["update_x_reread"] = m * f * b + m * 4  # second pass over X + labels
+        t["update_out"] = (k * f + k) * b
+    else:
+        t["prep"] = 0
+        t["update_x_reread"] = 0
+        # partial blocks written by the kernel, then read + collapsed by the
+        # tree-reduction into the (K, F) sums / (K,) counts
+        partials = n_mtiles * (kp * fp + kp) * b
+        t["update_out"] = 2 * partials + (k * f + k) * b
+    t["total"] = sum(t.values())
+    return t
 
 
 def model_score(m: int, k: int, f: int, p: KernelParams,
-                dtype=jnp.float32) -> float:
-    """Analytical time estimate (seconds) for the fused kernel.
+                dtype=jnp.float32, kind: str = "assign") -> float:
+    """Analytical time estimate (seconds) for one fused-kernel launch.
 
     HBM traffic: X is re-read once per centroid tile, C once per sample
     tile (the paper's §V-A-6 observation that balanced tiles minimize data
     movement); compute: 2 M K F MACs on the MXU. The kernel is pipelined,
-    so time ~ max(compute, memory) + epilogue.
+    so time ~ max(compute, memory) + epilogue. The ``lloyd`` kind adds the
+    partial-sum output traffic and the one-hot update GEMM of the fused
+    epilogue.
     """
     p = clamp_params(m, k, f, p)
     bytes_per = jnp.dtype(dtype).itemsize
@@ -80,44 +143,72 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
     fp = -(-f // p.block_f) * p.block_f
     x_reads = mp * fp * (kp // p.block_k)
     c_reads = kp * fp * (mp // p.block_m)
-    hbm = (x_reads + c_reads) * bytes_per / HBM_BW
+    hbm_bytes = (x_reads + c_reads) * bytes_per
+    macs = mp * kp * fp
+    if kind == "lloyd":
+        # partial sums/counts blocks out + tree-reduction round trip
+        partials = (mp // p.block_m) * (kp * fp + kp) * bytes_per
+        hbm_bytes += 2 * partials
+        macs += mp * kp * fp          # one-hot scatter GEMM in the epilogue
+    hbm = hbm_bytes / HBM_BW
     peak = MXU_FLOPS if dtype == jnp.bfloat16 else MXU_FLOPS / 2
     # MXU efficiency falls off for tiles thinner than the 128x128 systolic
     # array and for padded remainders.
     util = min(p.block_k / 128.0, 1.0) * min(p.block_m / 128.0, 1.0)
     util *= (m / mp) * (k / kp) * (f / fp)
-    compute = 2.0 * mp * kp * fp / (peak * max(util, 1e-3))
+    compute = 2.0 * macs / (peak * max(util, 1e-3))
     epilogue = mp * kp * bytes_per / (HBM_BW * 16)  # VMEM-resident reduce
     return float(max(hbm, compute) + epilogue)
 
 
 def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
-                  dtype=jnp.float32) -> float:
-    """Wall-time of the fused kernel on the current backend (seconds)."""
-    from repro.kernels.ops import fused_assign
-    x = jnp.ones((m, f), dtype)
-    c = jnp.ones((k, f), dtype)
-    am, md = fused_assign(x, c, p)
-    jax.block_until_ready((am, md))
-    t0 = time.perf_counter()
+                  dtype=jnp.float32, kind: str = "assign") -> float:
+    """Median wall-time of the real kernel on the current backend (seconds).
+
+    Inputs are seeded-random (all-ones invited constant folding), the
+    candidate pipeline is compiled exactly once up front (naively repeating
+    ``fused_assign`` re-ran its eager padding prologue every call), and
+    every timed call is individually ``block_until_ready`` so candidates
+    are ranked on real kernel time, not dispatch pipelining."""
+    from repro.kernels.ops import fused_assign, fused_lloyd
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, f), dtype)
+    c = jax.random.normal(kc, (k, f), dtype)
+    p = clamp_params(m, k, f, p)
+    step = fused_lloyd if kind == "lloyd" else fused_assign
+    fn = jax.jit(functools.partial(step, params=p))
+    jax.block_until_ready(fn(x, c))          # compile outside the timing
+    times = []
     for _ in range(iters):
-        am, md = fused_assign(x, c, p)
-    jax.block_until_ready((am, md))
-    return (time.perf_counter() - t0) / iters
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x, c))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
 
 
 def select_params(m: int, k: int, f: int, *, mode: str = "model",
-                  dtype=jnp.float32,
+                  dtype=jnp.float32, kind: str = "assign",
                   space: Optional[Iterable[KernelParams]] = None) -> KernelParams:
-    """Pick the winner for one problem shape."""
+    """Pick the winner for one problem shape and kernel kind."""
+    if kind not in KINDS:
+        raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
     best, best_s = None, float("inf")
     for p in (space or parameter_space(dtype)):
-        if not feasible(p, dtype):
+        if not feasible(p, dtype, kind=kind, shape=(m, k, f)):
             continue
-        s = (model_score if mode == "model" else measure_score)(m, k, f, p, dtype=dtype)
+        s = (model_score(m, k, f, p, dtype=dtype, kind=kind)
+             if mode == "model"
+             else measure_score(m, k, f, p, dtype=dtype, kind=kind))
         if s < best_s:
             best, best_s = p, s
-    assert best is not None
+    if best is None:
+        hint = (" (the one-pass kernel keeps the stashed X row tile and "
+                "its (K, F) partial-sum block VMEM-resident; use a "
+                "two-pass backend for this shape)" if kind == "lloyd" else "")
+        raise ValueError(f"no feasible {kind!r} kernel parameters for "
+                         f"shape {(m, k, f)}: every candidate's working "
+                         f"set exceeds VMEM{hint}")
     return best
 
 

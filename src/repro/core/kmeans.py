@@ -95,13 +95,20 @@ def protected_sums(x: jax.Array, assign: jax.Array, k: int, *,
                         operand=None)
 
 
+def means_from_sums(sums: jax.Array, counts: jax.Array,
+                    prev: jax.Array) -> jax.Array:
+    """New centroids from per-cluster (sums, counts); empty clusters keep
+    their previous centroid. The single empty-cluster policy shared by the
+    two-pass update, the one-pass (fused-update) step and the benchmarks."""
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    return jnp.where((counts > 0)[:, None], means, prev)
+
+
 def centroid_update(x: jax.Array, assign: jax.Array, k: int,
                     prev: jax.Array, *, use_dmr: bool = True):
     """Means of assigned points; empty clusters keep their previous centroid."""
     sums, counts = protected_sums(x, assign, k, use_dmr=use_dmr)
-    counts_safe = jnp.maximum(counts, 1.0)
-    means = sums / counts_safe[:, None]
-    return jnp.where((counts > 0)[:, None], means, prev), counts
+    return means_from_sums(sums, counts, prev), counts
 
 
 def reseed_empty(key: jax.Array, x: jax.Array, centroids: jax.Array,

@@ -63,6 +63,7 @@ class DistributedKMeans:
         if not on_tpu():
             backend = get_backend({
                 "fused": "gemm_fused", "fused_ft": "abft_offline",
+                "lloyd": "lloyd_xla",
             }.get(backend.name, backend.name))
         return backend
 
@@ -77,17 +78,22 @@ class DistributedKMeans:
         use_dmr = est.fault.update_dmr
 
         def local_step(x, c, inj):
-            am, md, det = backend(
+            from repro.core.kmeans import means_from_sums, protected_sums
+            out = backend(
                 x, c, params=params,
                 inj=inj if backend.takes_injection else None)
-            from repro.core.kmeans import protected_sums
-            sums, cnt = protected_sums(x, am, k, use_dmr=use_dmr)
+            if backend.fuses_update:
+                # one-pass backend: the shard's (sums, counts) come out of
+                # the kernel epilogue — psum them directly, no second pass
+                am, md, det, sums, cnt = out
+            else:
+                am, md, det = out
+                sums, cnt = protected_sums(x, am, k, use_dmr=use_dmr)
             sums = jax.lax.psum(sums, daxes)
             cnt = jax.lax.psum(cnt, daxes)
             inertia = jax.lax.psum(jnp.sum(md), daxes)
             det = jax.lax.psum(det, daxes)
-            new_c = jnp.where((cnt > 0)[:, None],
-                              sums / jnp.maximum(cnt, 1.0)[:, None], c)
+            new_c = means_from_sums(sums, cnt, c)
             shift = jnp.sqrt(jnp.sum((new_c - c) ** 2))
             return am, new_c, inertia, shift, det
 

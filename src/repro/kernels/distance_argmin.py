@@ -31,7 +31,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
-NEG_LIMIT = float(jnp.finfo(jnp.float32).max)
+# Initial value of the running minimum: +float32 max, so the first observed
+# distance always wins the compare. (Historically misnamed NEG_LIMIT; kept
+# as a deprecated alias below.)
+MIN_INIT = float(jnp.finfo(jnp.float32).max)
+NEG_LIMIT = MIN_INIT  # deprecated alias — use MIN_INIT
 
 
 def _kernel(x_ref, c_ref, cn_ref, mind_ref, argmin_ref, acc_ref):
@@ -50,7 +54,7 @@ def _kernel(x_ref, c_ref, cn_ref, mind_ref, argmin_ref, acc_ref):
 
     @pl.when(jnp.logical_and(c_idx == 0, f_idx == 0))
     def _init_outputs():
-        mind_ref[...] = jnp.full_like(mind_ref, NEG_LIMIT)
+        mind_ref[...] = jnp.full_like(mind_ref, MIN_INIT)
         argmin_ref[...] = jnp.zeros_like(argmin_ref)
 
     @pl.when(f_idx == 0)

@@ -35,7 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
-from repro.kernels.distance_argmin import NEG_LIMIT
+from repro.kernels.distance_argmin import MIN_INIT
 
 # Injection descriptor layout (SMEM scalars):
 # [enabled, m_tile, c_tile, f_tile, row_in_tile, col_in_tile] + delta (f32).
@@ -54,7 +54,8 @@ def _kernel(inj_ref, x_ref, c_ref, cn_ref,
 
     @pl.when(jnp.logical_and(c_idx == 0, f_idx == 0))
     def _init_outputs():
-        mind_ref[...] = jnp.full_like(mind_ref, NEG_LIMIT)
+        # running minimum starts at +float32 max so any distance wins
+        mind_ref[...] = jnp.full_like(mind_ref, MIN_INIT)
         argmin_ref[...] = jnp.zeros_like(argmin_ref)
         det_ref[...] = jnp.zeros_like(det_ref)
 

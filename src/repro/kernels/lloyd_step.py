@@ -1,0 +1,179 @@
+"""One-pass Lloyd iteration kernel (paper §III, Fig. 4 — fused update).
+
+``distance_argmin`` performs the distance GEMM and the min/argmin epilogue,
+but the centroid *update* still re-reads X from HBM in a second pass
+(``ref.centroid_update``). This kernel folds that second pass into the
+assignment kernel's epilogue: while the feature tiles of X stream through
+VMEM for the GEMM, they are stashed in a VMEM row-tile buffer; once the
+argmin for a row tile is final (last centroid tile, last feature step), a
+one-hot MXU product against the stashed tiles accumulates per-cluster
+partial sums and counts into per-row-tile output blocks:
+
+    sums   (num_m_tiles, K, F)   partial per-cluster feature sums
+    counts (num_m_tiles, K)      partial per-cluster member counts
+
+A small jitted tree-reduction (``ops.fused_lloyd``) collapses the partial
+blocks to the (K, F) sums / (K,) counts the update needs — so X is read
+from HBM once per centroid tile and never again, where the two-pass
+pipeline paid a second full read of X plus an assignment round trip.
+
+Grid and tiling match ``distance_argmin``: (M/bm, K/bk, F/bf), feature axis
+fastest, MXU-aligned blocks, running min/argmin accumulated in the
+revisited output block. Padded sample rows are masked out of the sums and
+counts via the true row count carried in SMEM; padded centroid slots carry
++inf norms and never win the argmin.
+
+This is the prerequisite shape for porting the §IV ABFT epilogue onto the
+one-pass kernel: the checksum accumulators of ``distance_argmin_ft`` attach
+to the same streamed tiles, and the update epilogue runs on the *corrected*
+accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.distance_argmin import MIN_INIT
+
+# SMEM metadata layout: [true_m] — rows >= true_m are padding and must not
+# contribute to sums/counts.
+META_LEN = 1
+
+
+def _kernel(meta_ref, x_ref, c_ref, cn_ref,
+            mind_ref, argmin_ref, sums_ref, counts_ref,
+            acc_ref, xbuf_ref):
+    """One (bm, bk) distance tile + the fused update epilogue.
+
+    meta_ref  : (1,)        SMEM — [true_m]
+    x_ref     : (bm, bf)    sample tile
+    c_ref     : (bk, bf)    centroid tile
+    cn_ref    : (1, bk)     centroid squared norms (+inf for padded slots)
+    mind_ref  : (bm, 1)     running minimum of d_ij  (output, revisited)
+    argmin_ref: (bm, 1)     running argmin           (output, revisited)
+    sums_ref  : (1, kp, fp) per-row-tile partial cluster sums (output)
+    counts_ref: (1, kp)     per-row-tile partial cluster counts (output)
+    acc_ref   : (bm, bk)    VMEM scratch accumulator for X C^T
+    xbuf_ref  : (bm, fp)    VMEM stash of the row tile's feature chunks
+    """
+    m_idx = pl.program_id(0)
+    c_idx = pl.program_id(1)
+    f_idx = pl.program_id(2)
+    nk = pl.num_programs(1)
+    nf = pl.num_programs(2)
+    bm = acc_ref.shape[0]
+    bf = x_ref.shape[1]
+
+    @pl.when(jnp.logical_and(c_idx == 0, f_idx == 0))
+    def _init_outputs():
+        mind_ref[...] = jnp.full_like(mind_ref, MIN_INIT)
+        argmin_ref[...] = jnp.zeros_like(argmin_ref)
+
+    @pl.when(f_idx == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Stash the streamed X tile on its first visit: the update epilogue
+    # reuses it from VMEM instead of a second HBM read.
+    @pl.when(c_idx == 0)
+    def _stash_x():
+        xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+
+    # MXU tile product, f32 accumulation.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == nf - 1)
+    def _min_epilogue():
+        bk = acc_ref.shape[1]
+        d = cn_ref[...] - 2.0 * acc_ref[...]            # (bm, bk) via (1,bk) bcast
+        local_min = jnp.min(d, axis=1, keepdims=True)   # (bm, 1)
+        cols = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+        local_arg = jnp.min(
+            jnp.where(d == local_min, cols, jnp.iinfo(jnp.int32).max),
+            axis=1, keepdims=True) + c_idx * bk         # first-min tie-break
+        cur = mind_ref[...]
+        take = local_min < cur                          # strict: earlier tile wins ties
+        mind_ref[...] = jnp.where(take, local_min, cur)
+        argmin_ref[...] = jnp.where(take, local_arg, argmin_ref[...])
+
+    # Fused update epilogue: the argmin for this row tile is final — scatter
+    # the stashed X tiles into per-cluster partial sums via a one-hot MXU
+    # product, masking padded sample rows.
+    @pl.when(jnp.logical_and(c_idx == nk - 1, f_idx == nf - 1))
+    def _update_epilogue():
+        kp = counts_ref.shape[1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + m_idx * bm
+        valid = (rows < meta_ref[0]).astype(jnp.float32)           # (bm, 1)
+        clusters = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+        onehot = (argmin_ref[...] == clusters).astype(jnp.float32) * valid
+        counts_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)   # (1, kp)
+        sums_ref[...] = jax.lax.dot_general(
+            onehot, xbuf_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[None]              # (1, kp, fp)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_f", "interpret"))
+def lloyd_step(
+    x: jax.Array,
+    c: jax.Array,
+    cn: jax.Array,
+    meta: jax.Array,
+    *,
+    block_m: int = 256,
+    block_k: int = 128,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Raw one-pass kernel entry. Shapes must be pre-padded to the block grid.
+
+    x (M, F) samples, c (K, F) centroids, cn (1, K) centroid sq-norms with
+    +inf in padded slots, meta (1,) int32 = [true_m]. Returns
+    (min_d (M, 1), argmin (M, 1), sums (M/bm, K, F), counts (M/bm, K));
+    sum the partial blocks over axis 0 for the (K, F) / (K,) totals.
+    """
+    m, f = x.shape
+    k = c.shape[0]
+    assert m % block_m == 0 and k % block_k == 0 and f % block_f == 0, (
+        f"unpadded shapes {(m, k, f)} vs blocks {(block_m, block_k, block_f)}")
+    grid = (m // block_m, k // block_k, f // block_f)
+    num_m = m // block_m
+
+    kernel = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, block_f), lambda i, j, t: (i, t)),
+            pl.BlockSpec((block_k, block_f), lambda i, j, t: (j, t)),
+            pl.BlockSpec((1, block_k), lambda i, j, t: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, k, f), lambda i, j, t: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+            jax.ShapeDtypeStruct((num_m, k, f), jnp.float32),
+            jax.ShapeDtypeStruct((num_m, k), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_k), jnp.float32),
+            pltpu.VMEM((block_m, f), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )
+    return kernel(meta, x, c, cn)

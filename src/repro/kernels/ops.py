@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import distance_argmin as _da
 from repro.kernels import distance_argmin_ft as _daft
+from repro.kernels import lloyd_step as _ll
 from repro.kernels import matmul_abft as _mma
 
 
@@ -43,23 +44,69 @@ class KernelParams:
 DEFAULT_PARAMS = KernelParams()
 
 
+def lloyd_vmem_bytes(params: KernelParams, k: int, f: int) -> int:
+    """Working-set estimate for the one-pass Lloyd kernel: the assignment
+    kernel's tiles plus the stashed X row tile and the per-row-tile
+    sums/counts output blocks (resident across the whole row-tile sweep)."""
+    kp = _round_up(k, params.block_k)
+    fp = _round_up(f, params.block_f)
+    xbuf = params.block_m * fp * 4
+    out_blocks = (kp * fp + kp) * 4
+    return params.vmem_bytes() + xbuf + out_blocks
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _pad_inputs(x, c, params: KernelParams):
+@dataclasses.dataclass(frozen=True)
+class DataPlan:
+    """Per-fit data plan: X padded to the block grid and its row squared
+    norms, computed exactly once and reused across every Lloyd iteration
+    (the seed pipeline re-padded and re-normed X inside every kernel call).
+
+    x      : (m, f)   the original samples (update pass / reseeding)
+    xp     : (mp, fp) X padded to the block grid (== x when params is None)
+    xn     : (m,)     row squared norms, f32
+    m, f   : true (unpadded) dimensions
+    params : the KernelParams the padding was laid out for (None = no
+             Pallas backend in play; xp is x unpadded)
+    """
+
+    x: jax.Array
+    xp: jax.Array
+    xn: jax.Array
+    m: int
+    f: int
+    params: Optional[KernelParams]
+
+
+jax.tree_util.register_pytree_node(
+    DataPlan,
+    lambda p: ((p.x, p.xp, p.xn), (p.m, p.f, p.params)),
+    lambda aux, kids: DataPlan(kids[0], kids[1], kids[2], *aux))
+
+
+def plan_data(x: jax.Array, params: Optional[KernelParams] = None) -> DataPlan:
+    """Build the per-fit :class:`DataPlan` (pad + row norms, once)."""
     m, f = x.shape
-    k = c.shape[0]
+    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+    if params is None:
+        return DataPlan(x=x, xp=x, xn=xn, m=m, f=f, params=None)
     mp = _round_up(m, params.block_m)
-    kp = _round_up(k, params.block_k)
     fp = _round_up(f, params.block_f)
-    xpad = jnp.pad(x, ((0, mp - m), (0, fp - f)))
-    cpad = jnp.pad(c, ((0, kp - k), (0, fp - f)))
+    xp = jnp.pad(x, ((0, mp - m), (0, fp - f)))
+    return DataPlan(x=x, xp=xp, xn=xn, m=m, f=f, params=params)
+
+
+def _pad_centroids(c, k: int, kp: int, fp: int):
+    """Pad centroids to (kp, fp) and build +inf-masked squared norms so
+    padded centroid slots never win the argmin."""
+    cpad = jnp.pad(c, ((0, kp - c.shape[0]), (0, fp - c.shape[1])))
     cn = jnp.sum(cpad.astype(jnp.float32) ** 2, axis=1)
-    # padded centroid slots must never win the argmin
     slot = jnp.arange(kp)
     cn = jnp.where(slot < k, cn, jnp.inf)[None, :]
-    return xpad, cpad, cn
+    return cpad, cn
 
 
 def clamp_params(m: int, k: int, f: int, params: KernelParams) -> KernelParams:
@@ -75,6 +122,31 @@ def clamp_params(m: int, k: int, f: int, params: KernelParams) -> KernelParams:
     )
 
 
+def _resolve_padded(x, c, params: Optional[KernelParams], kind: str):
+    """Common front end: accept a raw X or a prebuilt :class:`DataPlan` and
+    return (plan, padded centroids, masked centroid norms, params)."""
+    k = c.shape[0]
+    if isinstance(x, DataPlan):
+        plan = x
+        params = plan.params
+        if params is None:
+            raise ValueError(
+                "DataPlan was built without KernelParams (plan_data(x) with "
+                "params=None pads nothing); build it with the kernel's tile "
+                "selection — plan_data(x, params) — before feeding a Pallas "
+                "kernel")
+    else:
+        if params is None:
+            from repro.api.cache import default_cache
+            params = default_cache().lookup(x.shape[0], k, x.shape[1],
+                                            kind=kind)
+        params = clamp_params(x.shape[0], k, x.shape[1], params)
+        plan = plan_data(x, params)
+    kp = _round_up(k, params.block_k)
+    cp, cn = _pad_centroids(c, k, kp, plan.xp.shape[1])
+    return plan, cp, cn, params
+
+
 def fused_assign(
     x: jax.Array,
     c: jax.Array,
@@ -84,21 +156,56 @@ def fused_assign(
 ) -> tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment via the fused kernel.
 
-    Returns (assign (M,) int32, partial min distance (M,) f32). Add
-    ``sum(x**2, -1)`` for true squared distances.
+    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan` (then
+    ``params`` comes from the plan). Returns (assign (M,) int32, partial
+    min distance (M,) f32). Add ``sum(x**2, -1)`` for true squared
+    distances.
     """
-    if params is None:
-        from repro.api.cache import default_cache
-        params = default_cache().lookup(x.shape[0], c.shape[0], x.shape[1])
-    params = clamp_params(x.shape[0], c.shape[0], x.shape[1], params)
+    plan, cp, cn, params = _resolve_padded(x, c, params, "assign")
     if interpret is None:
         interpret = not on_tpu()
-    m = x.shape[0]
-    xp, cp, cn = _pad_inputs(x, c, params)
     mind, am = _da.distance_argmin(
-        xp, cp, cn, block_m=params.block_m, block_k=params.block_k,
+        plan.xp, cp, cn, block_m=params.block_m, block_k=params.block_k,
         block_f=params.block_f, interpret=interpret)
+    m = plan.m
     return am[:m, 0], mind[:m, 0]
+
+
+def _tree_sum(a: jax.Array) -> jax.Array:
+    """Balanced pairwise reduction over axis 0 (log2 depth, better fp
+    behaviour than a linear fold for many partial blocks)."""
+    while a.shape[0] > 1:
+        half = a.shape[0] // 2
+        rest = a[2 * half:]
+        a = jnp.concatenate([a[:half] + a[half:2 * half], rest], axis=0)
+    return a[0]
+
+
+def fused_lloyd(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass Lloyd step via the fused kernel: assignment plus the
+    per-cluster sums/counts the centroid update needs, X read once.
+
+    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`.
+    Returns (assign (M,) int32, true squared distance (M,) f32,
+    sums (K, F) f32, counts (K,) f32).
+    """
+    plan, cp, cn, params = _resolve_padded(x, c, params, "lloyd")
+    if interpret is None:
+        interpret = not on_tpu()
+    k, m = c.shape[0], plan.m
+    meta = jnp.array([m], jnp.int32)
+    mind, am, sums, counts = _ll.lloyd_step(
+        plan.xp, cp, cn, meta, block_m=params.block_m,
+        block_k=params.block_k, block_f=params.block_f, interpret=interpret)
+    sums = _tree_sum(sums)[:k, :plan.f]
+    counts = _tree_sum(counts)[:k]
+    return am[:m, 0], mind[:m, 0] + plan.xn, sums, counts
 
 
 def fused_assign_ft(
@@ -111,21 +218,18 @@ def fused_assign_ft(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """FT assignment: fused ABFT detect+locate+correct inside the kernel.
 
+    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`.
     Returns (assign, partial min distance, corrected_error_count).
     """
-    if params is None:
-        from repro.api.cache import default_cache
-        params = default_cache().lookup(x.shape[0], c.shape[0], x.shape[1])
-    params = clamp_params(x.shape[0], c.shape[0], x.shape[1], params)
+    plan, cp, cn, params = _resolve_padded(x, c, params, "assign")
     if interpret is None:
         interpret = not on_tpu()
     if inj is None:
         inj = _daft.no_injection()
-    m = x.shape[0]
-    xp, cp, cn = _pad_inputs(x, c, params)
     mind, am, det = _daft.distance_argmin_ft(
-        xp, cp, cn, inj, block_m=params.block_m, block_k=params.block_k,
+        plan.xp, cp, cn, inj, block_m=params.block_m, block_k=params.block_k,
         block_f=params.block_f, interpret=interpret)
+    m = plan.m
     return am[:m, 0], mind[:m, 0], jnp.sum(det)
 
 

@@ -61,6 +61,19 @@ def distance_argmin_ft(
     return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32), detected_count
 
 
+def lloyd_step(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array,
+                                                    jax.Array, jax.Array]:
+    """Oracle for the one-pass Lloyd kernel.
+
+    Returns (min partial distance, argmin, sums (K, F), counts (K,)) —
+    the assignment semantics of :func:`distance_argmin` plus the
+    per-cluster sums/counts of :func:`centroid_update`, all from one pass.
+    """
+    md, am = distance_argmin(x, c)
+    sums, counts = centroid_update(x, am, c.shape[0])
+    return md, am, sums, counts
+
+
 def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
     """Oracle for the ABFT matmul kernel: plain product."""
     return jnp.matmul(x, y, precision=jax.lax.Precision.HIGHEST)

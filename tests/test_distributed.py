@@ -28,6 +28,28 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
 
 
 class TestDistributedKMeans:
+    def test_one_pass_backend_shards(self):
+        """fuses_update backends psum the kernel's own (sums, counts) —
+        no second pass over the shard — and match the single-device fit."""
+        out = run_with_devices("""
+        import jax
+        from repro.api import KMeans
+        from repro.dist.kmeans_dist import DistributedKMeans
+        from repro.data.blobs import make_blobs
+
+        mesh = jax.make_mesh((8,), ("data",))
+        x, _ = make_blobs(4096, 16, 8, seed=3)
+        est = KMeans(8, max_iter=20, backend="lloyd_xla", random_state=0)
+        c0 = est.init_centroids(x)
+        dk = DistributedKMeans(est, mesh)
+        c, am, inertia, iters, det = dk.fit(dk.shard_data(x), c0)
+        ref = KMeans(8, max_iter=20, random_state=0).fit(x, centroids=c0)
+        rel = abs(float(inertia) - ref.inertia_) / abs(ref.inertia_)
+        print("REL", rel)
+        """)
+        rel = float(out.split("REL ")[1].split()[0])
+        assert rel < 1e-3
+
     def test_matches_single_device_and_checkpoints(self, tmp_path):
         out = run_with_devices(f"""
         import jax, jax.numpy as jnp

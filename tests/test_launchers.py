@@ -75,20 +75,56 @@ class TestSchedules:
 class TestAutotuneTable:
     def test_build_and_lookup_roundtrip(self, tmp_path):
         from repro.api import AutotuneCache, shape_bucket
+        from repro.api.cache import SCHEMA_VERSION
         path = str(tmp_path / "table.json")
         cache = AutotuneCache(path)
         table = cache.build([(16384, 64, 64), (131072, 128, 128)],
                             mode="model")
-        assert len(table) == 2
+        assert len(table["assign"]) == 2
         p = cache.lookup(16384, 64, 64)
-        assert [p.block_m, p.block_k, p.block_f] == table["14-6-6"]
+        assert [p.block_m, p.block_k, p.block_f] == table["assign"]["14-6-6"]
         # a fresh cache instance reloads the persisted winners
         fresh = AutotuneCache(path)
         q = fresh.lookup(131072, 128, 128)
         assert [q.block_m, q.block_k, q.block_f] == \
-            table[shape_bucket(131072, 128, 128)]
+            table["assign"][shape_bucket(131072, 128, 128)]
         with open(path) as fh:
-            assert json.load(fh) == table
+            assert json.load(fh) == {"schema": SCHEMA_VERSION,
+                                     "kinds": table}
+
+    def test_legacy_v1_table_loads_as_assign_kind(self, tmp_path):
+        """v1 files (flat bucket -> blocks) keep working: their winners
+        were tuned for the assignment-only kernel and must serve it —
+        and only it."""
+        from repro.api import AutotuneCache, shape_bucket
+        path = str(tmp_path / "v1.json")
+        with open(path, "w") as fh:
+            json.dump({shape_bucket(1024, 64, 64): [64, 128, 128]}, fh)
+        cache = AutotuneCache(path)
+        p = cache.lookup(1024, 64, 64)                  # kind="assign"
+        assert [p.block_m, p.block_k, p.block_f] == [64, 128, 128]
+        # the lloyd kernel never inherits an assignment-only winner; it
+        # falls through to its own analytical selection
+        q = cache.lookup(1024, 64, 64, kind="lloyd")
+        assert q is not None
+        # upgrading on save leaves the entry under the assign kind
+        cache.save()
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        assert on_disk["schema"] >= 2
+        assert on_disk["kinds"]["assign"][shape_bucket(1024, 64, 64)] \
+            == [64, 128, 128]
+
+    def test_kinds_are_isolated(self, tmp_path):
+        from repro.api import AutotuneCache
+        from repro.kernels.ops import KernelParams
+        cache = AutotuneCache()
+        # a distinctive winner stored for the assignment kernel only
+        cache.put(2048, 128, 256, KernelParams(1024, 512, 1024))
+        pa = cache.lookup(2048, 128, 256)
+        pl = cache.lookup(2048, 128, 256, kind="lloyd")
+        assert [pa.block_m, pa.block_k, pa.block_f] == [1024, 512, 1024]
+        assert (pl.block_m, pl.block_k, pl.block_f) != (1024, 512, 1024)
 
     def test_caches_are_isolated_per_instance(self, tmp_path):
         from repro.api import AutotuneCache
