@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke quickstart
+.PHONY: test test-fast bench bench-smoke bench-check quickstart
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -14,6 +14,12 @@ bench:           ## all paper-figure benchmark modules
 
 bench-smoke:     ## Fig. 7 ladder at tiny shapes (interpret-mode Pallas rung)
 	$(PY) -m benchmarks.bench_stepwise --smoke --model --json BENCH_stepwise.json
+
+bench-check:     ## regen smoke artifact, gate vs committed baseline (>25% = fail)
+	git show HEAD:BENCH_stepwise.json > /tmp/bench_stepwise_baseline.json
+	$(MAKE) bench-smoke
+	$(PY) -m benchmarks.check_regression /tmp/bench_stepwise_baseline.json \
+	    BENCH_stepwise.json --rung fig7_v5_onepass --max-ratio 1.25
 
 quickstart:
 	$(PY) examples/quickstart.py

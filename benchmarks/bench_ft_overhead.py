@@ -38,7 +38,7 @@ def run() -> list[str]:
         out.append(row(f"fig15_K{k}_N{f}_noft", t_plain, ""))
         out.append(row(f"fig15_K{k}_N{f}_ft", t_ft,
                        f"overhead={ovh:.1f}%"))
-        p = cache.lookup(M, k, f)
+        _, p = cache.lookup(M, k, f)
         kernel_ovh = (2 * (p.block_m + p.block_k) * p.block_f) / \
             (2 * p.block_m * p.block_k * p.block_f) * 100 * 2
         out.append(row(f"fig15_K{k}_N{f}_kernel_flop_ovh", 0.0,

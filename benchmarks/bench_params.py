@@ -23,10 +23,11 @@ def run() -> list[str]:
     out.append(row("fig13_candidates", 0.0,
                    f"total={len(space)};feasible={len(ok)}"))
     for m, k, f in SHAPES:
-        p = select_params(m, k, f, mode="model")
-        t_model = model_score(m, k, f, p)
+        variant, p = select_params(m, k, f, mode="model")
+        t_model = model_score(m, k, f, p, variant=variant)
         out.append(row(f"fig14_winner_M{m}_K{k}_N{f}", t_model,
-                       f"block=({p.block_m},{p.block_k},{p.block_f})"))
+                       f"block=({p.block_m},{p.block_k},{p.block_f});"
+                       f"variant={variant}"))
     return out
 
 

@@ -3,9 +3,11 @@
 Walks the registered assignment backends in ladder order — naive (per-sample
 loop, no GEMM) -> V1 GEMM + separate reduction -> V2/V3 fused reduction
 (cuML analogue) -> V4 low-precision -> V5 one-pass Lloyd (this repo's
-fused-update iteration, DESIGN.md §3) — through the ``repro.api`` registry,
-then times one full ``repro.api.KMeans`` iteration loop with and without a
-``FaultPolicy`` to anchor the ladder in estimator terms.
+fused-update iteration, DESIGN.md §3) -> V6 template family (bf16 compute
+path, small-K fast-path variant, irregular-shape rows; DESIGN.md §4) —
+through the ``repro.api`` registry, then times one full ``repro.api.KMeans``
+iteration loop with and without a ``FaultPolicy`` to anchor the ladder in
+estimator terms.
 
 The one-pass rung is measured at *iteration* granularity against the
 two-pass pipeline (fused assignment, separate centroid update): the paper's
@@ -30,12 +32,17 @@ import jax.numpy as jnp
 
 from benchmarks.common import distance_flops, gflops, row, time_call
 from repro.api import FaultPolicy, KMeans, get_backend
-from repro.core.autotune import iteration_traffic
+from repro.core.autotune import iteration_traffic, model_score, select_params
 from repro.core.kmeans import centroid_update, means_from_sums
 from repro.kernels.ops import KernelParams, clamp_params
 
 M, K, F = 16_384, 128, 128   # paper Fig. 7: M=131072, N=128 (scaled to CPU)
 SMOKE_M, SMOKE_K, SMOKE_F = 1024, 16, 32
+
+# Irregular shapes (paper Figs. 8-11 regime: where template selection pays):
+# tall-skinny (many samples, few features) and wide-F (feature-heavy).
+IRREGULAR = [("fig7_irr_tall", 65_536, 64, 32), ("fig7_irr_wide", 4096, 64, 2048)]
+SMOKE_IRREGULAR = [("fig7_irr_tall", 4096, 8, 16), ("fig7_irr_wide", 512, 8, 256)]
 
 LADDER = [                    # (row label, registered backend)
     ("fig7_naive", "naive"),
@@ -64,6 +71,36 @@ def _traffic_rows(m: int, k: int, f: int) -> tuple[list[str], dict]:
     rows.append(row("model_onepass_saving", 0.0,
                     f"x{two['total'] / one['total']:.2f}"))
     return rows, {"two_pass": two, "one_pass": one}
+
+
+def _template_rows(m: int, k: int, f: int) -> tuple[list[str], dict]:
+    """Model-mode view of the §III-B template family at this shape: the
+    selected (variant, tiles) winner per dtype and the analytical speedups
+    of the bf16 template over f32 and of the small-K fast path over the
+    generic template at the same tiles."""
+    rows, payload = [], {}
+    scores = {}
+    for dtype in (jnp.float32, jnp.bfloat16):
+        variant, p = select_params(m, k, f, mode="model", dtype=dtype)
+        s = model_score(m, k, f, p, dtype=dtype, variant=variant)
+        name = jnp.dtype(dtype).name
+        scores[name] = s
+        payload[name] = {"variant": variant, "score_s": s,
+                         "block": [p.block_m, p.block_k, p.block_f]}
+        rows.append(row(f"model_assign_{name}", s,
+                        f"variant={variant};"
+                        f"block=({p.block_m},{p.block_k},{p.block_f})"))
+    payload["bf16_speedup"] = scores["float32"] / scores["bfloat16"]
+    rows.append(row("model_bf16_vs_f32", 0.0,
+                    f"x{payload['bf16_speedup']:.2f}"))
+    p = clamp_params(m, k, f, KernelParams())
+    if k <= p.block_k:
+        sk = model_score(m, k, f, p, variant="smallk")
+        gen = model_score(m, k, f, p, variant="generic")
+        payload["smallk_speedup"] = gen / sk
+        rows.append(row("model_smallk_vs_generic", 0.0,
+                        f"x{gen / sk:.4f}"))
+    return rows, payload
 
 
 def run(smoke: bool = False, model: bool = False) -> list[str]:
@@ -128,6 +165,46 @@ def _collect(smoke: bool = False, model: bool = False
                    f"GFLOPS={gflops(fl, t_one):.1f};x{base / t_one:.2f};"
                    f"vs_twopass=x{t_two / t_one:.2f}"))
 
+    # --- V6: dtype-templated one-pass (bf16 compute, f32 accumulate) -----
+    def onepass_bf16(x, c):
+        am, md, det, sums, counts = onepass_backend(
+            x.astype(jnp.bfloat16), c.astype(jnp.bfloat16))
+        return means_from_sums(sums, counts, c), am
+
+    t_bf16 = time_call(jax.jit(onepass_bf16), x, c)
+    out.append(row("fig7_v6_bf16", t_bf16,
+                   f"GFLOPS={gflops(fl, t_bf16):.1f};x{base / t_bf16:.2f};"
+                   f"vs_f32_onepass=x{t_one / t_bf16:.2f}"))
+
+    # --- V6: small-K fast-path template vs the generic Pallas kernel ----
+    # Interpret-mode kernel comparison at the smoke shape (a template
+    # signal, not a throughput figure — benchmarks/common.py explains why
+    # CPU perf points avoid Pallas interpret mode).
+    from repro.kernels import ops as _ops
+    sm, sk_, sf = SMOKE_M, SMOKE_K, SMOKE_F
+    xs = jax.random.normal(jax.random.PRNGKey(2), (sm, sf), jnp.float32)
+    cs = jax.random.normal(jax.random.PRNGKey(3), (sk_, sf), jnp.float32)
+    sp = clamp_params(sm, sk_, sf, KernelParams(256, 128, 128))
+    t_sk = time_call(lambda: jax.block_until_ready(
+        _ops.fused_assign(xs, cs, sp, variant="smallk", interpret=True)),
+        iters=2, warmup=1)
+    t_gen = time_call(lambda: jax.block_until_ready(
+        _ops.fused_assign(xs, cs, sp, variant="generic", interpret=True)),
+        iters=2, warmup=1)
+    out.append(row("fig7_v6_smallk", t_sk,
+                   f"interpret=True;shape=({sm},{sk_},{sf});"
+                   f"vs_generic=x{t_gen / t_sk:.2f}"))
+
+    # --- irregular shapes: tall-skinny and wide-F (one-pass iteration) ---
+    for label, im, ik, if_ in (SMOKE_IRREGULAR if smoke else IRREGULAR):
+        xi = jax.random.normal(jax.random.PRNGKey(4), (im, if_), jnp.float32)
+        ci = jax.random.normal(jax.random.PRNGKey(5), (ik, if_), jnp.float32)
+        ti = time_call(one_fn, xi, ci)
+        ifl = distance_flops(im, ik, if_)
+        out.append(row(label, ti,
+                       f"GFLOPS={gflops(ifl, ti):.1f};"
+                       f"shape=({im},{ik},{if_})"))
+
     if smoke:
         # CI smoke: drive the real Pallas one-pass kernel (interpret mode)
         # end-to-end through the estimator at the tiny shape.
@@ -147,13 +224,16 @@ def _collect(smoke: bool = False, model: bool = False
         out.append(row(label, t, f"mode={policy.mode}"))
 
     traffic_rows, traffic = _traffic_rows(m, k, f)
+    template_rows, template = _template_rows(m, k, f)
     if model:
         out.extend(traffic_rows)
+        out.extend(template_rows)
     payload = {
         "shape": {"m": m, "k": k, "f": f},
         "smoke": smoke,
         "rows": [r.split(",", 2) for r in out],
         "traffic_model_bytes": traffic,
+        "template_model": template,
     }
     return out, payload
 

@@ -1,0 +1,77 @@
+"""CI gate: compare a fresh ``bench_stepwise`` artifact against the
+committed ``BENCH_stepwise.json`` baseline and fail on wall-time regression
+of the guarded rungs.
+
+Usage::
+
+    python -m benchmarks.check_regression BASELINE NEW \
+        [--rung fig7_v5_onepass] [--max-ratio 1.25]
+
+``--rung`` may repeat; default guards the one-pass rung. A rung missing
+from the *baseline* is skipped (it was just added); a rung missing from the
+*new* artifact is an error (a ladder rung silently disappeared). Rows whose
+recorded time is 0 (model rows) are rejected as guards.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _times(payload: dict) -> dict[str, float]:
+    return {name: float(t) for name, t, _ in payload["rows"]}
+
+
+def check(baseline: dict, new: dict, rungs: list[str],
+          max_ratio: float) -> list[str]:
+    """Return a list of failure messages (empty = gate passes)."""
+    base_t, new_t = _times(baseline), _times(new)
+    failures = []
+    for rung in rungs:
+        if rung not in new_t:
+            failures.append(f"{rung}: missing from the new artifact")
+            continue
+        if rung not in base_t:
+            print(f"check_regression: {rung} not in baseline yet — skipped")
+            continue
+        old, cur = base_t[rung], new_t[rung]
+        if old <= 0.0:
+            failures.append(f"{rung}: baseline time is {old} — not a "
+                            f"measurable rung")
+            continue
+        ratio = cur / old
+        verdict = "FAIL" if ratio > max_ratio else "ok"
+        print(f"check_regression: {rung}: {old:.1f} -> {cur:.1f} us "
+              f"(x{ratio:.2f}, limit x{max_ratio:.2f}) {verdict}")
+        if ratio > max_ratio:
+            failures.append(f"{rung}: {old:.1f} -> {cur:.1f} us is a "
+                            f"x{ratio:.2f} regression (limit "
+                            f"x{max_ratio:.2f})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_stepwise.json")
+    ap.add_argument("new", help="freshly produced BENCH_stepwise.json")
+    ap.add_argument("--rung", action="append", default=None,
+                    help="rung name to guard (repeatable); default "
+                         "fig7_v5_onepass")
+    ap.add_argument("--max-ratio", type=float, default=1.25,
+                    help="fail when new/baseline exceeds this (default "
+                         "1.25 = >25%% slower)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.new) as fh:
+        new = json.load(fh)
+    failures = check(baseline, new, args.rung or ["fig7_v5_onepass"],
+                     args.max_ratio)
+    for msg in failures:
+        print(f"check_regression: FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,13 +10,21 @@ and is passed per-estimator (``KMeans(..., autotune=cache)``), so two
 estimators can run with different tables in one process and tests get a
 fresh cache per case.
 
-Schema v2: entries are keyed by *kernel kind* as well as shape bucket. The
-assignment-only kernel and the one-pass Lloyd kernel share a tile-parameter
-type but have different VMEM footprints and traffic profiles, so a winner
-tuned for one must never be handed to the other (the v1 table, keyed only
-by shape, did exactly that). v1 files still load: their flat entries are
-interpreted as ``assign``-kind winners; other kinds fall through to the
-analytical selector.
+Schema v3: entries are keyed by *kernel kind and compute dtype* as well as
+shape bucket, and each winner records its *template variant* alongside the
+tiles::
+
+    {"schema": 3,
+     "kinds": {"assign/float32":  {"14-7-7": ["smallk", 256, 128, 128]},
+               "lloyd/bfloat16": {...}}}
+
+The assignment-only kernel and the one-pass Lloyd kernel share a
+tile-parameter type but have different VMEM footprints and traffic profiles
+(schema v2's lesson), and a winner tuned for f32 tiles is mis-sized for
+bf16/fp16 ones (half the bytes per element, 16-row sublanes) — so neither
+kind nor dtype may cross. Older files still load: v2 files (kind-keyed,
+pre-dtype) are interpreted as f32 winners of the ``generic`` template, and
+v1 files (flat bucket -> blocks) as f32 ``assign``-kind generic winners.
 """
 from __future__ import annotations
 
@@ -26,13 +34,17 @@ import os
 import threading
 from typing import Iterable, Optional
 
+import numpy as np
+
 from repro.kernels.ops import KernelParams
 
 _DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "core", "autotune_table.json")
 _PATH_ENV = "REPRO_AUTOTUNE_TABLE"   # still honoured, but only here
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+_DEFAULT_DTYPE = "float32"
+_LEGACY_VARIANT = "generic"
 
 
 def shape_bucket(m: int, k: int, f: int) -> str:
@@ -42,17 +54,30 @@ def shape_bucket(m: int, k: int, f: int) -> str:
     return f"{b(m)}-{b(k)}-{b(f)}"
 
 
+def _dtype_name(dtype) -> str:
+    """Normalize a dtype spec (None / str / np dtype / jnp scalar type) to
+    the canonical name used in table keys."""
+    if dtype is None:
+        return _DEFAULT_DTYPE
+    return np.dtype(dtype).name
+
+
+def _key(kind: str, dtype) -> str:
+    return f"{kind}/{_dtype_name(dtype)}"
+
+
 class AutotuneCache:
-    """Kind- and shape-bucketed winner table with lazy file backing.
+    """Kind-, dtype- and shape-bucketed winner table with lazy file backing.
 
     path=None keeps the cache purely in-memory; a string path loads the
-    JSON table on first lookup and ``save()`` writes winners back.
+    JSON table on first lookup and ``save()`` writes winners back. Each
+    entry is ``[variant, block_m, block_k, block_f]``.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
-        self._table: Optional[dict[str, dict[str, list[int]]]] = None
-        self._computed: dict[tuple, KernelParams] = {}
+        self._table: Optional[dict[str, dict[str, list]]] = None
+        self._computed: dict[tuple, tuple[str, KernelParams]] = {}
         self._lock = threading.RLock()   # build() holds it across put/save
 
     @classmethod
@@ -63,24 +88,33 @@ class AutotuneCache:
 
     # -- table I/O ---------------------------------------------------------
 
+    @staticmethod
+    def _upgrade(raw) -> dict:
+        """Any on-disk schema -> the v3 in-memory shape."""
+        if isinstance(raw, dict) and raw.get("schema", 1) >= 3:
+            return {k: dict(v) for k, v in raw["kinds"].items()}
+        if isinstance(raw, dict) and raw.get("schema", 1) == 2:
+            # v2: {kind: {bucket: [bm, bk, bf]}} — f32 generic winners
+            return {_key(kind, None): {b: [_LEGACY_VARIANT, *blocks]
+                                       for b, blocks in v.items()}
+                    for kind, v in raw["kinds"].items()}
+        # v1 flat {bucket: blocks}: winners tuned for the f32
+        # assignment-only kernel, generic template
+        return {_key("assign", None): {b: [_LEGACY_VARIANT, *blocks]
+                                       for b, blocks in dict(raw).items()}}
+
     def _load(self) -> dict:
         if self._table is None:
-            kinds: dict[str, dict[str, list[int]]] = {}
+            table: dict[str, dict[str, list]] = {}
             if self.path and os.path.exists(self.path):
                 with open(self.path) as fh:
-                    raw = json.load(fh)
-                if isinstance(raw, dict) and raw.get("schema", 1) >= 2:
-                    kinds = {k: dict(v) for k, v in raw["kinds"].items()}
-                else:
-                    # legacy v1 flat {bucket: blocks}: those winners were
-                    # tuned for the assignment-only kernel
-                    kinds = {"assign": dict(raw)}
-            self._table = kinds
+                    table = self._upgrade(json.load(fh))
+            self._table = table
         return self._table
 
     def save(self, path: Optional[str] = None) -> str:
-        """Persist the current table (schema v2, sorted, stable) and return
-        the path. Legacy v1 tables are upgraded on save."""
+        """Persist the current table (schema v3, sorted, stable) and return
+        the path. Legacy v1/v2 tables are upgraded on save."""
         path = path or self.path
         if not path:
             raise ValueError("AutotuneCache has no backing path to save to")
@@ -94,27 +128,33 @@ class AutotuneCache:
     # -- lookup / update ---------------------------------------------------
 
     def put(self, m: int, k: int, f: int, params: KernelParams, *,
-            kind: str = "assign") -> None:
+            kind: str = "assign", dtype=None,
+            variant: str = _LEGACY_VARIANT) -> None:
         with self._lock:
-            self._load().setdefault(kind, {})[shape_bucket(m, k, f)] = [
-                params.block_m, params.block_k, params.block_f]
+            self._load().setdefault(_key(kind, dtype), {})[
+                shape_bucket(m, k, f)] = [
+                variant, params.block_m, params.block_k, params.block_f]
 
-    def lookup(self, m: int, k: int, f: int, *,
-               kind: str = "assign") -> KernelParams:
-        """Persisted winner for (kind, shape bucket), else the analytical
-        winner for that kind computed on the fly (memoized per cache
-        instance). An entry of a *different* kind is never returned —
-        that's the v1 bug this schema fixes."""
+    def lookup(self, m: int, k: int, f: int, *, kind: str = "assign",
+               dtype=None) -> tuple[str, KernelParams]:
+        """Persisted ``(variant, params)`` winner for (kind, dtype, shape
+        bucket), else the analytical winner computed on the fly (memoized
+        per cache instance). An entry of a *different* kind or dtype is
+        never returned — kind-crossing was the v1 bug, dtype-crossing the
+        v2 one."""
         with self._lock:
-            hit = self._load().get(kind, {}).get(shape_bucket(m, k, f))
+            hit = self._load().get(_key(kind, dtype), {}).get(
+                shape_bucket(m, k, f))
             if hit is not None:
-                bm, bk, bf = hit
-                return KernelParams(bm, bk, bf)
-            key = (m, k, f, kind)
+                variant, bm, bk, bf = hit
+                return variant, KernelParams(bm, bk, bf)
+            key = (m, k, f, kind, _dtype_name(dtype))
             if key not in self._computed:
+                import jax.numpy as jnp
                 from repro.core.autotune import select_params
-                self._computed[key] = select_params(m, k, f, mode="model",
-                                                    kind=kind)
+                self._computed[key] = select_params(
+                    m, k, f, mode="model", kind=kind,
+                    dtype=jnp.dtype(_dtype_name(dtype)))
             return self._computed[key]
 
     def build(self, shapes: Iterable[tuple[int, int, int]], *,
@@ -122,17 +162,17 @@ class AutotuneCache:
               kinds: Iterable[str] = ("assign",)) -> dict:
         """Run the selection pipeline over ``shapes`` for each kernel kind,
         record the winners, and persist if file-backed. Returns the
-        kind -> bucket -> blocks table."""
+        "kind/dtype" -> bucket -> [variant, blocks...] table."""
         import jax.numpy as jnp
         from repro.core.autotune import select_params
-        dtype = dtype if dtype is not None else jnp.float32
+        jdtype = jnp.dtype(_dtype_name(dtype))
         with self._lock:
             for kind in kinds:
                 for (m, k, f) in shapes:
-                    self.put(m, k, f,
-                             select_params(m, k, f, mode=mode, dtype=dtype,
-                                           kind=kind),
-                             kind=kind)
+                    variant, p = select_params(m, k, f, mode=mode,
+                                               dtype=jdtype, kind=kind)
+                    self.put(m, k, f, p, kind=kind, dtype=dtype,
+                             variant=variant)
             if self.path:
                 self.save()
             return {k: dict(v) for k, v in self._load().items()}

@@ -15,6 +15,7 @@ estimator never branches on backend names.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -27,6 +28,12 @@ from repro.api.registry import AssignmentBackend, BackendCapabilityError
 from repro.kernels import ops, ref
 
 _INITS = ("kmeans++", "random")
+_COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
+
+# Row-chunk size for one-shot inference (predict/transform/score): bounds
+# the padded working set on large inputs instead of materializing a full
+# padded copy of X. Overridable per estimator via ``predict_chunk_rows``.
+_PREDICT_CHUNK_ROWS = 65_536
 
 
 class NotFittedError(RuntimeError):
@@ -57,6 +64,13 @@ class KMeans:
                 ``partial_fit`` streams caller-provided batches either way.
     params:     explicit :class:`KernelParams` tile override.
     autotune:   injectable :class:`AutotuneCache`; default = process cache.
+    compute_dtype: kernel compute dtype — "float32" (default), "bfloat16"
+                or "float16". X and the centroids are cast to this dtype at
+                the kernel boundary (paper §III-B's dtype-templated
+                kernels); accumulators, distances, counts and the stored
+                ``cluster_centers_`` stay f32.
+    predict_chunk_rows: row-chunk size for one-shot inference
+                (predict/transform/score); ``None`` = module default.
     sync_every: full-batch ``fit`` runs the Lloyd loop device-resident in
                 chunks of this many iterations (a ``lax.scan`` with the
                 convergence test on device); the host observes progress —
@@ -74,6 +88,8 @@ class KMeans:
                  params=None,
                  autotune: Optional[AutotuneCache] = None,
                  sync_every: int = 10,
+                 compute_dtype="float32",
+                 predict_chunk_rows: Optional[int] = None,
                  random_state: int = 0):
         if n_clusters < 1:
             raise ValueError(f"n_clusters must be >= 1, got {n_clusters}")
@@ -81,6 +97,17 @@ class KMeans:
             raise ValueError(f"init must be one of {_INITS}, got {init!r}")
         if sync_every < 1:
             raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+        try:
+            dtype_ok = jnp.dtype(compute_dtype).name in _COMPUTE_DTYPES
+        except TypeError:                  # unparseable spec, e.g. "bf16"
+            dtype_ok = False
+        if not dtype_ok:
+            raise ValueError(
+                f"compute_dtype must be one of {_COMPUTE_DTYPES}, "
+                f"got {compute_dtype!r}")
+        if predict_chunk_rows is not None and predict_chunk_rows < 1:
+            raise ValueError(f"predict_chunk_rows must be >= 1, "
+                             f"got {predict_chunk_rows}")
         self.n_clusters = n_clusters
         self.max_iter = max_iter
         self.tol = tol
@@ -91,6 +118,8 @@ class KMeans:
         self.params = params
         self.autotune = autotune if autotune is not None else default_cache()
         self.sync_every = sync_every
+        self.compute_dtype = jnp.dtype(compute_dtype)
+        self.predict_chunk_rows = predict_chunk_rows
         self.random_state = random_state
 
         self._backend: AssignmentBackend = self.fault.resolve_backend(backend)
@@ -120,18 +149,29 @@ class KMeans:
                 "this KMeans instance is not fitted yet; call fit() or "
                 "partial_fit() first")
 
+    def _cast(self, a: jax.Array) -> jax.Array:
+        """Cast to the compute dtype at the kernel boundary (no-op f32)."""
+        return a if a.dtype == self.compute_dtype else \
+            a.astype(self.compute_dtype)
+
     def _resolve_params(self, m: int, f: int, *, backend=None):
         """Tile selection for one problem shape: explicit override, else the
-        injectable autotune cache (paper §III-B table lookup). One-pass
-        backends consult the ``lloyd``-kind entries — an assignment-only
-        winner must never be handed to the fused-update kernel."""
+        injectable autotune cache (paper §III-B table lookup), keyed by
+        kernel kind *and* compute dtype. One-pass backends consult the
+        ``lloyd``-kind entries — an assignment-only winner must never be
+        handed to the fused-update kernel — and a winner tuned for f32
+        tiles is never handed to the bf16/fp16 templates."""
         backend = backend if backend is not None else self._backend
         if not backend.takes_params:
             return None
-        kind = "lloyd" if backend.fuses_update else "assign"
-        p = self.params or self.autotune.lookup(m, self.n_clusters, f,
-                                                kind=kind)
-        return ops.clamp_params(m, self.n_clusters, f, p)
+        if self.params is not None:
+            p = self.params
+        else:
+            _, p = self.autotune.lookup(m, self.n_clusters, f, kind=(
+                "lloyd" if backend.fuses_update else "assign"),
+                dtype=self.compute_dtype)
+        return ops.clamp_params(m, self.n_clusters, f, p,
+                                dtype=self.compute_dtype)
 
     def _predict_backend(self) -> AssignmentBackend:
         """Prediction is assignment-only. A one-pass backend would compute
@@ -149,11 +189,13 @@ class KMeans:
         key = ("assign", params)
         if key not in self._step_cache:
             backend = self._predict_backend()
+            cast = self._cast
             if backend.takes_injection:
                 fn = jax.jit(lambda x, c, inj: backend(
-                    x, c, params=params, inj=inj))
+                    cast(x), cast(c), params=params, inj=inj))
             else:
-                fn = jax.jit(lambda x, c: backend(x, c, params=params))
+                fn = jax.jit(lambda x, c: backend(cast(x), cast(c),
+                                                  params=params))
             self._step_cache[key] = fn
         return self._step_cache[key]
 
@@ -178,7 +220,9 @@ class KMeans:
             backend = self._backend
 
             def step(x, centroids, inj=None):
-                out = backend(x, centroids, params=params, inj=inj)
+                x = self._cast(x)
+                out = backend(x, self._cast(centroids), params=params,
+                              inj=inj)
                 am, md, det, new_c, counts = self._apply_update(
                     out, x, centroids)
                 inertia = jnp.sum(md)
@@ -200,7 +244,9 @@ class KMeans:
             fuses = backend.fuses_update
 
             def step(x, centroids, counts, inj=None):
-                out = backend(x, centroids, params=params, inj=inj)
+                x = self._cast(x)
+                out = backend(x, self._cast(centroids), params=params,
+                              inj=inj)
                 if fuses:   # block sums/counts come out of the kernel
                     am, md, det, sums, bcnt = out
                 else:
@@ -244,7 +290,7 @@ class KMeans:
 
                 def live(_):
                     xa = plan if takes_params else plan.x
-                    out = backend(xa, centroids,
+                    out = backend(xa, self._cast(centroids),
                                   params=params if takes_params else None,
                                   inj=inj if takes_inj else None)
                     am_b, md, det_i, new_c, counts = self._apply_update(
@@ -324,6 +370,9 @@ class KMeans:
         if centroids is None:
             key, sub = jax.random.split(key)
             centroids = self.init_centroids(x, sub)
+        # the estimator's centroid state is always f32; the compute dtype
+        # applies at the kernel boundary only
+        centroids = jnp.asarray(centroids, jnp.float32)
         if self.batch_size is not None:
             return self._fit_minibatch(x, centroids, on_iteration)
         return self._fit_fullbatch(x, centroids, key, on_iteration)
@@ -336,8 +385,11 @@ class KMeans:
         takes_inj = self._backend.takes_injection
         inj_rng = self._campaign_rng()
         # per-fit data plan: pad + row-norm X exactly once, reuse every
-        # iteration (two-pass pipelines re-did both per kernel call)
-        plan = ops.plan_data(x, params)
+        # iteration (two-pass pipelines re-did both per kernel call). The
+        # plan is built in the compute dtype so the per-iteration cost of a
+        # bf16/fp16 fit is zero casts of X — only the (K, F) centroids are
+        # cast per step.
+        plan = ops.plan_data(self._cast(x), params)
 
         am = jnp.zeros((m,), jnp.int32)
         det = jnp.zeros((), jnp.int32)
@@ -435,7 +487,8 @@ class KMeans:
         converges like mini-batch k-means regardless of block order."""
         x = jnp.asarray(x)
         if self.cluster_centers_ is None:
-            self.cluster_centers_ = self.init_centroids(x)
+            self.cluster_centers_ = jnp.asarray(self.init_centroids(x),
+                                                jnp.float32)
             self._counts = jnp.zeros((self.n_clusters,), jnp.float32)
             self.detected_errors_ = 0
             self.n_iter_ = 0
@@ -458,7 +511,15 @@ class KMeans:
         self.detected_errors_ += int(det)
         return self
 
-    def _predict_full(self, x: jax.Array):
+    def _row_chunks(self, m: int):
+        """Row slices for one-shot inference: bounds the padded working set
+        on large inputs (a full padded copy of X is never materialized).
+        At most two distinct chunk shapes compile — the full chunk and the
+        remainder."""
+        chunk = self.predict_chunk_rows or _PREDICT_CHUNK_ROWS
+        return [slice(s, min(s + chunk, m)) for s in range(0, m, chunk)]
+
+    def _predict_block(self, x: jax.Array):
         backend = self._predict_backend()
         params = self._resolve_params(x.shape[0], x.shape[1],
                                       backend=backend)
@@ -467,6 +528,16 @@ class KMeans:
             from repro.kernels.distance_argmin_ft import no_injection
             return fn(x, self.cluster_centers_, no_injection())
         return fn(x, self.cluster_centers_)
+
+    def _predict_full(self, x: jax.Array):
+        chunks = self._row_chunks(x.shape[0])
+        if len(chunks) <= 1:              # includes zero-row input
+            return self._predict_block(x)
+        parts = [self._predict_block(x[s]) for s in chunks]
+        am = jnp.concatenate([p[0] for p in parts])
+        dist = jnp.concatenate([p[1] for p in parts])
+        det = functools.reduce(lambda a, b: a + b, [p[2] for p in parts])
+        return am, dist, det
 
     def predict(self, x: jax.Array) -> jax.Array:
         """Nearest-centroid labels for new data (no injection, ever)."""
@@ -478,10 +549,20 @@ class KMeans:
         return self.fit(x).labels_
 
     def transform(self, x: jax.Array) -> jax.Array:
-        """Distances to every centroid, shape (M, n_clusters)."""
+        """Distances to every centroid, shape (M, n_clusters). Chunked over
+        rows like :meth:`predict`, so the (M, F) working set stays bounded
+        for large inputs."""
         self._check_fitted()
-        d = ref.distance_matrix(jnp.asarray(x), self.cluster_centers_)
-        return jnp.sqrt(jnp.maximum(d, 0.0))
+        x = jnp.asarray(x)
+
+        def block(b):
+            d = ref.distance_matrix(b, self.cluster_centers_)
+            return jnp.sqrt(jnp.maximum(d, 0.0))
+
+        chunks = self._row_chunks(x.shape[0])
+        if len(chunks) <= 1:              # includes zero-row input
+            return block(x)
+        return jnp.concatenate([block(x[s]) for s in chunks])
 
     def score(self, x: jax.Array) -> float:
         """Negative inertia on ``x`` (sklearn convention: higher = better)."""
@@ -514,6 +595,8 @@ class KMeans:
                 "backend": self.backend,
                 "batch_size": self.batch_size,
                 "sync_every": self.sync_every,
+                "compute_dtype": self.compute_dtype.name,
+                "predict_chunk_rows": self.predict_chunk_rows,
                 "random_state": self.random_state,
                 "params": (None if self.params is None else
                            [self.params.block_m, self.params.block_k,
@@ -544,6 +627,8 @@ class KMeans:
                  init=cfg["init"], fault=fault, backend=cfg["backend"],
                  batch_size=cfg["batch_size"], params=params,
                  sync_every=cfg.get("sync_every", 10),  # pre-v2 states
+                 compute_dtype=cfg.get("compute_dtype", "float32"),
+                 predict_chunk_rows=cfg.get("predict_chunk_rows"),
                  random_state=cfg["random_state"], autotune=autotune)
         km.cluster_centers_ = jnp.asarray(state["cluster_centers"])
         counts = state.get("counts")

@@ -74,10 +74,12 @@ def assign_gemm_fused(x: jax.Array, c: jax.Array):
 
 def _row_norms(x) -> jax.Array:
     """True-distance correction term; reuses the DataPlan's precomputed
-    norms instead of re-norming X every iteration."""
+    norms instead of re-norming X every iteration. Always f32, like the
+    plan's norms — bf16/fp16 X must not degrade the distance offsets."""
     if isinstance(x, ops.DataPlan):
         return x.xn
-    return jnp.sum(x * x, axis=1)
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=1)
 
 
 def assign_fused(x, c: jax.Array, params=None):
@@ -110,7 +112,7 @@ def assign_lloyd_xla(x: jax.Array, c: jax.Array):
     onehot = jax.nn.one_hot(am, c.shape[0], dtype=x.dtype)
     sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
                                preferred_element_type=jnp.float32)
-    counts = jnp.sum(onehot, axis=0)
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
     return am, md, _zero(), sums, counts
 
 

@@ -3,13 +3,21 @@
 The paper generates ~150 CUTLASS kernels per dtype over a pruned parameter
 space, keeps those that compile and run, benchmarks 64 problem sizes and
 selects a per-shape winner. On TPU the "template instantiation" is a Pallas
-closure specialization, but the search/selection pipeline is the same:
+closure specialization, but the search/selection pipeline is the same — and
+as of the template-family refactor it searches three axes, not one:
 
-  1. ``parameter_space()``   — candidates under the paper's pruning rules
+  variant x tiles x dtype
+
+  1. ``parameter_space(dtype)`` — candidates under the paper's pruning rules
                                (§III-B-1): powers of two, contraction tile
-                               tied to the pipeline depth, MXU-aligned tiles.
-  2. ``feasible()``          — does the kernel lower (compile-time check) and
-                               does the working set fit VMEM.
+                               tied to the pipeline depth, MXU-aligned
+                               tiles. 2-byte dtypes admit wider tiles (the
+                               same VMEM budget holds twice the elements).
+  2. ``feasible()``          — does the kernel lower (compile-time check),
+                               does the working set fit VMEM (dtype-aware
+                               byte sizing), is the sublane alignment legal
+                               for the dtype, and — for the ``smallk``
+                               variant — does padded K fit one tile.
   3. ``score()``             — selection criterion. Two modes:
                                "model": analytical HBM-traffic/MXU-occupancy
                                model (used when the target TPU is absent —
@@ -21,6 +29,11 @@ closure specialization, but the search/selection pipeline is the same:
                                Lives in ``repro.api.cache`` as an injectable
                                object (passed per-estimator); this module
                                keeps only the search/selection pipeline.
+
+``select_params`` returns a ``(variant, KernelParams)`` pair. The variant
+is implied by the winning tiles (``ops.resolve_variant``: smallk iff K fits
+one ``block_k`` tile), so kernel dispatch and selection can never disagree;
+the pair makes the chosen template explicit to callers and to the cache.
 """
 from __future__ import annotations
 
@@ -33,14 +46,15 @@ from typing import Iterable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import (KernelParams, clamp_params, lloyd_vmem_bytes,
-                               _round_up)
+from repro import hw as _hw
+from repro.kernels.ops import (VARIANTS, KernelParams, clamp_params,  # noqa: F401 — VARIANTS re-exported as selection vocabulary
+                               lloyd_vmem_bytes, sublane_align, _round_up)
 
-# TPU v5e constants (roofline/hw.py mirrors these).
-MXU_FLOPS = 197e12        # bf16 peak; f32 ~ 1/2
-HBM_BW = 819e9            # bytes/s
-VMEM_BUDGET = 96 * 2**20  # bytes usable per core (half of 128 MiB v5e VMEM,
-                          # leaving room for Mosaic's own buffers)
+# TPU v5e constants — hoisted to repro.hw (shared with roofline/hw.py so the
+# two models can't drift); the old names stay importable from here.
+MXU_FLOPS = _hw.PEAK_FLOPS_BF16   # 2-byte peak; f32 ~ 1/2
+HBM_BW = _hw.HBM_BW               # bytes/s
+VMEM_BUDGET = _hw.VMEM_BUDGET     # bytes usable per core
 
 # Kernel kinds sharing the tile-parameter space but with distinct VMEM
 # footprints and HBM-traffic profiles (winners must not cross kinds).
@@ -49,10 +63,18 @@ KINDS = ("assign", "lloyd")
 
 def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
     """Pruned candidate grid (paper rules: powers of 2; Warp.K=Threadblock.K
-    maps to a single contraction tile; thread tile fixed by MXU shape)."""
+    maps to a single contraction tile; thread tile fixed by MXU shape).
+
+    The grid is per-dtype, like the paper's per-dtype generator: 2-byte
+    dtypes (bf16/fp16) halve every tile's bytes, so the same VMEM budget
+    admits one more power of two on the sample and contraction axes.
+    """
     block_ms = [64, 128, 256, 512, 1024]
     block_ks = [128, 256, 512]
     block_fs = [128, 256, 512, 1024]
+    if jnp.dtype(dtype).itemsize <= 2:
+        block_ms = block_ms + [2048]
+        block_fs = block_fs + [2048]
     out = []
     for bm, bk, bf in itertools.product(block_ms, block_ks, block_fs):
         out.append(KernelParams(block_m=bm, block_k=bk, block_f=bf))
@@ -60,20 +82,32 @@ def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
 
 
 def feasible(p: KernelParams, dtype=jnp.float32, *, kind: str = "assign",
-             shape: Optional[tuple[int, int, int]] = None) -> bool:
+             shape: Optional[tuple[int, int, int]] = None,
+             variant: str = "generic") -> bool:
     """VMEM fit + alignment. The lowering check happens once in tests
     (tests/test_autotune.py) — analogous to the paper's compile-and-run
     filter; here we apply the cheap structural conditions.
 
-    The one-pass Lloyd kernel additionally keeps the whole stashed X row
-    tile and its (K, F) partial-sum output block resident, so its VMEM
-    model depends on the problem shape (``shape=(m, k, f)``)."""
-    if p.block_m % 8 or p.block_k % 128 or p.block_f % 128:
+    Dtype-aware: the sublane alignment of ``block_m`` is 16 for 2-byte
+    dtypes (vs 8 for f32) and the working-set bytes scale with the input
+    itemsize. The ``smallk`` variant additionally needs the problem shape
+    to check that padded K fits a single ``block_k`` tile; the one-pass
+    Lloyd kernel keeps the whole stashed X row tile and its (K, F)
+    partial-sum output block resident, so its VMEM model also depends on
+    ``shape=(m, k, f)``.
+    """
+    if p.block_m % sublane_align(dtype) or p.block_k % 128 or p.block_f % 128:
         return False
+    if variant == "smallk":
+        if shape is None:
+            return False
+        _, k, _ = shape
+        if _round_up(k, p.block_k) != p.block_k:
+            return False
     if kind == "lloyd" and shape is not None:
         _, k, f = shape
-        return lloyd_vmem_bytes(p, k, f) <= VMEM_BUDGET
-    return p.vmem_bytes() <= VMEM_BUDGET
+        return lloyd_vmem_bytes(p, k, f, dtype) <= VMEM_BUDGET
+    return p.vmem_bytes(dtype) <= VMEM_BUDGET
 
 
 def iteration_traffic(m: int, k: int, f: int, p: KernelParams, *,
@@ -94,11 +128,17 @@ def iteration_traffic(m: int, k: int, f: int, p: KernelParams, *,
     costs only the per-row-tile partial sums/counts round trip of the
     tree-reduction. Padding and norms are amortized by the per-fit
     :class:`~repro.kernels.ops.DataPlan` (zero per-iteration bytes).
+
+    Byte sizing is split by stream: X/C reads move the input dtype
+    (f32/bf16/fp16), while distances, partial sums, counts and the final
+    centroids are always f32 and the argmin is always i32 — the previous
+    model charged the input itemsize for those f32 streams too, skewing
+    every non-f32 estimate.
     """
     if pipeline not in ("one_pass", "two_pass"):
         raise ValueError(f"pipeline must be 'one_pass' or 'two_pass', "
                          f"got {pipeline!r}")
-    p = clamp_params(m, k, f, p)
+    p = clamp_params(m, k, f, p, dtype)
     b = jnp.dtype(dtype).itemsize
     mp = _round_up(m, p.block_m)
     kp = _round_up(k, p.block_k)
@@ -108,61 +148,83 @@ def iteration_traffic(m: int, k: int, f: int, p: KernelParams, *,
     t = {
         "x_read": mp * fp * n_ktiles * b,         # once per centroid tile
         "c_read": kp * fp * n_mtiles * b,         # once per sample tile
-        "assign_out": mp * (b + 4),               # min-dist f32 + argmin i32
+        "assign_out": mp * (4 + 4),               # min-dist f32 + argmin i32
     }
     if pipeline == "two_pass":
-        t["prep"] = (mp * fp + 2 * m * f) * b     # re-pad write + 2x re-read
+        # re-pad write + 2x re-read in the input dtype; row norms are f32
+        t["prep"] = (mp * fp + 2 * m * f) * b
         t["update_x_reread"] = m * f * b + m * 4  # second pass over X + labels
-        t["update_out"] = (k * f + k) * b
+        t["update_out"] = (k * f + k) * 4         # sums/counts are f32
     else:
         t["prep"] = 0
         t["update_x_reread"] = 0
-        # partial blocks written by the kernel, then read + collapsed by the
-        # tree-reduction into the (K, F) sums / (K,) counts
-        partials = n_mtiles * (kp * fp + kp) * b
-        t["update_out"] = 2 * partials + (k * f + k) * b
+        # f32 partial blocks written by the kernel, then read + collapsed by
+        # the tree-reduction into the (K, F) sums / (K,) counts
+        partials = n_mtiles * (kp * fp + kp) * 4
+        t["update_out"] = 2 * partials + (k * f + k) * 4
     t["total"] = sum(t.values())
     return t
 
 
 def model_score(m: int, k: int, f: int, p: KernelParams,
-                dtype=jnp.float32, kind: str = "assign") -> float:
+                dtype=jnp.float32, kind: str = "assign",
+                variant: str = "generic") -> float:
     """Analytical time estimate (seconds) for one fused-kernel launch.
 
     HBM traffic: X is re-read once per centroid tile, C once per sample
     tile (the paper's §V-A-6 observation that balanced tiles minimize data
-    movement); compute: 2 M K F MACs on the MXU. The kernel is pipelined,
-    so time ~ max(compute, memory) + epilogue. The ``lloyd`` kind adds the
-    partial-sum output traffic and the one-hot update GEMM of the fused
-    epilogue.
+    movement); compute: 2 M K F MACs on the MXU at the dtype's peak rate.
+    The kernel is pipelined, so time ~ max(compute, memory) + epilogue.
+    The ``lloyd`` kind adds the partial-sum output traffic and the one-hot
+    update GEMM of the fused epilogue.
+
+    The variant axis shows up in the min/argmin output stream: the generic
+    template initializes the revisited (bm, 1) blocks and re-reads/rewrites
+    them on every centroid tile (2 x n_ktiles visits), where the ``smallk``
+    template writes each block exactly once — so whenever K fits a single
+    centroid tile the small-K variant strictly wins the model, which is
+    what routes it through selection.
     """
-    p = clamp_params(m, k, f, p)
+    p = clamp_params(m, k, f, p, dtype)
     bytes_per = jnp.dtype(dtype).itemsize
     mp = -(-m // p.block_m) * p.block_m
     kp = -(-k // p.block_k) * p.block_k
     fp = -(-f // p.block_f) * p.block_f
-    x_reads = mp * fp * (kp // p.block_k)
+    n_ktiles = kp // p.block_k
+    x_reads = mp * fp * n_ktiles
     c_reads = kp * fp * (mp // p.block_m)
     hbm_bytes = (x_reads + c_reads) * bytes_per
     macs = mp * kp * fp
     if kind == "lloyd":
-        # partial sums/counts blocks out + tree-reduction round trip
-        partials = (mp // p.block_m) * (kp * fp + kp) * bytes_per
+        # f32 partial sums/counts blocks out + tree-reduction round trip
+        partials = (mp // p.block_m) * (kp * fp + kp) * 4
         hbm_bytes += 2 * partials
         macs += mp * kp * fp          # one-hot scatter GEMM in the epilogue
     hbm = hbm_bytes / HBM_BW
-    peak = MXU_FLOPS if dtype == jnp.bfloat16 else MXU_FLOPS / 2
+    peak = _hw.peak_flops(dtype)
     # MXU efficiency falls off for tiles thinner than the 128x128 systolic
     # array and for padded remainders.
     util = min(p.block_k / 128.0, 1.0) * min(p.block_m / 128.0, 1.0)
     util *= (m / mp) * (k / kp) * (f / fp)
     compute = 2.0 * macs / (peak * max(util, 1e-3))
-    epilogue = mp * kp * bytes_per / (HBM_BW * 16)  # VMEM-resident reduce
-    return float(max(hbm, compute) + epilogue)
+    # VMEM-resident reduce over the (bm, bk) accumulator — always f32,
+    # whatever the input dtype
+    epilogue = mp * kp * 4 / (HBM_BW * 16)
+    # min/argmin stream: the generic template initializes the revisited
+    # (bm, 1) output blocks and re-reads/rewrites them on every centroid
+    # tile (2 x n_ktiles visits); smallk writes each block exactly once.
+    # This round trip happens at epilogue time, serialized behind the tile
+    # pipeline, so it adds outside the max() — which is also what makes the
+    # small-K variant strictly outrank the generic one whenever K fits a
+    # single centroid tile, even for compute-bound shapes.
+    out_visits = 1 if variant == "smallk" else 2 * n_ktiles
+    out_stream = out_visits * mp * 8 / HBM_BW
+    return float(max(hbm, compute) + epilogue + out_stream)
 
 
 def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
-                  dtype=jnp.float32, kind: str = "assign") -> float:
+                  dtype=jnp.float32, kind: str = "assign",
+                  variant: Optional[str] = None) -> float:
     """Median wall-time of the real kernel on the current backend (seconds).
 
     Inputs are seeded-random (all-ones invited constant folding), the
@@ -174,9 +236,9 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
     kx, kc = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (m, f), dtype)
     c = jax.random.normal(kc, (k, f), dtype)
-    p = clamp_params(m, k, f, p)
+    p = clamp_params(m, k, f, p, dtype)
     step = fused_lloyd if kind == "lloyd" else fused_assign
-    fn = jax.jit(functools.partial(step, params=p))
+    fn = jax.jit(functools.partial(step, params=p, variant=variant))
     jax.block_until_ready(fn(x, c))          # compile outside the timing
     times = []
     for _ in range(iters):
@@ -189,19 +251,37 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
 
 def select_params(m: int, k: int, f: int, *, mode: str = "model",
                   dtype=jnp.float32, kind: str = "assign",
-                  space: Optional[Iterable[KernelParams]] = None) -> KernelParams:
-    """Pick the winner for one problem shape and kernel kind."""
+                  space: Optional[Iterable[KernelParams]] = None
+                  ) -> tuple[str, KernelParams]:
+    """Pick the winner for one problem shape and kernel kind.
+
+    Searches variant x tiles for the given dtype and returns the winning
+    ``(variant, KernelParams)`` pair. The small-K variant competes whenever
+    padded K fits one centroid tile and, by construction of the model,
+    outranks the generic template there (no revisited-output machinery).
+    """
+    from repro.kernels.ops import resolve_variant
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
     best, best_s = None, float("inf")
     for p in (space or parameter_space(dtype)):
-        if not feasible(p, dtype, kind=kind, shape=(m, k, f)):
+        # The variant is a function of (K, tiles) — the dispatch rule — so
+        # each tile candidate is scored as the template it would actually
+        # run (scoring the other variant would benchmark a kernel the
+        # runtime can never launch for these tiles). Dispatch sees the
+        # *clamped* tiles, so the variant must be derived from them too:
+        # clamping can shrink block_k below the K-fit threshold.
+        variant = resolve_variant(k, clamp_params(m, k, f, p, dtype))
+        if not feasible(p, dtype, kind=kind, shape=(m, k, f),
+                        variant=variant):
             continue
-        s = (model_score(m, k, f, p, dtype=dtype, kind=kind)
+        s = (model_score(m, k, f, p, dtype=dtype, kind=kind,
+                         variant=variant)
              if mode == "model"
-             else measure_score(m, k, f, p, dtype=dtype, kind=kind))
+             else measure_score(m, k, f, p, dtype=dtype, kind=kind,
+                                variant=variant))
         if s < best_s:
-            best, best_s = p, s
+            best, best_s = (variant, p), s
     if best is None:
         hint = (" (the one-pass kernel keeps the stashed X row tile and "
                 "its (K, F) partial-sum block VMEM-resident; use a "
@@ -237,4 +317,4 @@ def lookup_params(m: int, k: int, f: int) -> KernelParams:
                   "repro.api.default_cache().lookup(m, k, f)",
                   DeprecationWarning, stacklevel=2)
     from repro.api.cache import default_cache
-    return default_cache().lookup(m, k, f)
+    return default_cache().lookup(m, k, f)[1]

@@ -79,8 +79,13 @@ class DistributedKMeans:
 
         def local_step(x, c, inj):
             from repro.core.kmeans import means_from_sums, protected_sums
+            # the estimator's compute dtype applies per shard, at the same
+            # kernel boundary as the single-device fit (the tile selection
+            # above is already keyed by it); centroids stay f32 across the
+            # psum and the update
+            x = est._cast(x)
             out = backend(
-                x, c, params=params,
+                x, est._cast(c), params=params,
                 inj=inj if backend.takes_injection else None)
             if backend.fuses_update:
                 # one-pass backend: the shard's (sums, counts) come out of

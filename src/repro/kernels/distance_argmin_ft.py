@@ -23,6 +23,13 @@ into the tile loop:
 Checksum arithmetic is O((bm + bk) * bf) per tile against the tile's
 O(bm * bk * bf) MACs — e.g. ~1.2 % extra FLOPs at (256, 128) tiles; the
 measured overhead is benchmarked in benchmarks/bench_ft_overhead.py.
+
+X and C tiles may be f32, bf16 or fp16 (the dtype axis of the §III-B
+template family); the main product accumulates in f32 and the checksums are
+computed from f32 casts of the resident tiles, so the detection threshold
+stays at f32-eps level for every input dtype. This FT template keeps the
+generic (revisited-output) grid for all K: its checksum scratch already
+holds everything VMEM-resident, so the small-K fast path buys nothing here.
 """
 from __future__ import annotations
 
@@ -35,7 +42,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
-from repro.kernels.distance_argmin import MIN_INIT
+from repro.kernels.distance_argmin import (MIN_INIT, fold_min,
+                                           tile_min_argmin)
 
 # Injection descriptor layout (SMEM scalars):
 # [enabled, m_tile, c_tile, f_tile, row_in_tile, col_in_tile] + delta (f32).
@@ -70,23 +78,29 @@ def _kernel(inj_ref, x_ref, c_ref, cn_ref,
     x = x_ref[...]
     c = c_ref[...]
 
-    # --- main MXU product ---------------------------------------------------
+    # --- main MXU product (native dtype in, f32 accumulate) -----------------
     acc_ref[...] += jax.lax.dot_general(
         x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
     # --- expected checksums, from VMEM-resident tiles (paper lines 15-24) ---
+    # Checksums run in f32 regardless of the input dtype: products of
+    # 2-byte values are exactly representable in f32, so the residual of a
+    # clean bf16/fp16 tile stays at f32 rounding level and the f32-eps
+    # threshold below applies unchanged.
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
     w_m = jax.lax.broadcasted_iota(jnp.float32, (bm, 1), 0) + 1.0   # e2 rows
     w_k = jax.lax.broadcasted_iota(jnp.float32, (1, bk), 1) + 1.0   # e2 cols
-    e1x = jnp.sum(x, axis=0, keepdims=True)                  # (1, bf)
-    e2x = jnp.sum(w_m * x, axis=0, keepdims=True)            # (1, bf)
-    ce1 = jnp.sum(c, axis=0, keepdims=True)                  # (1, bf)
-    ce2 = jnp.sum(w_k.reshape(bk, 1) * c, axis=0, keepdims=True)
+    e1x = jnp.sum(xf, axis=0, keepdims=True)                 # (1, bf)
+    e2x = jnp.sum(w_m * xf, axis=0, keepdims=True)           # (1, bf)
+    ce1 = jnp.sum(cf, axis=0, keepdims=True)                 # (1, bf)
+    ce2 = jnp.sum(w_k.reshape(bk, 1) * cf, axis=0, keepdims=True)
     dot_t = lambda a, b: jax.lax.dot_general(                # a (1|bm, bf) x b (bk|1, bf)^T
         a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    col1_ref[...] += dot_t(e1x, c)                           # (1, bk)
-    col2_ref[...] += dot_t(e2x, c)                           # (1, bk)
-    row1_ref[...] += dot_t(x, ce1)                           # (bm, 1)
-    row2_ref[...] += dot_t(x, ce2)                           # (bm, 1)
+    col1_ref[...] += dot_t(e1x, cf)                          # (1, bk)
+    col2_ref[...] += dot_t(e2x, cf)                          # (1, bk)
+    row1_ref[...] += dot_t(xf, ce1)                          # (bm, 1)
+    row2_ref[...] += dot_t(xf, ce2)                          # (bm, 1)
 
     # --- simulated SEU in the accumulator (compute-unit error) --------------
     hit = jnp.logical_and(
@@ -149,16 +163,8 @@ def _kernel(inj_ref, x_ref, c_ref, cn_ref,
         det_ref[...] += detected.astype(jnp.int32)
 
         # --- fused epilogue on the corrected tile ---------------------------
-        d = cn_ref[...] - 2.0 * acc
-        local_min = jnp.min(d, axis=1, keepdims=True)
-        cols_i = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
-        local_arg = jnp.min(
-            jnp.where(d == local_min, cols_i, jnp.iinfo(jnp.int32).max),
-            axis=1, keepdims=True) + c_idx * bk
-        cur = mind_ref[...]
-        take = local_min < cur
-        mind_ref[...] = jnp.where(take, local_min, cur)
-        argmin_ref[...] = jnp.where(take, local_arg, argmin_ref[...])
+        local_min, local_arg = tile_min_argmin(acc, cn_ref[...], c_idx * bk)
+        fold_min(mind_ref, argmin_ref, local_min, local_arg)
 
 
 def no_injection() -> jax.Array:

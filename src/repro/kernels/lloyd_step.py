@@ -27,6 +27,13 @@ This is the prerequisite shape for porting the §IV ABFT epilogue onto the
 one-pass kernel: the checksum accumulators of ``distance_argmin_ft`` attach
 to the same streamed tiles, and the update epilogue runs on the *corrected*
 accumulator.
+
+Template family (paper §III-B): the ``"smallk"`` variant drops the centroid
+grid dimension when padded K fits one ``block_k`` tile — every row tile is
+visited once, so min/argmin writes directly (no revisit compare) and the
+one-hot update epilogue fires in the same grid step. X and C tiles may be
+f32, bf16 or fp16; the stash buffer holds the input dtype (halving its VMEM
+at 2-byte dtypes) while every accumulator and output stays f32.
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
-from repro.kernels.distance_argmin import MIN_INIT
+from repro.kernels.distance_argmin import MIN_INIT, fold_min, tile_min_argmin
 
 # SMEM metadata layout: [true_m] — rows >= true_m are padding and must not
 # contribute to sums/counts.
@@ -91,37 +98,74 @@ def _kernel(meta_ref, x_ref, c_ref, cn_ref,
 
     @pl.when(f_idx == nf - 1)
     def _min_epilogue():
-        bk = acc_ref.shape[1]
-        d = cn_ref[...] - 2.0 * acc_ref[...]            # (bm, bk) via (1,bk) bcast
-        local_min = jnp.min(d, axis=1, keepdims=True)   # (bm, 1)
-        cols = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
-        local_arg = jnp.min(
-            jnp.where(d == local_min, cols, jnp.iinfo(jnp.int32).max),
-            axis=1, keepdims=True) + c_idx * bk         # first-min tie-break
-        cur = mind_ref[...]
-        take = local_min < cur                          # strict: earlier tile wins ties
-        mind_ref[...] = jnp.where(take, local_min, cur)
-        argmin_ref[...] = jnp.where(take, local_arg, argmin_ref[...])
+        local_min, local_arg = tile_min_argmin(
+            acc_ref[...], cn_ref[...], c_idx * acc_ref.shape[1])
+        fold_min(mind_ref, argmin_ref, local_min, local_arg)
 
     # Fused update epilogue: the argmin for this row tile is final — scatter
     # the stashed X tiles into per-cluster partial sums via a one-hot MXU
     # product, masking padded sample rows.
     @pl.when(jnp.logical_and(c_idx == nk - 1, f_idx == nf - 1))
     def _update_epilogue():
-        kp = counts_ref.shape[1]
-        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + m_idx * bm
-        valid = (rows < meta_ref[0]).astype(jnp.float32)           # (bm, 1)
-        clusters = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
-        onehot = (argmin_ref[...] == clusters).astype(jnp.float32) * valid
-        counts_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)   # (1, kp)
-        sums_ref[...] = jax.lax.dot_general(
-            onehot, xbuf_ref[...], (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)[None]              # (1, kp, fp)
+        _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
+                     m_idx, bm)
+
+
+def _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
+                 m_idx, bm):
+    """Shared one-hot update epilogue: final argmin -> per-cluster partial
+    sums/counts for this row tile. The one-hot matrix is exact (0/1) in the
+    stash dtype, so a 2-byte stash loses nothing; accumulation is f32."""
+    kp = counts_ref.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + m_idx * bm
+    valid = (rows < meta_ref[0]).astype(jnp.float32)           # (bm, 1)
+    clusters = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+    onehot = (argmin_ref[...] == clusters).astype(jnp.float32) * valid
+    counts_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)   # (1, kp)
+    sums_ref[...] = jax.lax.dot_general(
+        onehot.astype(xbuf_ref.dtype), xbuf_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]              # (1, kp, fp)
+
+
+def _kernel_smallk(meta_ref, x_ref, c_ref, cn_ref,
+                   mind_ref, argmin_ref, sums_ref, counts_ref,
+                   acc_ref, xbuf_ref):
+    """Small-K fast path: padded K is one centroid tile, grid (M/bm, F/bf).
+
+    Every row tile is visited exactly once, so there is no revisited
+    min/argmin accumulation: the epilogue computes min/argmin from the
+    VMEM-resident accumulator, writes it directly, and emits the one-hot
+    update in the same grid step."""
+    m_idx = pl.program_id(0)
+    f_idx = pl.program_id(1)
+    nf = pl.num_programs(1)
+    bm = acc_ref.shape[0]
+    bf = x_ref.shape[1]
+
+    @pl.when(f_idx == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Single centroid-tile sweep: every feature step is a first visit.
+    xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == nf - 1)
+    def _epilogue():
+        local_min, local_arg = tile_min_argmin(acc_ref[...], cn_ref[...], 0)
+        mind_ref[...] = local_min       # single visit: direct write
+        argmin_ref[...] = local_arg
+        _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
+                     m_idx, bm)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_k", "block_f", "interpret"))
+    static_argnames=("block_m", "block_k", "block_f", "variant", "interpret"))
 def lloyd_step(
     x: jax.Array,
     c: jax.Array,
@@ -131,12 +175,15 @@ def lloyd_step(
     block_m: int = 256,
     block_k: int = 128,
     block_f: int = 512,
+    variant: str = "generic",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Raw one-pass kernel entry. Shapes must be pre-padded to the block grid.
 
-    x (M, F) samples, c (K, F) centroids, cn (1, K) centroid sq-norms with
-    +inf in padded slots, meta (1,) int32 = [true_m]. Returns
+    x (M, F) samples, c (K, F) centroids (f32/bf16/fp16), cn (1, K) f32
+    centroid sq-norms with +inf in padded slots, meta (1,) int32 =
+    [true_m]. ``variant`` selects the template: ``"generic"`` or
+    ``"smallk"`` (requires padded K == block_k). Returns
     (min_d (M, 1), argmin (M, 1), sums (M/bm, K, F), counts (M/bm, K));
     sum the partial blocks over axis 0 for the (K, F) / (K,) totals.
     """
@@ -144,12 +191,49 @@ def lloyd_step(
     k = c.shape[0]
     assert m % block_m == 0 and k % block_k == 0 and f % block_f == 0, (
         f"unpadded shapes {(m, k, f)} vs blocks {(block_m, block_k, block_f)}")
-    grid = (m // block_m, k // block_k, f // block_f)
     num_m = m // block_m
 
+    out_shape = [
+        jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        jax.ShapeDtypeStruct((num_m, k, f), jnp.float32),
+        jax.ShapeDtypeStruct((num_m, k), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((block_m, block_k), jnp.float32),
+        pltpu.VMEM((block_m, f), x.dtype),   # stash in the input dtype
+    ]
+
+    if variant == "smallk":
+        assert k == block_k, (
+            f"smallk variant needs padded K ({k}) == block_k ({block_k})")
+        kernel = pl.pallas_call(
+            _kernel_smallk,
+            grid=(m // block_m, f // block_f),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec((block_m, block_f), lambda i, t: (i, t)),
+                pl.BlockSpec((block_k, block_f), lambda i, t: (0, t)),
+                pl.BlockSpec((1, block_k), lambda i, t: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_m, 1), lambda i, t: (i, 0)),
+                pl.BlockSpec((block_m, 1), lambda i, t: (i, 0)),
+                pl.BlockSpec((1, k, f), lambda i, t: (i, 0, 0)),
+                pl.BlockSpec((1, k), lambda i, t: (i, 0)),
+            ],
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")),
+            interpret=interpret,
+        )
+        return kernel(meta, x, c, cn)
+
+    assert variant == "generic", f"unknown kernel variant {variant!r}"
     kernel = pl.pallas_call(
         _kernel,
-        grid=grid,
+        grid=(m // block_m, k // block_k, f // block_f),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((block_m, block_f), lambda i, j, t: (i, t)),
@@ -162,16 +246,8 @@ def lloyd_step(
             pl.BlockSpec((1, k, f), lambda i, j, t: (i, 0, 0)),
             pl.BlockSpec((1, k), lambda i, j, t: (i, 0)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, 1), jnp.float32),
-            jax.ShapeDtypeStruct((m, 1), jnp.int32),
-            jax.ShapeDtypeStruct((num_m, k, f), jnp.float32),
-            jax.ShapeDtypeStruct((num_m, k), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_m, block_k), jnp.float32),
-            pltpu.VMEM((block_m, f), jnp.float32),
-        ],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,

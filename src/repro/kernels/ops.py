@@ -24,6 +24,23 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Kernel template variants (paper §III-B template family). "generic" keeps
+# the centroid grid dimension and accumulates min/argmin in the revisited
+# output block; "smallk" drops it when padded K fits one block_k tile.
+VARIANTS = ("generic", "smallk")
+
+
+def sublane_align(dtype) -> int:
+    """Minimum second-to-last-dimension tile multiple for a dtype: TPU
+    packs 2-byte dtypes two-per-sublane, so bf16/fp16 tiles need 16 rows
+    where f32 needs 8."""
+    return 16 if jnp.dtype(dtype).itemsize <= 2 else 8
+
+
+def _itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
 @dataclasses.dataclass(frozen=True)
 class KernelParams:
     """Tile parameters — the analogue of the paper's (threadblock, warp)
@@ -33,9 +50,11 @@ class KernelParams:
     block_k: int = 128   # centroid tile (paper's Threadblock.N)
     block_f: int = 512   # contraction tile (paper's Threadblock.K)
 
-    def vmem_bytes(self) -> int:
-        """Working-set estimate: x + c tiles (double-buffered) + acc + sums."""
-        tile = (self.block_m * self.block_f + self.block_k * self.block_f) * 4
+    def vmem_bytes(self, dtype=jnp.float32) -> int:
+        """Working-set estimate: x + c tiles (double-buffered, input dtype)
+        + f32 accumulator + f32 norm/checksum vectors."""
+        b = _itemsize(dtype)
+        tile = (self.block_m * self.block_f + self.block_k * self.block_f) * b
         acc = self.block_m * self.block_k * 4
         sums = 2 * (self.block_m + self.block_k) * 4
         return 2 * tile + acc + sums
@@ -44,15 +63,34 @@ class KernelParams:
 DEFAULT_PARAMS = KernelParams()
 
 
-def lloyd_vmem_bytes(params: KernelParams, k: int, f: int) -> int:
+def lloyd_vmem_bytes(params: KernelParams, k: int, f: int,
+                     dtype=jnp.float32) -> int:
     """Working-set estimate for the one-pass Lloyd kernel: the assignment
-    kernel's tiles plus the stashed X row tile and the per-row-tile
-    sums/counts output blocks (resident across the whole row-tile sweep)."""
+    kernel's tiles plus the stashed X row tile (input dtype) and the f32
+    per-row-tile sums/counts output blocks (resident across the sweep)."""
     kp = _round_up(k, params.block_k)
     fp = _round_up(f, params.block_f)
-    xbuf = params.block_m * fp * 4
+    xbuf = params.block_m * fp * _itemsize(dtype)
     out_blocks = (kp * fp + kp) * 4
-    return params.vmem_bytes() + xbuf + out_blocks
+    return params.vmem_bytes(dtype) + xbuf + out_blocks
+
+
+def resolve_variant(k: int, params: KernelParams,
+                    variant: Optional[str] = None) -> str:
+    """Template dispatch rule shared with the autotuner: the small-K fast
+    path applies exactly when padded K fits one centroid tile. An explicit
+    ``variant`` overrides (tests / benchmarks); ``"smallk"`` is validated
+    against the tile so an impossible request fails here, not in Mosaic."""
+    fits = _round_up(k, params.block_k) == params.block_k
+    if variant is None:
+        return "smallk" if fits else "generic"
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    if variant == "smallk" and not fits:
+        raise ValueError(
+            f"smallk variant needs K ({k}) to fit one centroid tile "
+            f"(block_k={params.block_k})")
+    return variant
 
 
 def _round_up(x: int, m: int) -> int:
@@ -109,14 +147,16 @@ def _pad_centroids(c, k: int, kp: int, fp: int):
     return cpad, cn
 
 
-def clamp_params(m: int, k: int, f: int, params: KernelParams) -> KernelParams:
-    """Shrink blocks that exceed the (padded) problem so tiny shapes work."""
+def clamp_params(m: int, k: int, f: int, params: KernelParams,
+                 dtype=jnp.float32) -> KernelParams:
+    """Shrink blocks that exceed the (padded) problem so tiny shapes work.
+    Alignment is dtype-aware: 2-byte dtypes keep 16-row sublane tiles."""
     def shrink(block, dim, align):
         while block > align and block > _round_up(dim, align):
             block //= 2
         return max(block, align)
     return KernelParams(
-        block_m=shrink(params.block_m, m, 8),
+        block_m=shrink(params.block_m, m, sublane_align(dtype)),
         block_k=shrink(params.block_k, k, 128),
         block_f=shrink(params.block_f, f, 128),
     )
@@ -124,7 +164,9 @@ def clamp_params(m: int, k: int, f: int, params: KernelParams) -> KernelParams:
 
 def _resolve_padded(x, c, params: Optional[KernelParams], kind: str):
     """Common front end: accept a raw X or a prebuilt :class:`DataPlan` and
-    return (plan, padded centroids, masked centroid norms, params)."""
+    return (plan, padded centroids, masked centroid norms, params). The
+    centroids are cast to the plan's dtype — the kernels' MXU product wants
+    one input dtype, and X's dtype is the template's compute dtype."""
     k = c.shape[0]
     if isinstance(x, DataPlan):
         plan = x
@@ -138,10 +180,12 @@ def _resolve_padded(x, c, params: Optional[KernelParams], kind: str):
     else:
         if params is None:
             from repro.api.cache import default_cache
-            params = default_cache().lookup(x.shape[0], k, x.shape[1],
-                                            kind=kind)
-        params = clamp_params(x.shape[0], k, x.shape[1], params)
+            _, params = default_cache().lookup(x.shape[0], k, x.shape[1],
+                                               kind=kind, dtype=x.dtype)
+        params = clamp_params(x.shape[0], k, x.shape[1], params,
+                              dtype=x.dtype)
         plan = plan_data(x, params)
+    c = c.astype(plan.xp.dtype)
     kp = _round_up(k, params.block_k)
     cp, cn = _pad_centroids(c, k, kp, plan.xp.shape[1])
     return plan, cp, cn, params
@@ -152,21 +196,25 @@ def fused_assign(
     c: jax.Array,
     params: Optional[KernelParams] = None,
     *,
+    variant: Optional[str] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Nearest-centroid assignment via the fused kernel.
 
     ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan` (then
-    ``params`` comes from the plan). Returns (assign (M,) int32, partial
-    min distance (M,) f32). Add ``sum(x**2, -1)`` for true squared
-    distances.
+    ``params`` comes from the plan); f32, bf16 and fp16 inputs all lower
+    (f32 accumulate). ``variant=None`` auto-selects the small-K fast path
+    whenever K fits one centroid tile — the same rule the autotuner models.
+    Returns (assign (M,) int32, partial min distance (M,) f32). Add
+    ``sum(x**2, -1)`` for true squared distances.
     """
     plan, cp, cn, params = _resolve_padded(x, c, params, "assign")
+    variant = resolve_variant(c.shape[0], params, variant)
     if interpret is None:
         interpret = not on_tpu()
     mind, am = _da.distance_argmin(
         plan.xp, cp, cn, block_m=params.block_m, block_k=params.block_k,
-        block_f=params.block_f, interpret=interpret)
+        block_f=params.block_f, variant=variant, interpret=interpret)
     m = plan.m
     return am[:m, 0], mind[:m, 0]
 
@@ -186,23 +234,28 @@ def fused_lloyd(
     c: jax.Array,
     params: Optional[KernelParams] = None,
     *,
+    variant: Optional[str] = None,
     interpret: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One-pass Lloyd step via the fused kernel: assignment plus the
     per-cluster sums/counts the centroid update needs, X read once.
 
-    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`.
-    Returns (assign (M,) int32, true squared distance (M,) f32,
-    sums (K, F) f32, counts (K,) f32).
+    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`; f32,
+    bf16 and fp16 inputs all lower (f32 accumulators and outputs).
+    ``variant=None`` auto-selects the small-K fast path whenever K fits one
+    centroid tile. Returns (assign (M,) int32, true squared distance (M,)
+    f32, sums (K, F) f32, counts (K,) f32).
     """
     plan, cp, cn, params = _resolve_padded(x, c, params, "lloyd")
+    variant = resolve_variant(c.shape[0], params, variant)
     if interpret is None:
         interpret = not on_tpu()
     k, m = c.shape[0], plan.m
     meta = jnp.array([m], jnp.int32)
     mind, am, sums, counts = _ll.lloyd_step(
         plan.xp, cp, cn, meta, block_m=params.block_m,
-        block_k=params.block_k, block_f=params.block_f, interpret=interpret)
+        block_k=params.block_k, block_f=params.block_f, variant=variant,
+        interpret=interpret)
     sums = _tree_sum(sums)[:k, :plan.f]
     counts = _tree_sum(counts)[:k]
     return am[:m, 0], mind[:m, 0] + plan.xn, sums, counts
@@ -218,8 +271,11 @@ def fused_assign_ft(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """FT assignment: fused ABFT detect+locate+correct inside the kernel.
 
-    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`.
-    Returns (assign, partial min distance, corrected_error_count).
+    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`; f32,
+    bf16 and fp16 inputs all lower (checksums stay f32). The FT template is
+    always the generic grid — its checksum scratch is already VMEM-resident,
+    so there is no small-K variant to select. Returns (assign, partial min
+    distance, corrected_error_count).
     """
     plan, cp, cn, params = _resolve_padded(x, c, params, "assign")
     if interpret is None:

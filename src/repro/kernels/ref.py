@@ -13,10 +13,19 @@ from repro.core import checksum
 
 
 def distance_matrix(x: jax.Array, c: jax.Array) -> jax.Array:
-    """Full squared-distance matrix ||x_i - c_j||^2, shape (M, K)."""
-    xn = jnp.sum(x * x, axis=1, keepdims=True)          # (M, 1)
-    cn = jnp.sum(c * c, axis=1)[None, :]                # (1, K)
-    cross = jnp.matmul(x, c.T, precision=jax.lax.Precision.HIGHEST)
+    """Full squared-distance matrix ||x_i - c_j||^2, shape (M, K), f32.
+
+    Mirrors the kernel templates' dtype semantics: the GEMM multiplies in
+    the input dtype (f32/bf16/fp16) but accumulates in f32, and norms are
+    computed in f32 — so this oracle is comparable to the Pallas kernels
+    at every compute dtype.
+    """
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=1, keepdims=True)        # (M, 1)
+    cn = jnp.sum(cf * cf, axis=1)[None, :]              # (1, K)
+    cross = jnp.matmul(x, c.T, precision=jax.lax.Precision.HIGHEST,
+                       preferred_element_type=jnp.float32)
     return xn + cn - 2.0 * cross
 
 
@@ -28,8 +37,10 @@ def distance_argmin(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
     ``||c_j||^2 - 2 x_i . c_j`` for the winning j. Use
     ``min_dist + sum(x**2, -1)`` for true squared distances.
     """
-    cn = jnp.sum(c * c, axis=1)[None, :]
-    cross = jnp.matmul(x, c.T, precision=jax.lax.Precision.HIGHEST)
+    cf = c.astype(jnp.float32)
+    cn = jnp.sum(cf * cf, axis=1)[None, :]
+    cross = jnp.matmul(x, c.T, precision=jax.lax.Precision.HIGHEST,
+                       preferred_element_type=jnp.float32)
     d = cn - 2.0 * cross
     return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)
 
@@ -82,10 +93,13 @@ def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
 def centroid_update(x: jax.Array, assign: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Oracle for the centroid-update: per-cluster sums and counts.
 
-    Returns (sums (K, N), counts (K,)). The mean (= new centroids) is
-    sums / max(counts, 1); callers handle empty clusters.
+    Returns (sums (K, N) f32, counts (K,) f32). The mean (= new centroids)
+    is sums / max(counts, 1); callers handle empty clusters. Accumulation
+    is f32 for every input dtype (bf16 counts would lose exactness past
+    256 members) — the same contract as the one-pass kernel's epilogue.
     """
     onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)   # (M, K)
-    sums = onehot.T @ x                                  # (K, N)
-    counts = jnp.sum(onehot, axis=0)                     # (K,)
+    sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
     return sums, counts

@@ -1,9 +1,11 @@
-"""TPU v5e hardware constants for the roofline model (per chip)."""
+"""TPU v5e hardware constants for the roofline model (per chip).
 
-PEAK_FLOPS_BF16 = 197e12        # FLOP/s
-PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2
-HBM_BW = 819e9                  # bytes/s
-ICI_LINK_BW = 50e9              # bytes/s per link
-ICI_LINKS = 4                   # v5e: 4 ICI links per chip (2D torus x2)
-HBM_BYTES = 16 * 2**30          # 16 GiB
-VMEM_BYTES = 128 * 2**20
+The numbers live in :mod:`repro.hw` — the single copy shared with the
+autotune selection model — and are re-exported here for the roofline
+modules' historical import path.
+"""
+from repro.hw import (HBM_BW, HBM_BYTES, ICI_LINK_BW, ICI_LINKS,
+                      PEAK_FLOPS_BF16, PEAK_FLOPS_F32, VMEM_BYTES)
+
+__all__ = ["PEAK_FLOPS_BF16", "PEAK_FLOPS_F32", "HBM_BW", "ICI_LINK_BW",
+           "ICI_LINKS", "HBM_BYTES", "VMEM_BYTES"]

@@ -141,5 +141,5 @@ class TestAutotuneSpace:
 
     def test_model_selection_prefers_balanced_tiles_for_big_problems(self):
         from repro.core.autotune import select_params
-        p = select_params(131072, 128, 128, mode="model")
+        _, p = select_params(131072, 128, 128, mode="model")
         assert p.block_k <= 256   # K=128 padded: huge block_k wastes MXU

@@ -80,40 +80,42 @@ class TestAutotuneTable:
         cache = AutotuneCache(path)
         table = cache.build([(16384, 64, 64), (131072, 128, 128)],
                             mode="model")
-        assert len(table["assign"]) == 2
-        p = cache.lookup(16384, 64, 64)
-        assert [p.block_m, p.block_k, p.block_f] == table["assign"]["14-6-6"]
+        assert len(table["assign/float32"]) == 2
+        v, p = cache.lookup(16384, 64, 64)
+        assert [v, p.block_m, p.block_k, p.block_f] == \
+            table["assign/float32"]["14-6-6"]
         # a fresh cache instance reloads the persisted winners
         fresh = AutotuneCache(path)
-        q = fresh.lookup(131072, 128, 128)
-        assert [q.block_m, q.block_k, q.block_f] == \
-            table["assign"][shape_bucket(131072, 128, 128)]
+        w, q = fresh.lookup(131072, 128, 128)
+        assert [w, q.block_m, q.block_k, q.block_f] == \
+            table["assign/float32"][shape_bucket(131072, 128, 128)]
         with open(path) as fh:
             assert json.load(fh) == {"schema": SCHEMA_VERSION,
                                      "kinds": table}
 
     def test_legacy_v1_table_loads_as_assign_kind(self, tmp_path):
         """v1 files (flat bucket -> blocks) keep working: their winners
-        were tuned for the assignment-only kernel and must serve it —
-        and only it."""
+        were tuned for the f32 assignment-only kernel (generic template)
+        and must serve it — and only it."""
         from repro.api import AutotuneCache, shape_bucket
         path = str(tmp_path / "v1.json")
         with open(path, "w") as fh:
             json.dump({shape_bucket(1024, 64, 64): [64, 128, 128]}, fh)
         cache = AutotuneCache(path)
-        p = cache.lookup(1024, 64, 64)                  # kind="assign"
+        v, p = cache.lookup(1024, 64, 64)               # kind="assign"
+        assert v == "generic"
         assert [p.block_m, p.block_k, p.block_f] == [64, 128, 128]
         # the lloyd kernel never inherits an assignment-only winner; it
         # falls through to its own analytical selection
         q = cache.lookup(1024, 64, 64, kind="lloyd")
         assert q is not None
-        # upgrading on save leaves the entry under the assign kind
+        # upgrading on save leaves the entry under the assign kind, f32
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] >= 2
-        assert on_disk["kinds"]["assign"][shape_bucket(1024, 64, 64)] \
-            == [64, 128, 128]
+        assert on_disk["schema"] >= 3
+        assert on_disk["kinds"]["assign/float32"][
+            shape_bucket(1024, 64, 64)] == ["generic", 64, 128, 128]
 
     def test_kinds_are_isolated(self, tmp_path):
         from repro.api import AutotuneCache
@@ -121,10 +123,24 @@ class TestAutotuneTable:
         cache = AutotuneCache()
         # a distinctive winner stored for the assignment kernel only
         cache.put(2048, 128, 256, KernelParams(1024, 512, 1024))
-        pa = cache.lookup(2048, 128, 256)
-        pl = cache.lookup(2048, 128, 256, kind="lloyd")
+        _, pa = cache.lookup(2048, 128, 256)
+        _, pl = cache.lookup(2048, 128, 256, kind="lloyd")
         assert [pa.block_m, pa.block_k, pa.block_f] == [1024, 512, 1024]
         assert (pl.block_m, pl.block_k, pl.block_f) != (1024, 512, 1024)
+
+    def test_dtypes_are_isolated(self, tmp_path):
+        """A winner tuned for f32 tiles must never serve the bf16/fp16
+        templates — byte sizing and sublane alignment differ."""
+        import jax.numpy as jnp
+        from repro.api import AutotuneCache
+        from repro.kernels.ops import KernelParams
+        cache = AutotuneCache()
+        cache.put(2048, 128, 256, KernelParams(1024, 512, 1024),
+                  variant="generic")                     # f32 entry
+        _, p32 = cache.lookup(2048, 128, 256)
+        _, pbf = cache.lookup(2048, 128, 256, dtype=jnp.bfloat16)
+        assert [p32.block_m, p32.block_k, p32.block_f] == [1024, 512, 1024]
+        assert (pbf.block_m, pbf.block_k, pbf.block_f) != (1024, 512, 1024)
 
     def test_caches_are_isolated_per_instance(self, tmp_path):
         from repro.api import AutotuneCache
@@ -132,7 +148,7 @@ class TestAutotuneTable:
         a = AutotuneCache(str(tmp_path / "a.json"))
         b = AutotuneCache()               # in-memory only
         a.put(1024, 64, 64, KernelParams(64, 128, 128))
-        pa = a.lookup(1024, 64, 64)
-        pb = b.lookup(1024, 64, 64)       # falls back to the model winner
+        _, pa = a.lookup(1024, 64, 64)
+        _, pb = b.lookup(1024, 64, 64)    # falls back to the model winner
         assert [pa.block_m, pa.block_k, pa.block_f] == [64, 128, 128]
         assert (pb.block_m, pb.block_k, pb.block_f) != (0, 0, 0)

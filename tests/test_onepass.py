@@ -217,8 +217,9 @@ class TestAutotuneOnePass:
                             shape=(65536, 128, 200_000))
 
     def test_select_params_lloyd_kind(self):
-        p = select_params(4096, 128, 256, mode="model", kind="lloyd")
-        assert feasible(p, kind="lloyd", shape=(4096, 128, 256))
+        variant, p = select_params(4096, 128, 256, mode="model", kind="lloyd")
+        assert feasible(p, kind="lloyd", shape=(4096, 128, 256),
+                        variant=variant)
         with pytest.raises(ValueError, match="kind"):
             select_params(4096, 128, 256, kind="one_pass")  # pipeline word
 
@@ -236,8 +237,8 @@ class TestAutotuneOnePass:
         s = measure_score(64, 8, 32, KernelParams(64, 128, 128), iters=2)
         assert s > 0.0
         space = [KernelParams(64, 128, 128), KernelParams(128, 128, 128)]
-        p = select_params(64, 8, 32, mode="measure", space=space)
-        assert p in space
+        variant, p = select_params(64, 8, 32, mode="measure", space=space)
+        assert p in space and variant in ("generic", "smallk")
 
 
 class TestTrafficModel:

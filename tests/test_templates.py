@@ -1,0 +1,337 @@
+"""Template family (paper §III-B): dtype-specialized kernel paths, the
+small-K fast-path variant, variant-aware selection, the v3 cache schema,
+and the estimator's ``compute_dtype`` / chunked-inference surface.
+
+Kernels run interpret=True (kernel bodies execute in Python on CPU)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AutotuneCache, KMeans, shape_bucket
+from repro.api.cache import SCHEMA_VERSION
+from repro.core.autotune import (feasible, iteration_traffic, model_score,
+                                 parameter_space, select_params)
+from repro.kernels import ops, ref
+from repro.kernels.ops import KernelParams, resolve_variant, sublane_align
+
+# Irregular shapes with K inside one centroid tile (smallk-eligible):
+# (M, K, F) each off the block grid in at least one dimension.
+SMALLK_GRID = [
+    (1000, 7, 33),
+    (513, 100, 257),
+    (300, 77, 130),
+    (256, 128, 512),          # exactly one tile in every dimension
+    (64, 8, 32),
+]
+
+
+def _data(m, k, f, seed=0, dtype=jnp.float32):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (m, f), dtype),
+            jax.random.normal(kc, (k, f), dtype))
+
+
+def _int_data(m, k, f, seed=0, dtype=jnp.float32):
+    """Small-integer-valued data: exactly representable in bf16/fp16 and
+    f32 alike, so cross-dtype distances are identical and assignment parity
+    is exact (no tie flakiness)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-4, 5, (m, f)), dtype)
+    c = jnp.asarray(rng.integers(-4, 5, (k, f)), dtype)
+    return x, c
+
+
+LOW_PRECISION = [jnp.bfloat16, jnp.float16]
+
+
+class TestDtypeParity:
+    @pytest.mark.parametrize("dtype", LOW_PRECISION)
+    @pytest.mark.parametrize("m,k,f", [(513, 100, 257), (300, 77, 130)])
+    def test_assign_matches_f32_reference_exactly_on_exact_data(
+            self, m, k, f, dtype):
+        """On exactly-representable data, a bf16/fp16 assignment is
+        identical to the f32 oracle's (not merely close)."""
+        x32, c32 = _int_data(m, k, f, seed=1)
+        _, ram = ref.distance_argmin(x32, c32)
+        am, _ = ops.fused_assign(x32.astype(dtype), c32.astype(dtype),
+                                 interpret=True)
+        np.testing.assert_array_equal(np.asarray(am), np.asarray(ram))
+
+    @pytest.mark.parametrize("dtype", LOW_PRECISION)
+    def test_assign_random_data_near_parity(self, dtype):
+        """Random data: low-precision rounding may flip near-ties only."""
+        x, c = _data(512, 64, 128, seed=2)
+        _, ram = ref.distance_argmin(x, c)
+        am, _ = ops.fused_assign(x.astype(dtype), c.astype(dtype),
+                                 interpret=True)
+        assert float(jnp.mean((am == ram).astype(jnp.float32))) > 0.98
+
+    @pytest.mark.parametrize("dtype", LOW_PRECISION)
+    def test_lloyd_low_precision_centroids_within_dtype_tolerance(
+            self, dtype):
+        x32, c32 = _int_data(400, 13, 40, seed=3)
+        am32, md32, sums32, counts32 = ops.fused_lloyd(x32, c32,
+                                                       interpret=True)
+        am, md, sums, counts = ops.fused_lloyd(
+            x32.astype(dtype), c32.astype(dtype), interpret=True)
+        np.testing.assert_array_equal(np.asarray(am), np.asarray(am32))
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      np.asarray(counts32))
+        # integer data: sums are exact in every dtype; the f32 accumulator
+        # keeps them exact through the one-hot GEMM
+        np.testing.assert_allclose(sums, sums32, rtol=1e-6)
+        assert sums.dtype == jnp.float32 and counts.dtype == jnp.float32
+
+    @pytest.mark.parametrize("dtype", LOW_PRECISION)
+    def test_ft_low_precision_clean_and_injected(self, dtype):
+        from repro.kernels.distance_argmin_ft import make_injection
+        x, c = _data(512, 256, 512, seed=4, dtype=dtype)
+        params = KernelParams(256, 128, 512)
+        am, md, det = ops.fused_assign_ft(x, c, params, interpret=True)
+        assert int(det) == 0                    # clean run: no false alarm
+        inj = make_injection(0, 1, 0, 13, 57, 1e4)
+        am_i, _, det_i = ops.fused_assign_ft(x, c, params, inj=inj,
+                                             interpret=True)
+        assert int(det_i) == 1                  # injected SEU: caught
+        np.testing.assert_array_equal(np.asarray(am_i), np.asarray(am))
+
+
+class TestSmallKVariant:
+    @pytest.mark.parametrize("m,k,f", SMALLK_GRID)
+    def test_assign_bit_identical_to_generic(self, m, k, f):
+        x, c = _data(m, k, f, seed=5)
+        p = ops.clamp_params(m, k, f, KernelParams())
+        am_g, md_g = ops.fused_assign(x, c, p, variant="generic",
+                                      interpret=True)
+        am_s, md_s = ops.fused_assign(x, c, p, variant="smallk",
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(am_s), np.asarray(am_g))
+        np.testing.assert_array_equal(np.asarray(md_s), np.asarray(md_g))
+
+    @pytest.mark.parametrize("m,k,f", SMALLK_GRID)
+    def test_lloyd_bit_identical_to_generic(self, m, k, f):
+        x, c = _data(m, k, f, seed=6)
+        p = ops.clamp_params(m, k, f, KernelParams())
+        for got, want in zip(
+                ops.fused_lloyd(x, c, p, variant="smallk", interpret=True),
+                ops.fused_lloyd(x, c, p, variant="generic", interpret=True)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_auto_dispatch_rule(self):
+        p = KernelParams(256, 128, 512)
+        assert resolve_variant(100, p) == "smallk"
+        assert resolve_variant(128, p) == "smallk"
+        assert resolve_variant(129, p) == "generic"
+        assert resolve_variant(129, p, "generic") == "generic"
+        with pytest.raises(ValueError, match="smallk"):
+            resolve_variant(129, p, "smallk")
+        with pytest.raises(ValueError, match="variant"):
+            resolve_variant(100, p, "tiny")
+
+    def test_multi_tile_k_rejects_smallk_kernel(self):
+        x, c = _data(256, 300, 128, seed=7)
+        with pytest.raises(ValueError, match="smallk"):
+            ops.fused_assign(x, c, KernelParams(256, 128, 128),
+                             variant="smallk", interpret=True)
+
+
+class TestVariantAwareSelection:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("kind", ["assign", "lloyd"])
+    def test_smallk_selected_when_k_fits_one_tile(self, kind, dtype):
+        variant, p = select_params(16384, 100, 128, mode="model",
+                                   kind=kind, dtype=dtype)
+        assert variant == "smallk"
+        assert 100 <= p.block_k
+        variant, _ = select_params(16384, 1000, 128, mode="model",
+                                   kind=kind, dtype=dtype)
+        assert variant == "generic"      # K > max block_k candidate
+
+    def test_model_ranks_smallk_strictly_ahead_at_same_tiles(self):
+        for kind in ("assign", "lloyd"):
+            for dtype in (jnp.float32, jnp.bfloat16):
+                p = KernelParams(256, 128, 128)
+                s = model_score(4096, 100, 256, p, dtype=dtype, kind=kind,
+                                variant="smallk")
+                g = model_score(4096, 100, 256, p, dtype=dtype, kind=kind,
+                                variant="generic")
+                assert s < g
+
+    def test_bf16_model_beats_f32_at_default_shape(self):
+        p = KernelParams()
+        assert model_score(16384, 128, 128, p, dtype=jnp.bfloat16) \
+            < model_score(16384, 128, 128, p, dtype=jnp.float32)
+
+    def test_parameter_space_varies_by_dtype(self):
+        f32 = parameter_space(jnp.float32)
+        bf16 = parameter_space(jnp.bfloat16)
+        assert len(bf16) > len(f32)      # 2-byte dtypes admit wider tiles
+        assert any(p.block_f == 2048 for p in bf16)
+        assert not any(p.block_f == 2048 for p in f32)
+        assert parameter_space(jnp.float16) == bf16
+
+    def test_feasible_is_dtype_and_variant_aware(self):
+        # 8-row tiles are legal for f32, not for 2-byte dtypes
+        p8 = KernelParams(8, 128, 128)
+        assert feasible(p8, jnp.float32)
+        assert not feasible(p8, jnp.bfloat16)
+        assert sublane_align(jnp.float16) == 16
+        # smallk needs the shape, and K must fit one tile
+        p = KernelParams(256, 128, 128)
+        assert not feasible(p, variant="smallk")                 # no shape
+        assert feasible(p, shape=(1024, 100, 128), variant="smallk")
+        assert not feasible(p, shape=(1024, 300, 128), variant="smallk")
+
+    def test_vmem_models_scale_with_itemsize(self):
+        p = KernelParams(256, 128, 512)
+        assert p.vmem_bytes(jnp.bfloat16) < p.vmem_bytes()
+        assert ops.lloyd_vmem_bytes(p, 128, 512, jnp.float16) \
+            < ops.lloyd_vmem_bytes(p, 128, 512)
+
+    def test_iteration_traffic_dtype_split(self):
+        """X/C move in the input dtype; distances, partial sums and argmin
+        are fixed-width (f32/i32) regardless."""
+        m, k, f = 4096, 128, 128
+        p = KernelParams(256, 128, 128)
+        t32 = iteration_traffic(m, k, f, p, dtype=jnp.float32)
+        tbf = iteration_traffic(m, k, f, p, dtype=jnp.bfloat16)
+        assert tbf["x_read"] == t32["x_read"] // 2
+        assert tbf["c_read"] == t32["c_read"] // 2
+        assert tbf["assign_out"] == t32["assign_out"] == m * 8
+        assert tbf["update_out"] == t32["update_out"]   # f32 streams
+        assert tbf["total"] < t32["total"]
+
+
+class TestCacheSchemaV3:
+    def test_v3_roundtrip_with_variant_and_dtype(self, tmp_path):
+        path = str(tmp_path / "v3.json")
+        cache = AutotuneCache(path)
+        cache.put(4096, 100, 128, KernelParams(512, 128, 128),
+                  kind="lloyd", dtype=jnp.bfloat16, variant="smallk")
+        cache.save()
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        assert on_disk["schema"] == SCHEMA_VERSION == 3
+        assert on_disk["kinds"]["lloyd/bfloat16"][
+            shape_bucket(4096, 100, 128)] == ["smallk", 512, 128, 128]
+        fresh = AutotuneCache(path)
+        v, p = fresh.lookup(4096, 100, 128, kind="lloyd",
+                            dtype=jnp.bfloat16)
+        assert v == "smallk"
+        assert (p.block_m, p.block_k, p.block_f) == (512, 128, 128)
+
+    def test_v2_file_loads_as_f32_generic(self, tmp_path):
+        path = str(tmp_path / "v2.json")
+        bucket = shape_bucket(2048, 64, 64)
+        with open(path, "w") as fh:
+            json.dump({"schema": 2,
+                       "kinds": {"lloyd": {bucket: [128, 128, 256]}}}, fh)
+        cache = AutotuneCache(path)
+        v, p = cache.lookup(2048, 64, 64, kind="lloyd")
+        assert v == "generic"
+        assert (p.block_m, p.block_k, p.block_f) == (128, 128, 256)
+        # the bf16 template never inherits the f32 winner
+        _, q = cache.lookup(2048, 64, 64, kind="lloyd", dtype=jnp.bfloat16)
+        assert (q.block_m, q.block_k, q.block_f) != (128, 128, 256)
+        # and upgrading on save produces a v3 file that round-trips
+        cache.save()
+        with open(path) as fh:
+            upgraded = json.load(fh)
+        assert upgraded["schema"] == 3
+        assert upgraded["kinds"]["lloyd/float32"][bucket] \
+            == ["generic", 128, 128, 256]
+
+    def test_v1_chain_upgrades_to_v3(self, tmp_path):
+        """v1 -> load -> save -> v3 -> load: the winner survives the whole
+        schema chain under (assign, generic, float32)."""
+        path = str(tmp_path / "v1.json")
+        bucket = shape_bucket(1024, 32, 64)
+        with open(path, "w") as fh:
+            json.dump({bucket: [64, 128, 128]}, fh)
+        AutotuneCache(path).save()
+        v, p = AutotuneCache(path).lookup(1024, 32, 64)
+        assert v == "generic"
+        assert (p.block_m, p.block_k, p.block_f) == (64, 128, 128)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    from repro.data.blobs import make_blobs
+    return make_blobs(1500, 12, 6, seed=3, spread=0.5)
+
+
+class TestEstimatorComputeDtype:
+    @pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+    def test_fit_predict_low_precision_reaches_f32_solution(self, blobs,
+                                                            dtype):
+        x, _ = blobs
+        lo = KMeans(6, max_iter=15, compute_dtype=dtype,
+                    random_state=0).fit(x)
+        hi = KMeans(6, max_iter=15, random_state=0).fit(x)
+        assert lo.cluster_centers_.dtype == jnp.float32
+        # well-separated blobs: low precision lands on the same clustering
+        assert abs(lo.inertia_ - hi.inertia_) <= abs(hi.inertia_) * 0.02
+        agree = float(jnp.mean((lo.labels_ == hi.labels_)
+                               .astype(jnp.float32)))
+        assert agree > 0.98
+        # predict routes through the compute dtype too, consistently with
+        # the labels the fit produced
+        np.testing.assert_array_equal(np.asarray(lo.predict(x)),
+                                      np.asarray(lo.labels_))
+
+    def test_compute_dtype_on_pallas_backend(self, blobs):
+        x, _ = blobs
+        km = KMeans(6, max_iter=6, backend="lloyd",
+                    compute_dtype="bfloat16", sync_every=3,
+                    random_state=0).fit(x[:512])
+        ref_km = KMeans(6, max_iter=6, random_state=0).fit(x[:512])
+        assert abs(km.inertia_ - ref_km.inertia_) \
+            <= abs(ref_km.inertia_) * 0.02
+
+    def test_state_roundtrip_carries_compute_dtype(self, blobs):
+        x, _ = blobs
+        km = KMeans(6, max_iter=4, compute_dtype="bfloat16",
+                    predict_chunk_rows=256, random_state=0).fit(x)
+        st = km.get_state()
+        back = KMeans.from_state(st)
+        assert back.compute_dtype == jnp.dtype("bfloat16")
+        assert back.predict_chunk_rows == 256
+        np.testing.assert_array_equal(np.asarray(back.predict(x)),
+                                      np.asarray(km.predict(x)))
+
+    def test_rejects_unknown_compute_dtype(self):
+        with pytest.raises(ValueError, match="compute_dtype"):
+            KMeans(4, compute_dtype="int8")
+        with pytest.raises(ValueError, match="compute_dtype"):
+            KMeans(4, compute_dtype="bf16")   # unparseable spec, not TypeError
+
+
+class TestChunkedInference:
+    def test_predict_chunked_matches_unchunked_offgrid_m(self, blobs):
+        """M not a multiple of block_m or of the chunk size: chunked
+        one-shot inference must be exact, not approximately equal."""
+        x, _ = blobs
+        m = 1111                          # off-grid and off-chunk
+        km = KMeans(6, max_iter=8, random_state=0).fit(x)
+        whole = km.predict(x[:m])
+        km.predict_chunk_rows = 256       # 4 full chunks + remainder 87
+        chunked = km.predict(x[:m])
+        np.testing.assert_array_equal(np.asarray(chunked),
+                                      np.asarray(whole))
+        assert km.score(x[:m]) == pytest.approx(
+            KMeans(6, max_iter=8, random_state=0).fit(x).score(x[:m]))
+
+    def test_transform_chunked_matches_unchunked(self, blobs):
+        x, _ = blobs
+        km = KMeans(6, max_iter=8, random_state=0).fit(x)
+        whole = km.transform(x[:1000])
+        km.predict_chunk_rows = 300
+        np.testing.assert_allclose(km.transform(x[:1000]), whole,
+                                   rtol=1e-6)
+
+    def test_rejects_bad_chunk_size(self):
+        with pytest.raises(ValueError, match="predict_chunk_rows"):
+            KMeans(4, predict_chunk_rows=0)
