@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke bench-check quickstart
+.PHONY: test test-fast bench bench-smoke bench-check bench-ft quickstart
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -19,7 +19,11 @@ bench-check:     ## regen smoke artifact, gate vs committed baseline (>25% = fai
 	git show HEAD:BENCH_stepwise.json > /tmp/bench_stepwise_baseline.json
 	$(MAKE) bench-smoke
 	$(PY) -m benchmarks.check_regression /tmp/bench_stepwise_baseline.json \
-	    BENCH_stepwise.json --rung fig7_v5_onepass --max-ratio 1.25
+	    BENCH_stepwise.json --rung fig7_v5_onepass \
+	    --rung fig7_v7_ft_onepass --max-ratio 1.25
+
+bench-ft:        ## Fig. 15/16 FT overhead (incl. one-pass FT vs unprotected)
+	$(PY) -m benchmarks.bench_ft_overhead
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,12 +1,19 @@
 """Paper Fig. 15/16 — FT K-means with fault tolerance vs without.
 
-Two layers of evidence on this host:
-  * measured: full Lloyd iterations through ``repro.api.KMeans`` under
-    ``FaultPolicy.off()`` vs ``FaultPolicy.detect()`` (the ABFT-checksummed
-    jnp path) — wall-clock overhead;
+Three layers of evidence on this host:
+  * measured (two-pass): full Lloyd iterations through ``repro.api.KMeans``
+    under ``FaultPolicy.off()`` vs ``FaultPolicy.detect()`` (the
+    ABFT-checksummed jnp path) — wall-clock overhead of the legacy
+    pipeline;
+  * measured (one-pass): the headline pair — the unprotected one-pass
+    backend (``lloyd_xla``) vs the one-pass *FT* backend
+    (``lloyd_ft_xla``, the XLA analogue of ``kernels/lloyd_step_ft.py``)
+    with an explicit ``overhead %`` row. This is the configuration the
+    paper's ~11% average describes: protection fused into the fastest
+    iteration, not paid on top of a slower two-pass loop;
   * analytic: the fused kernel's checksum flop overhead per tile
-    (2*(bm+bk)*bf extra vs 2*bm*bk*bf), the quantity the paper's 11%
-    average reflects after fusion into memory gaps.
+    (2*(bm+bk)*bf extra vs 2*bm*bk*bf), the quantity the measured
+    overhead converges to once fused into memory gaps on real hardware.
 """
 from __future__ import annotations
 
@@ -20,15 +27,16 @@ CASES = [  # (K clusters, F features) — paper's K=8/128, N=8/128 slices
 M = 16_384
 
 
-def _fit_time(x, policy, k):
+def _fit_time(x, policy, k, backend=None):
     km = KMeans(n_clusters=k, max_iter=8, tol=0.0, fault=policy,
-                random_state=0)
+                backend=backend, random_state=0)
     c0 = km.init_centroids(x)
     return time_call(lambda: km.fit(x, centroids=c0), iters=3, warmup=1)
 
 
 def run() -> list[str]:
     out = []
+    onepass_overheads = []
     cache = default_cache()
     for k, f in CASES:
         x, _ = make_blobs(M, f, k, seed=2)
@@ -43,6 +51,24 @@ def run() -> list[str]:
             (2 * p.block_m * p.block_k * p.block_f) * 100 * 2
         out.append(row(f"fig15_K{k}_N{f}_kernel_flop_ovh", 0.0,
                        f"fused_checksum_flops={kernel_ovh:.2f}%"))
+
+        # one-pass pair: protection fused into the fastest iteration
+        # (FaultPolicy.correct() resolves to a fuses_update backend, so
+        # enabling FT no longer forfeits the one-pass speedup)
+        t_one = _fit_time(x, FaultPolicy.off(), k, backend="lloyd_xla")
+        t_one_ft = _fit_time(x, FaultPolicy.correct(update_dmr=False), k,
+                             backend="lloyd_ft_xla")
+        ovh_one = (t_one_ft - t_one) / t_one * 100
+        onepass_overheads.append(ovh_one)
+        out.append(row(f"fig16_onepass_K{k}_N{f}_noft", t_one, ""))
+        out.append(row(f"fig16_onepass_K{k}_N{f}_ft", t_one_ft, ""))
+        out.append(row(f"fig16_onepass_K{k}_N{f}_overhead", 0.0,
+                       f"onepass_ft_overhead={ovh_one:.1f}%;paper_target=11%"))
+    # the paper's 11% figure is an *average* across shapes; the mean is
+    # also the noise-robust summary on a shared CPU host
+    mean = sum(onepass_overheads) / len(onepass_overheads)
+    out.append(row("fig16_onepass_overhead_mean", 0.0,
+                   f"onepass_ft_overhead_mean={mean:.1f}%;paper_target=11%"))
     return out
 
 

@@ -4,10 +4,11 @@ Walks the registered assignment backends in ladder order — naive (per-sample
 loop, no GEMM) -> V1 GEMM + separate reduction -> V2/V3 fused reduction
 (cuML analogue) -> V4 low-precision -> V5 one-pass Lloyd (this repo's
 fused-update iteration, DESIGN.md §3) -> V6 template family (bf16 compute
-path, small-K fast-path variant, irregular-shape rows; DESIGN.md §4) —
-through the ``repro.api`` registry, then times one full ``repro.api.KMeans``
-iteration loop with and without a ``FaultPolicy`` to anchor the ladder in
-estimator terms.
+path, small-K fast-path variant, irregular-shape rows; DESIGN.md §4) ->
+V7 one-pass *with* fault tolerance (the Fig. 6 ABFT scheme composed with
+the fused-update iteration; DESIGN.md §5) — through the ``repro.api``
+registry, then times one full ``repro.api.KMeans`` iteration loop with and
+without a ``FaultPolicy`` to anchor the ladder in estimator terms.
 
 The one-pass rung is measured at *iteration* granularity against the
 two-pass pipeline (fused assignment, separate centroid update): the paper's
@@ -164,6 +165,24 @@ def _collect(smoke: bool = False, model: bool = False
     out.append(row("fig7_v5_onepass", t_one,
                    f"GFLOPS={gflops(fl, t_one):.1f};x{base / t_one:.2f};"
                    f"vs_twopass=x{t_two / t_one:.2f}"))
+
+    # --- V7: one-pass *with fault tolerance* (lloyd_ft_xla is the XLA
+    # analogue of kernels/lloyd_step_ft.py: checksummed distance GEMM +
+    # verified one-hot update in the same fused graph). Measured against
+    # the unprotected one-pass rung — the paper's ~11% overhead claim,
+    # now composed with the fused-update iteration instead of paying the
+    # two-pass penalty on top of the checksums.
+    ft_backend = get_backend("lloyd_ft_xla")
+
+    def onepass_ft(x, c):
+        am, md, det, sums, counts = ft_backend(x, c)
+        return means_from_sums(sums, counts, c), am, det
+
+    t_ft = time_call(jax.jit(onepass_ft), x, c)
+    out.append(row("fig7_v7_ft_onepass", t_ft,
+                   f"GFLOPS={gflops(fl, t_ft):.1f};x{base / t_ft:.2f};"
+                   f"vs_onepass=x{t_one / t_ft:.2f};"
+                   f"ft_overhead={(t_ft - t_one) / t_one * 100:.1f}%"))
 
     # --- V6: dtype-templated one-pass (bf16 compute, f32 accumulate) -----
     def onepass_bf16(x, c):

@@ -7,7 +7,9 @@ Usage::
     python -m benchmarks.check_regression BASELINE NEW \
         [--rung fig7_v5_onepass] [--max-ratio 1.25]
 
-``--rung`` may repeat; default guards the one-pass rung. A rung missing
+``--rung`` may repeat; default guards the one-pass rung and the one-pass
+FT rung (``fig7_v7_ft_onepass`` — the protected path must not quietly
+drift back toward two-pass cost). A rung missing
 from the *baseline* is skipped (it was just added); a rung missing from the
 *new* artifact is an error (a ladder rung silently disappeared). Rows whose
 recorded time is 0 (model rows) are rejected as guards.
@@ -17,6 +19,8 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass"]
 
 
 def _times(payload: dict) -> dict[str, float]:
@@ -57,7 +61,7 @@ def main(argv=None) -> int:
     ap.add_argument("new", help="freshly produced BENCH_stepwise.json")
     ap.add_argument("--rung", action="append", default=None,
                     help="rung name to guard (repeatable); default "
-                         "fig7_v5_onepass")
+                         f"{' + '.join(DEFAULT_RUNGS)}")
     ap.add_argument("--max-ratio", type=float, default=1.25,
                     help="fail when new/baseline exceeds this (default "
                          "1.25 = >25%% slower)")
@@ -66,7 +70,7 @@ def main(argv=None) -> int:
         baseline = json.load(fh)
     with open(args.new) as fh:
         new = json.load(fh)
-    failures = check(baseline, new, args.rung or ["fig7_v5_onepass"],
+    failures = check(baseline, new, args.rung or DEFAULT_RUNGS,
                      args.max_ratio)
     for msg in failures:
         print(f"check_regression: FAIL: {msg}", file=sys.stderr)

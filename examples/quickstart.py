@@ -16,6 +16,8 @@ from repro.data.blobs import make_blobs
 def main():
     x, true_labels = make_blobs(m=20_000, f=32, k=8, seed=0)
 
+    # correct-mode protection rides the one-pass kernel: the update
+    # epilogue is checksum-verified in-kernel — see DESIGN.md §5
     km = KMeans(n_clusters=8, max_iter=50,
                 fault=FaultPolicy.correct(
                     injection=InjectionCampaign(rate=1.0)))  # 1 SEU / iter

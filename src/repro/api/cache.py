@@ -18,11 +18,12 @@ tiles::
      "kinds": {"assign/float32":  {"14-7-7": ["smallk", 256, 128, 128]},
                "lloyd/bfloat16": {...}}}
 
-The assignment-only kernel and the one-pass Lloyd kernel share a
-tile-parameter type but have different VMEM footprints and traffic profiles
-(schema v2's lesson), and a winner tuned for f32 tiles is mis-sized for
-bf16/fp16 ones (half the bytes per element, 16-row sublanes) — so neither
-kind nor dtype may cross. Older files still load: v2 files (kind-keyed,
+The assignment-only kernel, the one-pass Lloyd kernel and the one-pass FT
+kernel (``lloyd_ft``: one-pass footprint plus checksum scratch and the
+expected-checksum output blocks) share a tile-parameter type but have
+different VMEM footprints and traffic profiles (schema v2's lesson), and a
+winner tuned for f32 tiles is mis-sized for bf16/fp16 ones (half the bytes
+per element, 16-row sublanes) — so neither kind nor dtype may cross. Older files still load: v2 files (kind-keyed,
 pre-dtype) are interpreted as f32 winners of the ``generic`` template, and
 v1 files (flat bucket -> blocks) as f32 ``assign``-kind generic winners.
 """

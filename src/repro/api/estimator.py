@@ -123,11 +123,25 @@ class KMeans:
         self.random_state = random_state
 
         self._backend: AssignmentBackend = self.fault.resolve_backend(backend)
+        self._use_dmr = self.fault.dmr_enabled(self._backend)
         if self.fault.update_dmr and self._backend.fuses_update:
-            raise BackendCapabilityError(
+            # DMR was the two-pass pipeline's update protection; one-pass
+            # backends compute the update in the kernel epilogue, where the
+            # lloyd_ft checksum scheme subsumes it (and the plain lloyd
+            # kernel offers no host-side hook to duplicate). An *explicit*
+            # True is ignored with a note (the default None is auto and
+            # stays silent) — one policy serves both pipeline shapes.
+            import warnings
+            warnings.warn(
+                f"FaultPolicy.update_dmr is a two-pass-backend knob; "
                 f"backend {self._backend.name!r} fuses the centroid update "
-                f"into the assignment kernel; DMR on the update step "
-                f"(FaultPolicy.update_dmr=True) requires a two-pass backend")
+                f"into the kernel epilogue"
+                + (", where its checksum protection subsumes DMR"
+                   if self._backend.supports_ft else
+                   " (unprotected; use FaultPolicy.correct() for the "
+                   "checksummed one-pass kernel)")
+                + "; the flag is ignored here",
+                DeprecationWarning, stacklevel=2)
         self._step_cache: dict = {}
         self._n_host_syncs: int = 0   # fit-loop host reads (observability)
         # streaming state (partial_fit)
@@ -167,9 +181,9 @@ class KMeans:
         if self.params is not None:
             p = self.params
         else:
-            _, p = self.autotune.lookup(m, self.n_clusters, f, kind=(
-                "lloyd" if backend.fuses_update else "assign"),
-                dtype=self.compute_dtype)
+            _, p = self.autotune.lookup(m, self.n_clusters, f,
+                                        kind=backend.kernel_kind,
+                                        dtype=self.compute_dtype)
         return ops.clamp_params(m, self.n_clusters, f, p,
                                 dtype=self.compute_dtype)
 
@@ -177,11 +191,16 @@ class KMeans:
         """Prediction is assignment-only. A one-pass backend would compute
         the whole fused-update epilogue and throw it away (Pallas outputs
         are not dead-code-eliminated), so predict/score route through the
-        matching assignment kernel instead."""
+        assignment kernel at the *same protection level*: the one-pass FT
+        backend predicts through the fused-ABFT assignment kernel, the
+        plain one-pass backends through the unprotected one."""
         from repro.api.registry import get_backend
         b = self._backend
         if not b.fuses_update:
             return b
+        if b.supports_ft:
+            return get_backend("fused_ft" if b.takes_params
+                               else "abft_offline")
         return get_backend("fused" if b.takes_params else "gemm_fused")
 
     def _assign_fn(self, params):
@@ -210,7 +229,7 @@ class KMeans:
         else:
             am, md, det = out
             new_c, counts = centroid_update(x, am, self.n_clusters, centroids,
-                                            use_dmr=self.fault.update_dmr)
+                                            use_dmr=self._use_dmr)
         return am, md, det, new_c, counts
 
     def _lloyd_step_fn(self, params):
@@ -240,7 +259,7 @@ class KMeans:
         key = ("stream", params)
         if key not in self._step_cache:
             backend, k = self._backend, self.n_clusters
-            use_dmr = self.fault.update_dmr
+            use_dmr = self._use_dmr
             fuses = backend.fuses_update
 
             def step(x, centroids, counts, inj=None):
@@ -332,14 +351,17 @@ class KMeans:
             [0x1427, camp_seed, self.random_state, offset])
 
     def _draw_injection(self, rng, m: int, f: int, params):
-        """Per-iteration campaign draw -> in-kernel injection descriptor."""
-        from repro.core.fault import draw_tile_injection
+        """Per-iteration campaign draw -> in-kernel injection descriptor
+        (dual-slot for the one-pass FT kernel: distance GEMM + update
+        epilogue are independently verified intervals)."""
+        from repro.core.fault import draw_step_injection, no_step_injection
         camp = self.fault.injection
-        from repro.kernels.distance_argmin_ft import no_injection
-        if camp is None or not camp.enabled() or \
-                rng.uniform() > min(camp.rate, 1.0):
-            return no_injection()
-        return draw_tile_injection(rng, m, self.n_clusters, f, params)
+        kind = self._backend.kernel_kind
+        if camp is None or not camp.enabled():
+            return no_step_injection(kind)
+        return draw_step_injection(
+            rng, m, self.n_clusters, f, params, rate=camp.rate,
+            targets=camp.resolved_targets(self._backend), kind=kind)
 
     def init_centroids(self, x: jax.Array,
                         key: Optional[jax.Array] = None) -> jax.Array:
@@ -606,7 +628,8 @@ class KMeans:
                     "update_dmr": self.fault.update_dmr,
                     "injection": (None if camp is None else {
                         "rate": camp.rate, "bit_low": camp.bit_low,
-                        "bit_high": camp.bit_high, "seed": camp.seed}),
+                        "bit_high": camp.bit_high, "seed": camp.seed,
+                        "targets": camp.targets}),
                 },
             },
         }

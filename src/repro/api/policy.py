@@ -11,11 +11,18 @@ string, a ``dmr_update`` bool and a ``FaultConfig`` smuggled into ``fit()``.
       - ``"detect"``  checksummed GEMM with offline verification on the
                       materialized product (Wu-et-al-style baseline);
       - ``"correct"`` the paper's fully-fused online ABFT
-                      detect -> locate -> correct kernel.
-  * ``update_dmr`` protects the *centroid update* step (memory-bound,
-    DMR per §IV intro; <1 % overhead). Independent of ``mode``:
-    ``FaultPolicy(mode="off", update_dmr=True)`` expresses DMR-only
-    protection (unchecksummed assignment, duplicated update arithmetic).
+                      detect -> locate -> correct kernel — resolved to the
+                      *one-pass* FT kernel (``lloyd_ft``), whose epilogue
+                      checksums also protect the fused centroid update.
+  * ``update_dmr`` protects the *centroid update* step of **two-pass**
+    backends (memory-bound, DMR per §IV intro; <1 % overhead). Independent
+    of ``mode``: ``FaultPolicy(mode="off", update_dmr=True)`` expresses
+    DMR-only protection (unchecksummed assignment, duplicated update
+    arithmetic). The default ``None`` is *auto* — DMR for two-pass
+    backends, nothing extra for one-pass (``fuses_update``) backends,
+    whose update runs in the kernel epilogue where the ``lloyd_ft``
+    checksum scheme subsumes DMR. An explicit ``True`` on a one-pass
+    backend is ignored with a deprecation note.
   * ``injection`` optionally attaches an SEU injection campaign — the
     evaluation harness of §V-C — which requires a backend that takes
     in-kernel injection descriptors.
@@ -34,11 +41,28 @@ from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
 MODES = ("off", "detect", "correct")
 
 
+TARGETS = ("auto", "distance", "update", "both")
+
+
 @dataclasses.dataclass(frozen=True)
 class InjectionCampaign:
     """SEU injection campaign parameters (paper §II-A fault model).
 
-    rate:     expected injections per Lloyd step (Bernoulli when <= 1).
+    rate:     expected injections per Lloyd step. ``rate <= 1`` is a
+              Bernoulli draw per step. ``rate > 1`` is an expected *count*
+              per step: ``floor(rate)`` guaranteed draws plus a Bernoulli
+              on the fractional part, assigned to distinct verification
+              intervals of the step — the distance GEMM and (on one-pass
+              FT backends) the update epilogue. The §II-A single-event-
+              upset model allows at most one error per interval, so the
+              per-step count clips at the backend's interval count
+              (``AssignmentBackend.protected_intervals``: 2 for
+              ``lloyd_ft``, 1 for assignment-only FT kernels).
+    targets:  which intervals the campaign may corrupt — "distance",
+              "update", "both", or "auto" (= every interval the resolved
+              backend protects). "update"/"both" require a one-pass FT
+              backend (the update epilogue of a two-pass pipeline is
+              DMR's job, not the campaign's).
     bit_low/bit_high: inclusive bit-position range of the flip; the default
               range exercises high-mantissa + exponent bits (detectable).
     seed:     host-side RNG seed for the campaign schedule.
@@ -48,9 +72,34 @@ class InjectionCampaign:
     bit_low: int = 20
     bit_high: int = 30
     seed: int = 0
+    targets: str = "auto"
+
+    def __post_init__(self):
+        if self.rate < 0:
+            raise ValueError(f"InjectionCampaign.rate must be >= 0, "
+                             f"got {self.rate}")
+        if self.targets not in TARGETS:
+            raise ValueError(f"InjectionCampaign.targets must be one of "
+                             f"{TARGETS}, got {self.targets!r}")
 
     def enabled(self) -> bool:
         return self.rate > 0
+
+    def resolved_targets(self, backend) -> tuple[str, ...]:
+        """The concrete interval list for a resolved backend."""
+        wants_update = self.targets in ("update", "both")
+        one_pass_ft = backend.fuses_update and backend.takes_injection
+        if wants_update and not one_pass_ft:
+            raise BackendCapabilityError(
+                f"injection targets={self.targets!r} corrupts the update "
+                f"epilogue, which only a one-pass FT backend protects "
+                f"in-kernel; backend {backend.name!r} is two-pass — use "
+                f"backend='lloyd_ft' or targets='distance'")
+        if self.targets == "distance":
+            return ("distance",)
+        if self.targets == "update":
+            return ("update",)
+        return ("distance", "update") if one_pass_ft else ("distance",)
 
     def to_fault_config(self):
         """The low-level descriptor used by ft_gemm/checksum internals."""
@@ -61,10 +110,17 @@ class InjectionCampaign:
 
 @dataclasses.dataclass(frozen=True)
 class FaultPolicy:
-    """Composable protection policy for one estimator."""
+    """Composable protection policy for one estimator.
+
+    ``update_dmr=None`` (the default) is *auto*: DMR on for two-pass
+    backends, naturally absent on one-pass backends whose update runs in
+    the kernel epilogue (checksummed there under ``mode="correct"``).
+    Explicit ``True`` on a one-pass backend draws the deprecation note;
+    explicit ``False`` disables DMR everywhere.
+    """
 
     mode: str = "off"                 # "off" | "detect" | "correct"
-    update_dmr: bool = True           # DMR on the centroid-update step
+    update_dmr: Optional[bool] = None  # DMR on the two-pass update (auto)
     injection: Optional[InjectionCampaign] = None
 
     def __post_init__(self):
@@ -84,12 +140,12 @@ class FaultPolicy:
         return cls(mode="off", update_dmr=False)
 
     @classmethod
-    def detect(cls, *, update_dmr: bool = True,
+    def detect(cls, *, update_dmr: Optional[bool] = None,
                injection: Optional[InjectionCampaign] = None) -> "FaultPolicy":
         return cls(mode="detect", update_dmr=update_dmr, injection=injection)
 
     @classmethod
-    def correct(cls, *, update_dmr: bool = True,
+    def correct(cls, *, update_dmr: Optional[bool] = None,
                 injection: Optional[InjectionCampaign] = None) -> "FaultPolicy":
         return cls(mode="correct", update_dmr=update_dmr, injection=injection)
 
@@ -99,38 +155,52 @@ class FaultPolicy:
     def protected(self) -> bool:
         return self.mode != "off"
 
+    def dmr_enabled(self, backend) -> bool:
+        """Effective DMR setting for a resolved backend: never on fused
+        (one-pass) backends — their update runs in the kernel epilogue —
+        and on by default (auto) for two-pass backends."""
+        if backend.fuses_update:
+            return False
+        return True if self.update_dmr is None else self.update_dmr
+
     def resolve_backend(self, name: Optional[str] = None,
                         *, on_tpu: Optional[bool] = None) -> AssignmentBackend:
         """Pick the assignment kernel for this policy.
 
         ``name`` pins an explicit backend (validated against the policy);
-        otherwise the policy selects: fused Pallas (TPU) / XLA-fused (host)
-        when unprotected, the offline-ABFT baseline for ``detect``, and the
-        fused online-ABFT kernel for ``correct``.
+        otherwise the policy selects: one-pass Pallas (TPU) / XLA-fused
+        (host) when unprotected, the offline-ABFT baseline for ``detect``,
+        and the *one-pass* online-ABFT kernel for ``correct`` — the paper's
+        Fig. 6 scheme composed with the fused-update iteration, so enabling
+        fault tolerance no longer forfeits the one-pass speedup (campaigns
+        always take the Pallas kernel: in-kernel injection is its surface).
         """
         if on_tpu is None:
             from repro.kernels.ops import on_tpu as _on_tpu
             on_tpu = _on_tpu()
         if name is None:
             if self.injection is not None:
-                # campaigns need in-kernel injection; only the fused FT
-                # kernel provides it, so it hosts detect-mode campaigns too
-                name = "fused_ft"
+                # campaigns need in-kernel injection; the one-pass FT
+                # kernel provides it for both of a step's verification
+                # intervals, so it hosts detect-mode campaigns too
+                name = "lloyd_ft"
             elif self.mode == "off":
                 name = "fused" if on_tpu else "gemm_fused"
             elif self.mode == "detect":
                 name = "abft_offline"
             else:
-                name = "fused_ft"
+                name = "lloyd_ft" if on_tpu else "lloyd_ft_xla"
         backend = get_backend(name)
         if self.protected and not backend.supports_ft:
             raise BackendCapabilityError(
                 f"FaultPolicy(mode={self.mode!r}) needs a fault-tolerant "
                 f"assignment backend, but {backend.name!r} declares "
                 f"supports_ft=False")
-        if self.injection is not None and not backend.takes_injection:
-            raise BackendCapabilityError(
-                f"injection campaign requires takes_injection=True, but "
-                f"backend {backend.name!r} cannot inject in-kernel; "
-                f"use backend='fused_ft'")
+        if self.injection is not None:
+            if not backend.takes_injection:
+                raise BackendCapabilityError(
+                    f"injection campaign requires takes_injection=True, but "
+                    f"backend {backend.name!r} cannot inject in-kernel; "
+                    f"use backend='lloyd_ft' (or 'fused_ft')")
+            self.injection.resolved_targets(backend)   # target validation
         return backend

@@ -52,6 +52,28 @@ class AssignmentBackend:
     fuses_update: bool = False
     doc: str = ""
 
+    @property
+    def kernel_kind(self) -> str:
+        """The autotune kernel kind this backend's tiles are selected for
+        (``repro.core.autotune.KINDS``): the assignment-only kernel, the
+        one-pass (fused-update) kernel, or the one-pass FT kernel — their
+        VMEM footprints and traffic profiles differ, so winners must not
+        cross. Only meaningful when ``takes_params`` is True, but derived
+        from the capability flags either way."""
+        if self.fuses_update:
+            return "lloyd_ft" if self.supports_ft else "lloyd"
+        return "assign"
+
+    @property
+    def protected_intervals(self) -> int:
+        """How many independently verified SEU intervals one step of this
+        backend exposes to an injection campaign (§II-A: at most one error
+        per detection/correction interval): the distance GEMM and — for
+        one-pass FT backends — the update epilogue."""
+        if not self.takes_injection:
+            return 0
+        return 2 if self.fuses_update else 1
+
     def __call__(self, x: jax.Array, c: jax.Array, *,
                  params=None, inj: Optional[jax.Array] = None):
         if inj is not None and not self.takes_injection:

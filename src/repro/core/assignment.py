@@ -21,6 +21,14 @@ Each implementation maps (x (M, F), c (K, F)) ->
                iteration reads X from HBM once. Extended 5-tuple contract
                (``fuses_update=True``).
   lloyd_xla    XLA analogue of the one-pass kernel (non-TPU fast path).
+  lloyd_ft     §IV composed with Fig. 4: the one-pass kernel with the
+               dual-checksum ABFT fused around the distance GEMM and the
+               checksum-protected update epilogue (verified + recomputed
+               in the jitted tree-reduction) — the default ``correct``
+               protection path, no longer forfeiting the one-pass speedup.
+  lloyd_ft_xla XLA analogue of the one-pass FT backend (non-TPU fast path;
+               detection + correction at the XLA level, no in-kernel
+               injection surface).
 
 Every implementation is published through the ``repro.api`` backend
 registry as an :class:`~repro.api.registry.AssignmentBackend` declaring its
@@ -101,6 +109,16 @@ def assign_lloyd(x, c: jax.Array, params=None):
     return am, md, _zero(), sums, counts
 
 
+def assign_lloyd_ft(x, c: jax.Array, params=None,
+                    inj: Optional[jax.Array] = None):
+    # One-pass FT Lloyd: the paper's §IV dual-checksum ABFT fused around
+    # the distance GEMM *and* checksum protection of the one-hot update
+    # epilogue (verified + recomputed in the jitted tree-reduction) — the
+    # Fig. 6 scheme composed with the fused-update iteration.
+    am, md, sums, counts, det = ops.fused_lloyd_ft(x, c, params, inj=inj)
+    return am, md, det, sums, counts
+
+
 @jax.jit
 def assign_lloyd_xla(x: jax.Array, c: jax.Array):
     # XLA analogue of the one-pass kernel: assignment and the one-hot
@@ -114,6 +132,82 @@ def assign_lloyd_xla(x: jax.Array, c: jax.Array):
                                preferred_element_type=jnp.float32)
     counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
     return am, md, _zero(), sums, counts
+
+
+@jax.jit
+def assign_lloyd_ft_xla(x: jax.Array, c: jax.Array):
+    # XLA analogue of the one-pass FT kernel (non-TPU fast path): the
+    # distance cross product carries the paper's minimal dual *column*
+    # checksum pair — e1/e2 over rows detect a single SEU, locate it
+    # (column from the residual position, row from the e2/e1 ratio) and
+    # correct it in place; the one-hot update is verified against
+    # input-side e1/e2 encodings with a recompute-on-mismatch
+    # fail-continue fix. Column-only verification halves the memory
+    # passes of the full ft_matmul (this path exists to be the *fast*
+    # host analogue); the in-kernel SEU descriptor surface is Pallas-only.
+    k, m = c.shape[0], x.shape[0]
+    xf = x.astype(jnp.float32)
+    cf32 = c.astype(jnp.float32)
+    cross = jnp.matmul(x, c.T, precision=jax.lax.Precision.HIGHEST,
+                       preferred_element_type=jnp.float32)
+    e1x = jnp.sum(xf, axis=0)                                # (F,)
+    w_m = jnp.arange(1.0, m + 1.0, dtype=jnp.float32)
+    e2x = w_m @ xf                                           # (F,)
+    exp_c1 = e1x @ cf32.T                                    # (K,)
+    exp_c2 = e2x @ cf32.T
+    res_c1 = jnp.sum(cross, axis=0) - exp_c1
+    res_c2 = w_m @ cross - exp_c2
+    # clean-side scale (see the kernels: a corrupted-side scale would
+    # self-mask large deltas); the column sums run over M rows, hence the
+    # M-length contraction in the factor
+    dscale = jnp.maximum(jnp.max(jnp.abs(exp_c1)), 1.0)
+    dthr = checksum.threshold_factor(m * x.shape[1], x.dtype) * dscale
+    j = jnp.argmax(jnp.abs(res_c1)).astype(jnp.int32)
+    delta = res_c1[j]
+    det_d = jnp.abs(delta) > dthr
+    safe = jnp.where(delta == 0.0, 1.0, delta)
+    i = jnp.clip((jnp.round(res_c2[j] / safe) - 1.0).astype(jnp.int32),
+                 0, m - 1)
+    fixed = cross.at[i, j].add(-delta)
+    cross = jnp.where(det_d, fixed, cross)
+    d = (jnp.sum(xf ** 2, axis=1, keepdims=True)
+         + jnp.sum(cf32 ** 2, axis=1)[None, :] - 2.0 * cross)
+    am = jnp.argmin(d, axis=1).astype(jnp.int32)
+    md = jnp.min(d, axis=1)
+
+    def update(x, am):
+        onehot = jax.nn.one_hot(am, k, dtype=x.dtype)
+        sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
+        return sums, counts
+
+    sums, counts = update(x, am)
+    # epilogue checksums: e1^T (onehot^T X) = colsum(X) (= e1x, already
+    # encoded above) and e2^T (onehot^T X) = (am+1)^T X — computed from
+    # the inputs, never from the one-hot product they verify; each pair
+    # thresholds against its own clean-side magnitude
+    amw = (am + 1).astype(jnp.float32)
+    exp2 = amw @ xf
+    w_k = jnp.arange(1.0, k + 1.0, dtype=jnp.float32)
+    factor = checksum.threshold_factor(m, x.dtype)
+    thr1 = factor * jnp.maximum(jnp.max(jnp.abs(e1x)), 1.0)
+    thr2 = factor * jnp.maximum(jnp.max(jnp.abs(exp2)), 1.0)
+    cexp2 = jnp.sum(amw)
+    bad = (jnp.any(jnp.abs(jnp.sum(sums, axis=0) - e1x) > thr1)
+           | jnp.any(jnp.abs(w_k @ sums - exp2) > thr2)
+           | (jnp.abs(jnp.sum(counts) - m) > factor * m)
+           | (jnp.abs(w_k @ counts - cexp2)
+              > factor * jnp.maximum(cexp2, 1.0)))
+
+    def recompute(_):
+        return update(jax.lax.optimization_barrier(x),
+                      jax.lax.optimization_barrier(am))
+
+    sums, counts = jax.lax.cond(bad, recompute,
+                                lambda _: (sums, counts), operand=None)
+    return (am, md, det_d.astype(jnp.int32) + bad.astype(jnp.int32),
+            sums, counts)
 
 
 @jax.jit
@@ -157,3 +251,13 @@ register_backend(AssignmentBackend(
 register_backend(AssignmentBackend(
     "lloyd_xla", assign_lloyd_xla, fuses_update=True,
     doc="XLA analogue of the one-pass kernel (non-TPU fast path)"))
+register_backend(AssignmentBackend(
+    "lloyd_ft", assign_lloyd_ft, supports_ft=True, takes_params=True,
+    takes_injection=True, fuses_update=True,
+    doc="one-pass FT Lloyd Pallas kernel: fused dual-checksum ABFT on the "
+        "distance GEMM + checksum-protected update epilogue (paper Fig. 6 "
+        "composed with the fused-update iteration)"))
+register_backend(AssignmentBackend(
+    "lloyd_ft_xla", assign_lloyd_ft_xla, supports_ft=True, fuses_update=True,
+    doc="XLA analogue of the one-pass FT backend (checksummed cross "
+        "product + verified one-hot update; non-TPU fast path)"))

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 
 from repro import hw as _hw
 from repro.kernels.ops import (VARIANTS, KernelParams, clamp_params,  # noqa: F401 — VARIANTS re-exported as selection vocabulary
-                               lloyd_vmem_bytes, sublane_align, _round_up)
+                               lloyd_ft_vmem_bytes, lloyd_vmem_bytes,
+                               sublane_align, _round_up)
 
 # TPU v5e constants — hoisted to repro.hw (shared with roofline/hw.py so the
 # two models can't drift); the old names stay importable from here.
@@ -58,7 +59,13 @@ VMEM_BUDGET = _hw.VMEM_BUDGET     # bytes usable per core
 
 # Kernel kinds sharing the tile-parameter space but with distinct VMEM
 # footprints and HBM-traffic profiles (winners must not cross kinds).
-KINDS = ("assign", "lloyd")
+# "lloyd_ft" is the one-pass FT kernel: one-pass footprint plus the fused
+# dual-checksum scratch and the expected-checksum output blocks of the
+# protected update epilogue; its model charges the checksum FLOPs/traffic.
+KINDS = ("assign", "lloyd", "lloyd_ft")
+
+# Kinds that run the one-pass (fused-update) kernel family.
+_LLOYD_KINDS = ("lloyd", "lloyd_ft")
 
 
 def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
@@ -99,14 +106,20 @@ def feasible(p: KernelParams, dtype=jnp.float32, *, kind: str = "assign",
     if p.block_m % sublane_align(dtype) or p.block_k % 128 or p.block_f % 128:
         return False
     if variant == "smallk":
+        if kind == "lloyd_ft":
+            # FT templates keep the generic grid (checksum scratch is
+            # already VMEM-resident; no revisited-output stream to save)
+            return False
         if shape is None:
             return False
         _, k, _ = shape
         if _round_up(k, p.block_k) != p.block_k:
             return False
-    if kind == "lloyd" and shape is not None:
+    if kind in _LLOYD_KINDS and shape is not None:
         _, k, f = shape
-        return lloyd_vmem_bytes(p, k, f, dtype) <= VMEM_BUDGET
+        vmem = (lloyd_ft_vmem_bytes if kind == "lloyd_ft"
+                else lloyd_vmem_bytes)
+        return vmem(p, k, f, dtype) <= VMEM_BUDGET
     return p.vmem_bytes(dtype) <= VMEM_BUDGET
 
 
@@ -195,11 +208,20 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
     c_reads = kp * fp * (mp // p.block_m)
     hbm_bytes = (x_reads + c_reads) * bytes_per
     macs = mp * kp * fp
-    if kind == "lloyd":
+    if kind in _LLOYD_KINDS:
         # f32 partial sums/counts blocks out + tree-reduction round trip
         partials = (mp // p.block_m) * (kp * fp + kp) * 4
         hbm_bytes += 2 * partials
         macs += mp * kp * fp          # one-hot scatter GEMM in the epilogue
+    if kind == "lloyd_ft":
+        # dual-checksum encodings fused into the tile loop: ~2*(bm+bk)*bf
+        # MACs per (m, k, f) grid step -> 2*M*K*F*(1/bm + 1/bk) overall
+        # (the paper's ~1.2% at (256, 128) tiles), plus the update
+        # epilogue's two (bm, fp) encoding products per row tile and the
+        # expected-checksum blocks' write + reduce-read round trip
+        macs += 2.0 * mp * kp * fp * (1.0 / p.block_m + 1.0 / p.block_k)
+        macs += 2 * mp * fp
+        hbm_bytes += 2 * (mp // p.block_m) * (2 * fp + 2) * 4
     hbm = hbm_bytes / HBM_BW
     peak = _hw.peak_flops(dtype)
     # MXU efficiency falls off for tiles thinner than the 128x128 systolic
@@ -232,13 +254,16 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
     ``fused_assign`` re-ran its eager padding prologue every call), and
     every timed call is individually ``block_until_ready`` so candidates
     are ranked on real kernel time, not dispatch pipelining."""
-    from repro.kernels.ops import fused_assign, fused_lloyd
+    from repro.kernels.ops import fused_assign, fused_lloyd, fused_lloyd_ft
     kx, kc = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (m, f), dtype)
     c = jax.random.normal(kc, (k, f), dtype)
     p = clamp_params(m, k, f, p, dtype)
-    step = fused_lloyd if kind == "lloyd" else fused_assign
-    fn = jax.jit(functools.partial(step, params=p, variant=variant))
+    if kind == "lloyd_ft":   # generic-grid template: no variant axis
+        fn = jax.jit(functools.partial(fused_lloyd_ft, params=p))
+    else:
+        step = fused_lloyd if kind == "lloyd" else fused_assign
+        fn = jax.jit(functools.partial(step, params=p, variant=variant))
     jax.block_until_ready(fn(x, c))          # compile outside the timing
     times = []
     for _ in range(iters):
@@ -270,8 +295,10 @@ def select_params(m: int, k: int, f: int, *, mode: str = "model",
         # run (scoring the other variant would benchmark a kernel the
         # runtime can never launch for these tiles). Dispatch sees the
         # *clamped* tiles, so the variant must be derived from them too:
-        # clamping can shrink block_k below the K-fit threshold.
-        variant = resolve_variant(k, clamp_params(m, k, f, p, dtype))
+        # clamping can shrink block_k below the K-fit threshold. FT kinds
+        # only ship the generic-grid template.
+        variant = ("generic" if kind == "lloyd_ft"
+                   else resolve_variant(k, clamp_params(m, k, f, p, dtype)))
         if not feasible(p, dtype, kind=kind, shape=(m, k, f),
                         variant=variant):
             continue
@@ -285,7 +312,8 @@ def select_params(m: int, k: int, f: int, *, mode: str = "model",
     if best is None:
         hint = (" (the one-pass kernel keeps the stashed X row tile and "
                 "its (K, F) partial-sum block VMEM-resident; use a "
-                "two-pass backend for this shape)" if kind == "lloyd" else "")
+                "two-pass backend for this shape)"
+                if kind in _LLOYD_KINDS else "")
         raise ValueError(f"no feasible {kind!r} kernel parameters for "
                          f"shape {(m, k, f)}: every candidate's working "
                          f"set exceeds VMEM{hint}")

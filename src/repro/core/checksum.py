@@ -50,18 +50,50 @@ def encode_rows(y: jax.Array) -> tuple[jax.Array, jax.Array]:
     return jnp.sum(y, axis=1), y @ w
 
 
-def default_threshold(k: int, dtype=jnp.float32, scale: float = 1.0) -> float:
+def rounding_eps(input_dtype=jnp.float32, acc_dtype=jnp.float32) -> float:
+    """Worst-case unit roundoff of a checksummed accumulation whose *inputs*
+    are ``input_dtype`` and whose accumulator is ``acc_dtype``.
+
+    The FT kernels compute their checksums on f32 casts of the resident
+    tiles, but the main accumulator they are compared against is built from
+    products of the *input* dtype — on backends that round those products
+    to input precision (rather than multiplying exactly into f32 the way
+    the MXU does for bf16), its rounding floor is the input dtype's eps,
+    not f32's. A threshold derived from f32 eps alone then flags clean
+    bf16/fp16 tiles as corrupted. Taking ``max(eps_in, eps_acc)`` keeps
+    the false-positive rate at the design level for every input dtype;
+    injected bit-flips in the campaign range (2^4..2^23) still clear the
+    bf16-scaled threshold by orders of magnitude.
+    """
+    eps_in = float(jnp.finfo(jnp.dtype(input_dtype)).eps) \
+        if jnp.issubdtype(jnp.dtype(input_dtype), jnp.floating) else 0.0
+    return max(eps_in, float(jnp.finfo(jnp.dtype(acc_dtype)).eps))
+
+
+def threshold_factor(k: int, input_dtype=jnp.float32,
+                     acc_dtype=jnp.float32) -> float:
+    """Static (Python-float) part of the detection threshold for a length-k
+    contraction: ``16 * sqrt(k) * rounding_eps``. Kernels multiply this by
+    their runtime magnitude scale (max |accumulator|); ``16`` keeps the
+    false-positive rate negligible (paper §II-A) while exponent and
+    high-mantissa bit flips exceed it by many orders of magnitude."""
+    return 16.0 * (max(k, 1) ** 0.5) * rounding_eps(input_dtype, acc_dtype)
+
+
+def default_threshold(k: int, dtype=jnp.float32, scale: float = 1.0,
+                      input_dtype=None) -> float:
     """Detection threshold delta for a length-k contraction.
 
     Rounding error of a k-term dot product is ~ sqrt(k) * eps * |x||y| in
     rms; the checksum residual compounds two such sums, so we take
-    ``16 * sqrt(k) * eps * scale`` (scale ~ typical |D| magnitude). The
-    factor 16 keeps the false-positive rate negligible (paper §II-A: high
-    reliability, minimal false alarms); injected bit-flips in exponent or
-    high-mantissa bits exceed it by many orders of magnitude.
+    ``16 * sqrt(k) * eps * scale`` (scale ~ typical |D| magnitude).
+    ``dtype`` is the accumulator dtype; pass ``input_dtype`` when the
+    operands are lower precision than the accumulator (bf16/fp16 tiles
+    with f32 accumulation) so the threshold tracks the larger rounding
+    floor — see :func:`rounding_eps`.
     """
-    eps = float(jnp.finfo(dtype).eps)
-    return 16.0 * (max(k, 1) ** 0.5) * eps * scale
+    return threshold_factor(
+        k, input_dtype if input_dtype is not None else dtype, dtype) * scale
 
 
 class ChecksumState(NamedTuple):

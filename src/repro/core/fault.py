@@ -84,6 +84,74 @@ def inject_delta(key: jax.Array, x: jax.Array, cfg: FaultConfig) -> jax.Array:
     return corrupted - x
 
 
+def planned_injections(rng, rate: float, cap: int) -> int:
+    """Per-step injection count under the campaign rate semantics.
+
+    ``rate <= 1`` is a Bernoulli draw. ``rate > 1`` is an expected count:
+    ``floor(rate)`` guaranteed draws plus a Bernoulli on the fraction,
+    clipped at ``cap`` — the number of independently verified intervals
+    the target kernel exposes per step (§II-A: at most one SEU per
+    detection/correction interval).
+    """
+    if rate <= 0 or cap <= 0:
+        return 0
+    if rate <= 1.0:
+        return int(rng.uniform() < rate)
+    whole = int(rate)
+    n = whole + int(rng.uniform() < (rate - whole))
+    return min(n, cap)
+
+
+def draw_step_injection(rng, m: int, k: int, f: int, params, *,
+                        rate: float,
+                        targets: tuple[str, ...] = ("distance",),
+                        kind: str = "assign") -> jax.Array:
+    """Sample one Lloyd step's in-kernel SEU descriptor for a campaign.
+
+    ``targets`` is the resolved interval list (see
+    ``InjectionCampaign.resolved_targets``); ``kind`` selects the
+    descriptor format — the assignment-only FT kernel takes the 7-slot
+    distance descriptor, the one-pass FT kernel the dual-slot layout with
+    an additional update-epilogue slot. Draws are assigned to *distinct*
+    intervals; magnitudes (2^18..2^23) model exponent-bit flips (the
+    §II-A detectable range) and sit above the bf16-scaled detection
+    threshold so campaigns behave identically across compute dtypes
+    (deltas below threshold are, by the same construction, below the
+    harm threshold — the paper's argument for the threshold choice).
+    """
+    from repro.kernels import lloyd_step_ft as _llft
+    if kind != "lloyd_ft":
+        if planned_injections(rng, rate, 1):
+            return draw_tile_injection(rng, m, k, f, params)
+        from repro.kernels.distance_argmin_ft import no_injection
+        return no_injection()
+    n = planned_injections(rng, rate, len(targets))
+    chosen = list(rng.choice(len(targets), size=n, replace=False))
+    distance = update = None
+    mp = -(-m // params.block_m)
+    if any(targets[i] == "distance" for i in chosen):
+        kp = -(-k // params.block_k)
+        fp = -(-f // params.block_f)
+        delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(18, 24))
+        distance = (int(rng.integers(mp)), int(rng.integers(kp)),
+                    int(rng.integers(fp)), int(rng.integers(params.block_m)),
+                    int(rng.integers(params.block_k)), delta)
+    if any(targets[i] == "update" for i in chosen):
+        delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(18, 24))
+        update = (int(rng.integers(mp)), int(rng.integers(k)),
+                  int(rng.integers(f)), delta)
+    return _llft.make_injection(distance=distance, update=update)
+
+
+def no_step_injection(kind: str = "assign") -> jax.Array:
+    """The disarmed descriptor in the format ``kind``'s kernel expects."""
+    if kind == "lloyd_ft":
+        from repro.kernels.lloyd_step_ft import no_injection
+    else:
+        from repro.kernels.distance_argmin_ft import no_injection
+    return no_injection()
+
+
 def draw_tile_injection(rng, m: int, k: int, f: int, params) -> jax.Array:
     """Sample one in-kernel SEU for the fused FT kernel (campaign step).
 

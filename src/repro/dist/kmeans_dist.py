@@ -7,6 +7,12 @@ construction) and ``psum``s per-cluster (sums, counts) across the mesh:
 the distributed equality ``mean = psum(sums) / psum(counts)`` makes the
 result bit-comparable to the single-device iteration.
 
+One-pass FT backends extend the protection across the reduce: the shard's
+verified update checksums are psum'd alongside its partial (sums, counts)
+— the checksums are linear, so the global invariant holds — and re-checked
+after the reduction, detecting corruption introduced by the cross-shard
+psum itself (counted in the returned ``detected`` total).
+
 Accepts either a ``repro.api.KMeans`` estimator (preferred) or a legacy
 ``KMeansConfig``.
 """
@@ -63,7 +69,7 @@ class DistributedKMeans:
         if not on_tpu():
             backend = get_backend({
                 "fused": "gemm_fused", "fused_ft": "abft_offline",
-                "lloyd": "lloyd_xla",
+                "lloyd": "lloyd_xla", "lloyd_ft": "lloyd_ft_xla",
             }.get(backend.name, backend.name))
         return backend
 
@@ -74,8 +80,9 @@ class DistributedKMeans:
         params = est._resolve_params(m_local, f) if backend.takes_params \
             else None
         daxes = self._daxes
+        m_total = m_local * self._dp   # reduce-checksum threshold scale
 
-        use_dmr = est.fault.update_dmr
+        use_dmr = est.fault.dmr_enabled(backend)
 
         def local_step(x, c, inj):
             from repro.core.kmeans import means_from_sums, protected_sums
@@ -87,6 +94,7 @@ class DistributedKMeans:
             out = backend(
                 x, est._cast(c), params=params,
                 inj=inj if backend.takes_injection else None)
+            checked = backend.fuses_update and backend.supports_ft
             if backend.fuses_update:
                 # one-pass backend: the shard's (sums, counts) come out of
                 # the kernel epilogue — psum them directly, no second pass
@@ -94,10 +102,38 @@ class DistributedKMeans:
             else:
                 am, md, det = out
                 sums, cnt = protected_sums(x, am, k, use_dmr=use_dmr)
+            if checked:
+                # one-pass FT: the update checksums are linear in
+                # (sums, counts), so psumming the shard-local *verified*
+                # checksums alongside the partials extends the ABFT
+                # invariant across the reduce — corruption introduced by
+                # the cross-shard reduction itself is detected here, at
+                # the boundary, not silently folded into the centroids.
+                w_k = jnp.arange(1.0, k + 1.0, dtype=jnp.float32)
+                exp = jnp.stack([jnp.sum(sums, axis=0), w_k @ sums])
+                cexp = jnp.stack([jnp.sum(cnt), w_k @ cnt])
+                exp = jax.lax.psum(exp, daxes)
+                cexp = jax.lax.psum(cexp, daxes)
             sums = jax.lax.psum(sums, daxes)
             cnt = jax.lax.psum(cnt, daxes)
             inertia = jax.lax.psum(jnp.sum(md), daxes)
             det = jax.lax.psum(det, daxes)
+            if checked:
+                from repro.core.checksum import threshold_factor
+                # each e1/e2 pair thresholds against its own clean-side
+                # magnitude (the e2 row is ~K x larger; a shared scale
+                # would raise the e1 detection floor by that factor)
+                factor = threshold_factor(m_total, jnp.float32)
+                thr1 = factor * jnp.maximum(jnp.max(jnp.abs(exp[0])), 1.0)
+                thr2 = factor * jnp.maximum(jnp.max(jnp.abs(exp[1])), 1.0)
+                reduce_bad = (
+                    jnp.any(jnp.abs(jnp.sum(sums, axis=0) - exp[0]) > thr1)
+                    | jnp.any(jnp.abs(w_k @ sums - exp[1]) > thr2)
+                    | (jnp.abs(jnp.sum(cnt) - cexp[0])
+                       > factor * jnp.maximum(cexp[0], 1.0))
+                    | (jnp.abs(w_k @ cnt - cexp[1])
+                       > factor * jnp.maximum(cexp[1], 1.0)))
+                det = det + reduce_bad.astype(jnp.int32)
             new_c = means_from_sums(sums, cnt, c)
             shift = jnp.sqrt(jnp.sum((new_c - c) ** 2))
             return am, new_c, inertia, shift, det
@@ -129,7 +165,10 @@ class DistributedKMeans:
         if shard_backend.takes_injection:
             rng = est._campaign_rng()
             params = est._resolve_params(m // self._dp, f)
-        from repro.kernels.distance_argmin_ft import no_injection
+        from repro.core.fault import no_step_injection
+
+        def no_injection():
+            return no_step_injection(shard_backend.kernel_kind)
 
         centroids = jnp.asarray(centroids)
         am = jnp.zeros((m,), jnp.int32)

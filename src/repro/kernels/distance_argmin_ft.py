@@ -26,10 +26,14 @@ measured overhead is benchmarked in benchmarks/bench_ft_overhead.py.
 
 X and C tiles may be f32, bf16 or fp16 (the dtype axis of the §III-B
 template family); the main product accumulates in f32 and the checksums are
-computed from f32 casts of the resident tiles, so the detection threshold
-stays at f32-eps level for every input dtype. This FT template keeps the
-generic (revisited-output) grid for all K: its checksum scratch already
-holds everything VMEM-resident, so the small-K fast path buys nothing here.
+computed from f32 casts of the resident tiles. The detection threshold is
+dtype-aware (``checksum.threshold_factor``): on backends that round the
+main product's partial terms to the *input* precision, a clean bf16/fp16
+tile's residual sits at bf16/fp16 rounding level, so the threshold scales
+with ``max(eps_input, eps_f32)`` instead of assuming f32 everywhere. This
+FT template keeps the generic (revisited-output) grid for all K: its
+checksum scratch already holds everything VMEM-resident, so the small-K
+fast path buys nothing here.
 """
 from __future__ import annotations
 
@@ -44,6 +48,13 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 from repro.kernels.distance_argmin import (MIN_INIT, fold_min,
                                            tile_min_argmin)
+
+
+def threshold_factor(n: int, input_dtype) -> float:
+    """Dtype-aware detection-threshold factor (lazy import: repro.core's
+    package init imports the api layer, which imports this package)."""
+    from repro.core.checksum import threshold_factor as _tf
+    return _tf(n, input_dtype)
 
 # Injection descriptor layout (SMEM scalars):
 # [enabled, m_tile, c_tile, f_tile, row_in_tile, col_in_tile] + delta (f32).
@@ -131,9 +142,17 @@ def _kernel(inj_ref, x_ref, c_ref, cn_ref,
         res_row1 = obs_row1 - row1_ref[...]
         res_row2 = obs_row2 - row2_ref[...]
 
-        ftotal = jnp.float32(nf * bf)  # grid is static -> constant
-        scale = jnp.maximum(jnp.max(jnp.abs(acc)), 1.0)
-        thr = 16.0 * jnp.sqrt(ftotal) * jnp.float32(1.1920929e-07) * scale
+        # grid is static -> the factor is a trace-time constant; the eps
+        # inside tracks the input dtype's rounding of the main accumulator
+        # (bf16/fp16 tiles), not bare f32 eps. The magnitude scale comes
+        # from the *expected* checksums — the invariant side, computed from
+        # clean inputs — never from the possibly-corrupted accumulator: a
+        # corrupted-side scale lets a large delta inflate its own threshold
+        # past itself whenever the factor exceeds 1 (bf16 at wide tiles),
+        # self-masking exactly the errors worth catching.
+        scale = jnp.maximum(jnp.maximum(jnp.max(jnp.abs(col1_ref[...])),
+                                        jnp.max(jnp.abs(row1_ref[...]))), 1.0)
+        thr = jnp.float32(threshold_factor(nf * bf, x_ref.dtype)) * scale
 
         detected = jnp.logical_or(jnp.max(jnp.abs(res_col1)) > thr,
                                   jnp.max(jnp.abs(res_row1)) > thr)

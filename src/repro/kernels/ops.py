@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import distance_argmin as _da
 from repro.kernels import distance_argmin_ft as _daft
 from repro.kernels import lloyd_step as _ll
+from repro.kernels import lloyd_step_ft as _llft
 from repro.kernels import matmul_abft as _mma
 
 
@@ -73,6 +74,16 @@ def lloyd_vmem_bytes(params: KernelParams, k: int, f: int,
     xbuf = params.block_m * fp * _itemsize(dtype)
     out_blocks = (kp * fp + kp) * 4
     return params.vmem_bytes(dtype) + xbuf + out_blocks
+
+
+def lloyd_ft_vmem_bytes(params: KernelParams, k: int, f: int,
+                        dtype=jnp.float32) -> int:
+    """Working-set estimate for the one-pass FT kernel: the one-pass
+    kernel's footprint (``KernelParams.vmem_bytes`` already budgets the
+    e1/e2 checksum vectors) plus the resident expected-checksum output
+    blocks of the update epilogue."""
+    fp = _round_up(f, params.block_f)
+    return lloyd_vmem_bytes(params, k, f, dtype) + (2 * fp + 2) * 4
 
 
 def resolve_variant(k: int, params: KernelParams,
@@ -259,6 +270,105 @@ def fused_lloyd(
     sums = _tree_sum(sums)[:k, :plan.f]
     counts = _tree_sum(counts)[:k]
     return am[:m, 0], mind[:m, 0] + plan.xn, sums, counts
+
+
+def _verify_update_partials(plan, am, sums_p, counts_p, ucheck, ccheck,
+                            params: KernelParams):
+    """Verification interval of the fused update epilogue (paper Fig. 6
+    applied to the one-hot product). Compares the observed e1/e2 column
+    checksums of each row tile's partial sums/counts against the expected
+    ones the kernel computed from its argmin/valid vectors, and recomputes
+    a mismatched tile from the data plan and the (corrected) assignment.
+    The recompute replays the kernel's own one-hot arithmetic on the same
+    operands, so a recovered run is bit-identical to a clean one. Under
+    the §II-A SEU model at most one tile can mismatch per step; every
+    mismatch is counted, the worst tile is repaired.
+    """
+    from repro.core.checksum import threshold_factor
+    num_m, kp, fp = sums_p.shape
+    bm = params.block_m
+    w_k = jnp.arange(1.0, kp + 1.0, dtype=jnp.float32)
+    obs1 = jnp.sum(sums_p, axis=1)                           # (num_m, fp)
+    obs2 = jnp.sum(w_k[None, :, None] * sums_p, axis=1)
+    res1 = jnp.abs(obs1 - ucheck[:, 0])                      # (num_m, fp)
+    res2 = jnp.abs(obs2 - ucheck[:, 1])
+    cres1 = jnp.abs(jnp.sum(counts_p, axis=1) - ccheck[:, 0])   # (num_m,)
+    cres2 = jnp.abs(jnp.sum(w_k[None, :] * counts_p, axis=1)
+                    - ccheck[:, 1])
+    # contraction length is the row tile; eps tracks the stash dtype. The
+    # scale comes from the expected checksums only (clean invariant side):
+    # folding the possibly-corrupted partials in would let a large delta
+    # inflate its own threshold (self-masking) at 2-byte dtypes. Each
+    # e1/e2 pair thresholds against its own magnitude — the e2 row runs
+    # ~K x larger, and a shared scale would raise the e1 detection floor
+    # by that factor.
+    factor = threshold_factor(bm, plan.xp.dtype)
+    scale1 = jnp.maximum(jnp.max(jnp.abs(ucheck[:, 0]), axis=1), 1.0)
+    scale2 = jnp.maximum(jnp.max(jnp.abs(ucheck[:, 1]), axis=1), 1.0)
+    bad = ((jnp.max(res1, axis=1) > factor * scale1)
+           | (jnp.max(res2, axis=1) > factor * scale2)
+           | (cres1 > factor * jnp.maximum(jnp.abs(ccheck[:, 0]), 1.0))
+           | (cres2 > factor * jnp.maximum(jnp.abs(ccheck[:, 1]), 1.0)))
+    n_bad = jnp.sum(bad.astype(jnp.int32))
+
+    def _recompute(operands):
+        sums_p, counts_p = operands
+        i = jnp.argmax(bad)
+        x_tile = jax.lax.dynamic_slice(plan.xp, (i * bm, 0), (bm, fp))
+        am_tile = jax.lax.dynamic_slice(am, (i * bm, 0), (bm, 1))
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + i * bm
+        valid = (rows < plan.m).astype(jnp.float32)
+        clusters = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+        onehot = (am_tile == clusters).astype(jnp.float32) * valid
+        new_counts = jnp.sum(onehot, axis=0, keepdims=True)
+        new_sums = jax.lax.dot_general(
+            onehot.astype(x_tile.dtype), x_tile, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return (jax.lax.dynamic_update_slice(sums_p, new_sums[None],
+                                             (i, 0, 0)),
+                jax.lax.dynamic_update_slice(counts_p, new_counts, (i, 0)))
+
+    sums_p, counts_p = jax.lax.cond(
+        n_bad > 0, _recompute, lambda o: o, (sums_p, counts_p))
+    return sums_p, counts_p, n_bad
+
+
+def fused_lloyd_ft(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    inj: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass FT Lloyd step: fused ABFT around the distance GEMM plus the
+    checksum-protected update epilogue, X read from HBM once.
+
+    ``x`` may be a raw (M, F) array or a prebuilt :class:`DataPlan`; f32,
+    bf16 and fp16 inputs all lower (f32 accumulators, checksums and
+    outputs). The FT template is always the generic grid (like
+    ``fused_assign_ft``). ``inj`` is a dual-slot
+    :func:`~repro.kernels.lloyd_step_ft.make_injection` descriptor.
+    Returns (assign (M,) int32, true squared distance (M,) f32,
+    sums (K, F) f32, counts (K,) f32, detected (scalar int32) — corrected
+    distance-GEMM errors plus recomputed update tiles).
+    """
+    plan, cp, cn, params = _resolve_padded(x, c, params, "lloyd_ft")
+    if interpret is None:
+        interpret = not on_tpu()
+    if inj is None:
+        inj = _llft.no_injection()
+    k, m = c.shape[0], plan.m
+    meta = jnp.array([m], jnp.int32)
+    mind, am, det, sums_p, counts_p, ucheck, ccheck = _llft.lloyd_step_ft(
+        plan.xp, cp, cn, meta, inj, block_m=params.block_m,
+        block_k=params.block_k, block_f=params.block_f, interpret=interpret)
+    sums_p, counts_p, det_up = _verify_update_partials(
+        plan, am, sums_p, counts_p, ucheck, ccheck, params)
+    sums = _tree_sum(sums_p)[:k, :plan.f]
+    counts = _tree_sum(counts_p)[:k]
+    return (am[:m, 0], mind[:m, 0] + plan.xn, sums, counts,
+            jnp.sum(det) + det_up)
 
 
 def fused_assign_ft(

@@ -123,8 +123,16 @@ class TestFaultPolicyMatrix:
         assert FaultPolicy.off().resolve_backend(on_tpu=True).name == "fused"
         assert FaultPolicy.detect().resolve_backend(on_tpu=False).name \
             == "abft_offline"
+        # correct-mode protection composes with the one-pass iteration:
+        # enabling FT must not forfeit the fused-update speedup
         assert FaultPolicy.correct().resolve_backend(on_tpu=False).name \
-            == "fused_ft"
+            == "lloyd_ft_xla"
+        tpu = FaultPolicy.correct().resolve_backend(on_tpu=True)
+        assert tpu.name == "lloyd_ft"
+        assert tpu.fuses_update and tpu.supports_ft and tpu.takes_injection
+        # campaigns always need the in-kernel injection surface
+        camp = FaultPolicy.correct(injection=InjectionCampaign(rate=1.0))
+        assert camp.resolve_backend(on_tpu=False).name == "lloyd_ft"
 
     def test_injection_campaign_detected_and_corrected(self, blobs):
         x, _ = blobs

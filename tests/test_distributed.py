@@ -50,6 +50,36 @@ class TestDistributedKMeans:
         rel = float(out.split("REL ")[1].split()[0])
         assert rel < 1e-3
 
+    def test_one_pass_ft_backend_shards_with_reduce_checksums(self):
+        """The protected one-pass path composes with sharding: off-TPU the
+        lloyd_ft backend maps to its XLA analogue, the shard-local update
+        checksums psum alongside the partial (sums, counts), and a clean
+        run re-verifies them after the reduce with zero detections while
+        matching the single-device solution."""
+        out = run_with_devices("""
+        import jax
+        from repro.api import FaultPolicy, KMeans
+        from repro.dist.kmeans_dist import DistributedKMeans
+        from repro.data.blobs import make_blobs
+
+        mesh = jax.make_mesh((8,), ("data",))
+        x, _ = make_blobs(4096, 16, 8, seed=3)
+        est = KMeans(8, max_iter=20,
+                     fault=FaultPolicy.correct(update_dmr=False),
+                     random_state=0)
+        c0 = est.init_centroids(x)
+        dk = DistributedKMeans(est, mesh)
+        assert dk._shard_backend().name == "lloyd_ft_xla"
+        c, am, inertia, iters, det = dk.fit(dk.shard_data(x), c0)
+        ref = KMeans(8, max_iter=20, random_state=0).fit(x, centroids=c0)
+        rel = abs(float(inertia) - ref.inertia_) / abs(ref.inertia_)
+        print("REL", rel)
+        print("DET", int(det))
+        """)
+        rel = float(out.split("REL ")[1].split()[0])
+        assert rel < 1e-3
+        assert int(out.split("DET ")[1].split()[0]) == 0
+
     def test_matches_single_device_and_checkpoints(self, tmp_path):
         out = run_with_devices(f"""
         import jax, jax.numpy as jnp

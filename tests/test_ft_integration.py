@@ -1,5 +1,6 @@
-"""System-level fault-tolerance integration: ABFT-protected projections in
-the LM stack, checkpoint atomicity, end-to-end training under injection."""
+"""System-level fault-tolerance integration: end-to-end K-means injection
+campaigns on the one-pass FT backend, ABFT-protected projections in the LM
+stack, checkpoint atomicity, end-to-end training under injection."""
 import os
 
 import jax
@@ -7,10 +8,69 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import FaultPolicy, InjectionCampaign, KMeans
 from repro.configs import get_config
 from repro.ft import abft_dense
 from repro.ft.checkpoint import Checkpointer
 from repro.models import LM
+
+
+def _int_blobs(m, f, k, seed, dtype):
+    """Small-integer blob-ish data: exactly representable in bf16, so the
+    clean trajectory is deterministic at every compute dtype."""
+    rng = np.random.default_rng(seed)
+    centers = rng.integers(-8, 9, (k, f))
+    x = centers[rng.integers(k, size=m)] + rng.integers(-1, 2, (m, f))
+    return jnp.asarray(x, jnp.float32).astype(dtype).astype(jnp.float32)
+
+
+class TestKMeansInjectionEndToEnd:
+    """Satellite of the one-pass FT refactor: an injected SEU in either
+    verification interval — the distance GEMM or the update epilogue —
+    must be corrected online so the final centroids are *bit-identical*
+    to a clean run, across compute dtypes and both the smallk-shaped
+    (K in one centroid tile) and generic-shaped regimes."""
+
+    # (m, f, k): smallk-shaped and generic-shaped (padded K > one tile)
+    SHAPES = [(256, 16, 8), (192, 24, 130)]
+
+    def _fit(self, x, k, dtype, campaign):
+        pol = (FaultPolicy.correct(update_dmr=False, injection=campaign)
+               if campaign is not None
+               else FaultPolicy.correct(update_dmr=False))
+        km = KMeans(k, max_iter=5, backend="lloyd_ft", fault=pol,
+                    compute_dtype=dtype, sync_every=5, random_state=0)
+        return km.fit(x)
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("target", ["distance", "update"])
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_injected_seu_recovers_bit_identical_centroids(
+            self, dtype, target, shape):
+        m, f, k = shape
+        x = _int_blobs(m, f, k, seed=3, dtype=jnp.dtype(dtype))
+        clean = self._fit(x, k, dtype, None)
+        noisy = self._fit(x, k, dtype, InjectionCampaign(
+            rate=1.0, targets=target, seed=7))
+        assert clean.detected_errors_ == 0
+        assert noisy.detected_errors_ >= noisy.n_iter_   # one per step
+        np.testing.assert_array_equal(
+            np.asarray(noisy.cluster_centers_),
+            np.asarray(clean.cluster_centers_))
+        np.testing.assert_array_equal(np.asarray(noisy.labels_),
+                                      np.asarray(clean.labels_))
+
+    def test_dual_interval_campaign_corrects_both_per_step(self):
+        m, f, k = self.SHAPES[0]
+        x = _int_blobs(m, f, k, seed=5, dtype=jnp.float32)
+        clean = self._fit(x, k, "float32", None)
+        noisy = self._fit(x, k, "float32", InjectionCampaign(
+            rate=2.0, targets="both", seed=11))
+        # rate=2 on the dual-interval kernel: two corrected SEUs per step
+        assert noisy.detected_errors_ == 2 * noisy.n_iter_
+        np.testing.assert_array_equal(
+            np.asarray(noisy.cluster_centers_),
+            np.asarray(clean.cluster_centers_))
 
 
 class TestFtEinsum:

@@ -180,10 +180,17 @@ class TestDeviceResidentFit:
         assert abs(noisy.inertia_ - clean.inertia_) \
             <= abs(clean.inertia_) * 1e-3
 
-    def test_update_dmr_rejected_on_fused_update_backend(self):
-        with pytest.raises(BackendCapabilityError):
-            KMeans(4, backend="lloyd_xla",
-                   fault=FaultPolicy(mode="off", update_dmr=True))
+    def test_update_dmr_ignored_with_note_on_fused_update_backend(self):
+        """The former hard error is gone: one-pass backends compute the
+        update in the kernel epilogue, where the lloyd_ft checksum scheme
+        subsumes DMR — the flag is ignored with a deprecation note."""
+        with pytest.warns(DeprecationWarning, match="two-pass"):
+            km = KMeans(4, backend="lloyd_xla",
+                        fault=FaultPolicy(mode="off", update_dmr=True))
+        assert km._backend.name == "lloyd_xla"
+        with pytest.warns(DeprecationWarning, match="subsumes DMR"):
+            KMeans(4, backend="lloyd_ft",
+                   fault=FaultPolicy(mode="correct", update_dmr=True))
 
     def test_registry_declares_fuses_update(self):
         backends = list_backends()
