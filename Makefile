@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke bench-check bench-ft quickstart
+.PHONY: test test-fast bench bench-smoke bench-check bench-ft bench-batched \
+        quickstart docs docs-check
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -20,10 +21,21 @@ bench-check:     ## regen smoke artifact, gate vs committed baseline (>25% = fai
 	$(MAKE) bench-smoke
 	$(PY) -m benchmarks.check_regression /tmp/bench_stepwise_baseline.json \
 	    BENCH_stepwise.json --rung fig7_v5_onepass \
-	    --rung fig7_v7_ft_onepass --max-ratio 1.25
+	    --rung fig7_v7_ft_onepass --rung fig7_v8_batched --max-ratio 1.25
 
 bench-ft:        ## Fig. 15/16 FT overhead (incl. one-pass FT vs unprotected)
 	$(PY) -m benchmarks.bench_ft_overhead
 
+bench-batched:   ## batched many-problem fit vs vmapped vs loop-of-fits
+	$(PY) -m benchmarks.bench_batched
+
 quickstart:
 	$(PY) examples/quickstart.py
+
+docs:            ## regenerate the auto-generated docs (backend matrix)
+	$(PY) -m repro.api.registry --markdown docs/backends.md
+
+docs-check:      ## CI doc gates: matrix freshness + executable docs
+	$(PY) -m repro.api.registry --check docs/backends.md
+	$(PY) -m pytest -q tests/test_docs.py
+	$(PY) examples/quickstart.py --smoke

@@ -3,10 +3,11 @@
 Walks the registered assignment backends in ladder order — naive (per-sample
 loop, no GEMM) -> V1 GEMM + separate reduction -> V2/V3 fused reduction
 (cuML analogue) -> V4 low-precision -> V5 one-pass Lloyd (this repo's
-fused-update iteration, DESIGN.md §3) -> V6 template family (bf16 compute
-path, small-K fast-path variant, irregular-shape rows; DESIGN.md §4) ->
+fused-update iteration, docs/kernels.md) -> V6 template family (bf16 compute
+path, small-K fast-path variant, irregular-shape rows; docs/autotune.md) ->
 V7 one-pass *with* fault tolerance (the Fig. 6 ABFT scheme composed with
-the fused-update iteration; DESIGN.md §5) — through the ``repro.api``
+the fused-update iteration; docs/fault_tolerance.md) — through the
+``repro.api``
 registry, then times one full ``repro.api.KMeans`` iteration loop with and
 without a ``FaultPolicy`` to anchor the ladder in estimator terms.
 
@@ -15,7 +16,7 @@ two-pass pipeline (fused assignment, separate centroid update): the paper's
 Fig. 4 argument is about per-iteration HBM traffic, so that is what the
 pair of rungs compares. ``--model`` additionally emits the analytical
 per-iteration HBM byte table (``autotune.iteration_traffic``) that the
-DESIGN.md §3 table is generated from.
+docs/kernels.md table is generated from.
 
 CLI:
   --smoke        tiny shapes + the Pallas one-pass kernel in interpret mode
@@ -60,7 +61,7 @@ def _bf16_fused(x, c):
 
 
 def _traffic_rows(m: int, k: int, f: int) -> tuple[list[str], dict]:
-    """Model-mode verification of the DESIGN.md §3 byte table: per-iteration
+    """Model-mode verification of the docs/kernels.md byte table: per-iteration
     HBM traffic of the two-pass pipeline vs the one-pass kernel."""
     p = clamp_params(m, k, f, KernelParams())
     two = iteration_traffic(m, k, f, p, pipeline="two_pass")
@@ -213,6 +214,33 @@ def _collect(smoke: bool = False, model: bool = False
     out.append(row("fig7_v6_smallk", t_sk,
                    f"interpret=True;shape=({sm},{sk_},{sf});"
                    f"vs_generic=x{t_gen / t_sk:.2f}"))
+
+    # --- V8: batched many-problem one-pass (B small problems, one launch
+    # vs a Python loop of B single-problem one-pass iterations — the
+    # production "millions of users" regime; docs/kernels.md batched
+    # template) ---------------------------------------------------
+    from repro.core.kmeans import means_from_sums as _mfs
+    bb, bn, bk2, bf2 = (4, 512, 8, 32) if smoke else (32, 2048, 16, 32)
+    xb = jax.random.normal(jax.random.PRNGKey(6), (bb, bn, bf2), jnp.float32)
+    cb = jax.random.normal(jax.random.PRNGKey(7), (bb, bk2, bf2),
+                           jnp.float32)
+    bat_backend = get_backend("lloyd_batched_xla")
+
+    def batched_iter(xb, cb):
+        am, md, det, sums, counts = bat_backend(xb, cb)
+        return jax.vmap(_mfs)(sums, counts, cb), am
+
+    bat_fn = jax.jit(batched_iter)
+    t_bat = time_call(bat_fn, xb, cb)
+
+    def loop_iter():
+        res = [one_fn(xb[i], cb[i])[0] for i in range(bb)]
+        return jax.block_until_ready(res)
+
+    t_bloop = time_call(loop_iter, iters=3, warmup=1)
+    out.append(row("fig7_v8_batched", t_bat,
+                   f"B={bb};shape=({bn},{bk2},{bf2});"
+                   f"vs_loop_of_single=x{t_bloop / t_bat:.2f}"))
 
     # --- irregular shapes: tall-skinny and wide-F (one-pass iteration) ---
     for label, im, ik, if_ in (SMOKE_IRREGULAR if smoke else IRREGULAR):

@@ -7,9 +7,11 @@ Usage::
     python -m benchmarks.check_regression BASELINE NEW \
         [--rung fig7_v5_onepass] [--max-ratio 1.25]
 
-``--rung`` may repeat; default guards the one-pass rung and the one-pass
-FT rung (``fig7_v7_ft_onepass`` — the protected path must not quietly
-drift back toward two-pass cost). A rung missing
+``--rung`` may repeat; default guards the one-pass rung, the one-pass FT
+rung (``fig7_v7_ft_onepass`` — the protected path must not quietly drift
+back toward two-pass cost) and the batched many-problem rung
+(``fig7_v8_batched`` — one launch for B problems must not quietly decay
+toward loop-of-launches cost). A rung missing
 from the *baseline* is skipped (it was just added); a rung missing from the
 *new* artifact is an error (a ladder rung silently disappeared). Rows whose
 recorded time is 0 (model rows) are rejected as guards.
@@ -20,7 +22,7 @@ import argparse
 import json
 import sys
 
-DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass"]
+DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass", "fig7_v8_batched"]
 
 
 def _times(payload: dict) -> dict[str, float]:

@@ -1,6 +1,6 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. See DESIGN.md §7 for the
+Prints ``name,us_per_call,derived`` CSV. See docs/architecture.md for the
 figure-to-module index; absolute TPU numbers come from the dry-run
 roofline (bench_roofline reads its cache), wall-times here are CPU-host
 calibrations of the paper's *relative* claims.
@@ -12,6 +12,7 @@ import traceback
 
 MODULES = [
     "benchmarks.bench_stepwise",       # Fig 7
+    "benchmarks.bench_batched",        # batched many-problem path (ISSUE 5)
     "benchmarks.bench_shapes",         # Fig 8-11 / 19-20
     "benchmarks.bench_speedup_grid",   # Fig 12
     "benchmarks.bench_params",         # Fig 13/14 + Table I

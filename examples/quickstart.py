@@ -5,20 +5,30 @@ Clusters Gaussian blobs through the ``repro.api`` estimator with a
 (dual-checksum detect -> locate -> correct, §IV) — while an injection
 campaign fires one SEU per iteration to show online correction.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # full size
+    PYTHONPATH=src python examples/quickstart.py --smoke    # CI-sized
 """
+import argparse
+
 import numpy as np
 
 from repro.api import FaultPolicy, InjectionCampaign, KMeans
 from repro.data.blobs import make_blobs
 
 
-def main():
-    x, true_labels = make_blobs(m=20_000, f=32, k=8, seed=0)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape + short run (CI executable-docs gate; "
+                         "off-TPU the protected kernel runs in interpret "
+                         "mode, so full size takes minutes on a host)")
+    args = ap.parse_args(argv)
+    m, f, k, iters = (2000, 16, 4, 8) if args.smoke else (20_000, 32, 8, 50)
+    x, true_labels = make_blobs(m=m, f=f, k=k, seed=0)
 
     # correct-mode protection rides the one-pass kernel: the update
-    # epilogue is checksum-verified in-kernel — see DESIGN.md §5
-    km = KMeans(n_clusters=8, max_iter=50,
+    # epilogue is checksum-verified in-kernel — see docs/fault_tolerance.md
+    km = KMeans(n_clusters=k, max_iter=iters,
                 fault=FaultPolicy.correct(
                     injection=InjectionCampaign(rate=1.0)))  # 1 SEU / iter
     labels = km.fit_predict(x)
@@ -26,7 +36,7 @@ def main():
     assign = np.asarray(labels)
     truth = np.asarray(true_labels)
     purity = sum(np.bincount(truth[assign == j]).max()
-                 for j in range(8) if np.any(assign == j)) / len(truth)
+                 for j in range(k) if np.any(assign == j)) / len(truth)
     print(f"converged in {km.n_iter_} iterations")
     print(f"inertia: {km.inertia_:.1f}  purity: {purity:.3f}")
     print(f"SDCs detected & corrected in-kernel: {km.detected_errors_}")

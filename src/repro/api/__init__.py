@@ -12,18 +12,32 @@ builds on four objects:
                                :func:`register_backend` over uniform
                                :class:`AssignmentBackend` objects;
   * :class:`AutotuneCache`   — injectable kernel-selection table
-                               (paper §III-B), passed per-estimator.
+                               (paper §III-B), passed per-estimator;
+  * :class:`BatchedKMeans`   — the many-problem estimator (B stacked
+                               independent problems through the batched
+                               one-pass kernel; lives in ``repro.batch``).
 """
-from repro.api.cache import AutotuneCache, default_cache, shape_bucket
+from repro.api.cache import (AutotuneCache, batch_bucket, default_cache,
+                             shape_bucket)
 from repro.api.estimator import KMeans, NotFittedError
 from repro.api.policy import FaultPolicy, InjectionCampaign
 from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
                                 get_backend, list_backends, register_backend)
 
 __all__ = [
-    "KMeans", "NotFittedError",
+    "KMeans", "BatchedKMeans", "NotFittedError",
     "FaultPolicy", "InjectionCampaign",
     "AssignmentBackend", "BackendCapabilityError",
     "get_backend", "list_backends", "register_backend",
-    "AutotuneCache", "default_cache", "shape_bucket",
+    "AutotuneCache", "default_cache", "shape_bucket", "batch_bucket",
 ]
+
+
+def __getattr__(name):
+    # Lazy re-export (PEP 562): repro.batch.estimator imports repro.api.cache,
+    # so an eager import here would make a fresh ``import repro.batch`` fail
+    # on the circular re-entry into this partially initialized package.
+    if name == "BatchedKMeans":
+        from repro.batch.estimator import BatchedKMeans
+        return BatchedKMeans
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

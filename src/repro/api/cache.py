@@ -10,22 +10,31 @@ and is passed per-estimator (``KMeans(..., autotune=cache)``), so two
 estimators can run with different tables in one process and tests get a
 fresh cache per case.
 
-Schema v3: entries are keyed by *kernel kind and compute dtype* as well as
-shape bucket, and each winner records its *template variant* alongside the
-tiles::
+Schema v4: entries are keyed by *kernel kind, compute dtype and batch
+bucket* as well as shape bucket, and each winner records its *template
+variant* alongside the tiles::
 
-    {"schema": 3,
-     "kinds": {"assign/float32":  {"14-7-7": ["smallk", 256, 128, 128]},
-               "lloyd/bfloat16": {...}}}
+    {"schema": 4,
+     "kinds": {"assign/float32/b0":  {"14-7-7": ["smallk", 256, 128, 128]},
+               "lloyd/bfloat16/b0":  {...},
+               "batched/float32/b6": {"8-3-5": ["batched", 256, 128, 128]}}}
 
 The assignment-only kernel, the one-pass Lloyd kernel and the one-pass FT
 kernel (``lloyd_ft``: one-pass footprint plus checksum scratch and the
 expected-checksum output blocks) share a tile-parameter type but have
 different VMEM footprints and traffic profiles (schema v2's lesson), and a
 winner tuned for f32 tiles is mis-sized for bf16/fp16 ones (half the bytes
-per element, 16-row sublanes) — so neither kind nor dtype may cross. Older files still load: v2 files (kind-keyed,
-pre-dtype) are interpreted as f32 winners of the ``generic`` template, and
-v1 files (flat bucket -> blocks) as f32 ``assign``-kind generic winners.
+per element, 16-row sublanes) — so neither kind nor dtype may cross. The
+``batched`` kind adds the B bucket (log2, like the shape buckets): a B=4
+launch and a B=1024 launch amortize dispatch and pipeline ramp-up very
+differently at the same per-problem shape, so their winners must not cross
+either. Single-problem kinds always live in bucket ``b0``.
+
+Older files still load: v3 files (kind/dtype keys, no batch axis) map to
+bucket ``b0`` of their kind/dtype, v2 files (kind-keyed, pre-dtype) are
+interpreted as f32 winners of the ``generic`` template, and v1 files (flat
+bucket -> blocks) as f32 ``assign``-kind generic winners; all upgrade to
+v4 on ``save()``.
 """
 from __future__ import annotations
 
@@ -43,7 +52,7 @@ _DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "core", "autotune_table.json")
 _PATH_ENV = "REPRO_AUTOTUNE_TABLE"   # still honoured, but only here
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 _DEFAULT_DTYPE = "float32"
 _LEGACY_VARIANT = "generic"
 
@@ -55,6 +64,11 @@ def shape_bucket(m: int, k: int, f: int) -> str:
     return f"{b(m)}-{b(k)}-{b(f)}"
 
 
+def batch_bucket(batch: int) -> str:
+    """log2 bucket of the problem count B (``b0`` = single-problem)."""
+    return f"b{int(math.log2(max(batch, 1)))}"
+
+
 def _dtype_name(dtype) -> str:
     """Normalize a dtype spec (None / str / np dtype / jnp scalar type) to
     the canonical name used in table keys."""
@@ -63,8 +77,8 @@ def _dtype_name(dtype) -> str:
     return np.dtype(dtype).name
 
 
-def _key(kind: str, dtype) -> str:
-    return f"{kind}/{_dtype_name(dtype)}"
+def _key(kind: str, dtype, batch: int = 1) -> str:
+    return f"{kind}/{_dtype_name(dtype)}/{batch_bucket(batch)}"
 
 
 class AutotuneCache:
@@ -91,9 +105,14 @@ class AutotuneCache:
 
     @staticmethod
     def _upgrade(raw) -> dict:
-        """Any on-disk schema -> the v3 in-memory shape."""
-        if isinstance(raw, dict) and raw.get("schema", 1) >= 3:
+        """Any on-disk schema -> the v4 in-memory shape."""
+        if isinstance(raw, dict) and raw.get("schema", 1) >= 4:
             return {k: dict(v) for k, v in raw["kinds"].items()}
+        if isinstance(raw, dict) and raw.get("schema", 1) == 3:
+            # v3: {"kind/dtype": {bucket: [variant, blocks...]}} — no batch
+            # axis yet; every winner was single-problem -> bucket b0
+            return {f"{k}/{batch_bucket(1)}": dict(v)
+                    for k, v in raw["kinds"].items()}
         if isinstance(raw, dict) and raw.get("schema", 1) == 2:
             # v2: {kind: {bucket: [bm, bk, bf]}} — f32 generic winners
             return {_key(kind, None): {b: [_LEGACY_VARIANT, *blocks]
@@ -130,40 +149,41 @@ class AutotuneCache:
 
     def put(self, m: int, k: int, f: int, params: KernelParams, *,
             kind: str = "assign", dtype=None,
-            variant: str = _LEGACY_VARIANT) -> None:
+            variant: str = _LEGACY_VARIANT, batch: int = 1) -> None:
         with self._lock:
-            self._load().setdefault(_key(kind, dtype), {})[
+            self._load().setdefault(_key(kind, dtype, batch), {})[
                 shape_bucket(m, k, f)] = [
                 variant, params.block_m, params.block_k, params.block_f]
 
     def lookup(self, m: int, k: int, f: int, *, kind: str = "assign",
-               dtype=None) -> tuple[str, KernelParams]:
-        """Persisted ``(variant, params)`` winner for (kind, dtype, shape
-        bucket), else the analytical winner computed on the fly (memoized
-        per cache instance). An entry of a *different* kind or dtype is
-        never returned — kind-crossing was the v1 bug, dtype-crossing the
-        v2 one."""
+               dtype=None, batch: int = 1) -> tuple[str, KernelParams]:
+        """Persisted ``(variant, params)`` winner for (kind, dtype, batch
+        bucket, shape bucket), else the analytical winner computed on the
+        fly (memoized per cache instance). An entry of a *different* kind,
+        dtype or batch bucket is never returned — kind-crossing was the v1
+        bug, dtype-crossing the v2 one, batch-crossing the v3 one (a B=1
+        winner knows nothing about dispatch amortization at B=1024)."""
         with self._lock:
-            hit = self._load().get(_key(kind, dtype), {}).get(
+            hit = self._load().get(_key(kind, dtype, batch), {}).get(
                 shape_bucket(m, k, f))
             if hit is not None:
                 variant, bm, bk, bf = hit
                 return variant, KernelParams(bm, bk, bf)
-            key = (m, k, f, kind, _dtype_name(dtype))
+            key = (m, k, f, kind, _dtype_name(dtype), batch_bucket(batch))
             if key not in self._computed:
                 import jax.numpy as jnp
                 from repro.core.autotune import select_params
                 self._computed[key] = select_params(
                     m, k, f, mode="model", kind=kind,
-                    dtype=jnp.dtype(_dtype_name(dtype)))
+                    dtype=jnp.dtype(_dtype_name(dtype)), batch=batch)
             return self._computed[key]
 
     def build(self, shapes: Iterable[tuple[int, int, int]], *,
               mode: str = "model", dtype=None,
-              kinds: Iterable[str] = ("assign",)) -> dict:
+              kinds: Iterable[str] = ("assign",), batch: int = 1) -> dict:
         """Run the selection pipeline over ``shapes`` for each kernel kind,
         record the winners, and persist if file-backed. Returns the
-        "kind/dtype" -> bucket -> [variant, blocks...] table."""
+        "kind/dtype/bN" -> bucket -> [variant, blocks...] table."""
         import jax.numpy as jnp
         from repro.core.autotune import select_params
         jdtype = jnp.dtype(_dtype_name(dtype))
@@ -171,9 +191,10 @@ class AutotuneCache:
             for kind in kinds:
                 for (m, k, f) in shapes:
                     variant, p = select_params(m, k, f, mode=mode,
-                                               dtype=jdtype, kind=kind)
+                                               dtype=jdtype, kind=kind,
+                                               batch=batch)
                     self.put(m, k, f, p, kind=kind, dtype=dtype,
-                             variant=variant)
+                             variant=variant, batch=batch)
             if self.path:
                 self.save()
             return {k: dict(v) for k, v in self._load().items()}

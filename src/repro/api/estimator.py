@@ -52,32 +52,85 @@ def _host_read(value):
 class KMeans:
     """K-means estimator with composable fault tolerance.
 
-    Parameters mirror sklearn/cuML: ``n_clusters``, ``max_iter``, ``tol``
-    (centroid-shift convergence threshold), ``init`` ("kmeans++"/"random"),
-    ``random_state``. Additions:
+    The sklearn/cuML-shaped front end over the FT kernel stack: protection
+    is a :class:`FaultPolicy` (resolved to an assignment backend through
+    the registry), kernel tiles come from an injectable
+    :class:`AutotuneCache`, and the full-batch Lloyd loop runs
+    device-resident (a chunked ``lax.scan`` with the convergence test on
+    device).
 
-    fault:      :class:`FaultPolicy` — off / detect / correct (+ optional
-                SEU injection campaign). Default: no protection.
-    backend:    pin a registered assignment backend by name; default lets
-                the policy resolve one (paper §III-B selection).
-    batch_size: when set, ``fit`` runs sampled mini-batches per iteration;
-                ``partial_fit`` streams caller-provided batches either way.
-    params:     explicit :class:`KernelParams` tile override.
-    autotune:   injectable :class:`AutotuneCache`; default = process cache.
-    compute_dtype: kernel compute dtype — "float32" (default), "bfloat16"
-                or "float16". X and the centroids are cast to this dtype at
-                the kernel boundary (paper §III-B's dtype-templated
-                kernels); accumulators, distances, counts and the stored
-                ``cluster_centers_`` stay f32.
-    predict_chunk_rows: row-chunk size for one-shot inference
-                (predict/transform/score); ``None`` = module default.
-    sync_every: full-batch ``fit`` runs the Lloyd loop device-resident in
-                chunks of this many iterations (a ``lax.scan`` with the
-                convergence test on device); the host observes progress —
-                and replays ``on_iteration`` — only at chunk boundaries.
+    Parameters
+    ----------
+    n_clusters : int, default=8
+        Number of clusters K.
+    max_iter : int, default=100
+        Lloyd iteration budget.
+    tol : float, default=1e-4
+        Centroid-shift convergence threshold: the fit stops once
+        ``||C' - C||_F < tol`` (tested on device).
+    init : {"kmeans++", "random"}, default="kmeans++"
+        Seeding strategy (D² sampling or uniform rows).
+    fault : FaultPolicy, optional
+        Protection policy — off / detect / correct, plus an optional SEU
+        :class:`InjectionCampaign`. Default: no protection
+        (``FaultPolicy.off()``).
+    backend : str, optional
+        Pin a registered assignment backend by name; default lets the
+        policy resolve one (paper §III-B selection). The policy validates
+        a pinned backend's capabilities.
+    batch_size : int, optional
+        When set, ``fit`` runs sampled mini-batches of this many rows per
+        iteration; ``partial_fit`` streams caller-provided batches either
+        way.
+    params : KernelParams, optional
+        Explicit tile override for Pallas backends (skips the autotune
+        lookup).
+    autotune : AutotuneCache, optional
+        Injectable kernel-selection table; default = the process cache
+        (``default_cache()``).
+    sync_every : int, default=10
+        Full-batch ``fit`` runs the Lloyd loop device-resident in chunks
+        of this many iterations; the host observes progress — and replays
+        ``on_iteration`` — only at chunk boundaries.
+    compute_dtype : {"float32", "bfloat16", "float16"}, default="float32"
+        Kernel compute dtype. X and the centroids are cast to this dtype
+        at the kernel boundary (paper §III-B's dtype-templated kernels);
+        accumulators, distances, counts and the stored
+        ``cluster_centers_`` stay f32.
+    predict_chunk_rows : int, optional
+        Row-chunk size for one-shot inference (predict/transform/score);
+        ``None`` = module default (65 536). Bounds the padded working set
+        on large inputs.
+    random_state : int, default=0
+        Seed for init, mini-batch sampling, empty-cluster reseeding and
+        (mixed with the campaign's own seed) injection schedules.
 
-    Fitted attributes: ``cluster_centers_``, ``labels_``, ``inertia_``,
-    ``n_iter_``, ``detected_errors_``.
+    Attributes
+    ----------
+    cluster_centers_ : jax.Array, shape (n_clusters, F), float32
+        Fitted centroids (always f32, whatever ``compute_dtype``).
+    labels_ : jax.Array, shape (M,), int32
+        Assignment of each training sample at the final iteration.
+    inertia_ : float
+        Sum of squared distances at the final iteration.
+    n_iter_ : int
+        Iterations executed.
+    detected_errors_ : int
+        SDCs detected (and, under ``mode="correct"``, corrected) across
+        the fit — nonzero only with a fault-tolerant backend.
+
+    See Also
+    --------
+    FaultPolicy : protection policy and backend resolution.
+    InjectionCampaign : SEU campaign semantics (``rate`` / ``targets``).
+    repro.batch.BatchedKMeans : many-problem batched variant.
+
+    Examples
+    --------
+    >>> from repro.api import KMeans, FaultPolicy
+    >>> km = KMeans(n_clusters=4, fault=FaultPolicy.correct())
+    >>> km.fault.mode
+    'correct'
     """
 
     def __init__(self, n_clusters: int = 8, *, max_iter: int = 100,

@@ -48,24 +48,50 @@ TARGETS = ("auto", "distance", "update", "both")
 class InjectionCampaign:
     """SEU injection campaign parameters (paper §II-A fault model).
 
-    rate:     expected injections per Lloyd step. ``rate <= 1`` is a
-              Bernoulli draw per step. ``rate > 1`` is an expected *count*
-              per step: ``floor(rate)`` guaranteed draws plus a Bernoulli
-              on the fractional part, assigned to distinct verification
-              intervals of the step — the distance GEMM and (on one-pass
-              FT backends) the update epilogue. The §II-A single-event-
-              upset model allows at most one error per interval, so the
-              per-step count clips at the backend's interval count
-              (``AssignmentBackend.protected_intervals``: 2 for
-              ``lloyd_ft``, 1 for assignment-only FT kernels).
-    targets:  which intervals the campaign may corrupt — "distance",
-              "update", "both", or "auto" (= every interval the resolved
-              backend protects). "update"/"both" require a one-pass FT
-              backend (the update epilogue of a two-pass pipeline is
-              DMR's job, not the campaign's).
-    bit_low/bit_high: inclusive bit-position range of the flip; the default
-              range exercises high-mantissa + exponent bits (detectable).
-    seed:     host-side RNG seed for the campaign schedule.
+    Attach to a :class:`FaultPolicy` to exercise the protected kernels
+    with in-kernel single-event upsets (the evaluation harness of §V-C).
+
+    Parameters
+    ----------
+    rate : float, default=1.0
+        Expected injections per Lloyd step.
+
+        * ``rate <= 1`` — one Bernoulli(rate) draw per step.
+        * ``rate > 1`` — an expected *count* per step: ``floor(rate)``
+          guaranteed draws plus a Bernoulli on the fractional part,
+          assigned to *distinct* verification intervals of the step — the
+          distance GEMM and (on one-pass FT backends) the update
+          epilogue. The §II-A single-event-upset model allows at most one
+          error per detection/correction interval, so the per-step count
+          clips at the backend's interval count
+          (``AssignmentBackend.protected_intervals``: 2 for ``lloyd_ft``,
+          1 for assignment-only FT kernels).
+    bit_low, bit_high : int, default=(20, 30)
+        Inclusive bit-position range of the flip; the default range
+        exercises high-mantissa + exponent bits (detectable — flips below
+        the detection threshold are the rounding floor, not SDCs).
+    seed : int, default=0
+        Host-side RNG seed for the campaign schedule (mixed with the
+        estimator's ``random_state``, stream-tagged so it stays disjoint
+        from data sampling even at seed 0).
+    targets : {"auto", "distance", "update", "both"}, default="auto"
+        Which verification intervals the campaign may corrupt.
+
+        * ``"distance"`` — the distance-GEMM interval only.
+        * ``"update"`` — the fused update epilogue only; requires a
+          one-pass FT backend (the update of a *two-pass* pipeline is
+          DMR's job, not the campaign's).
+        * ``"both"`` — one optional SEU per interval per step (same
+          one-pass FT requirement).
+        * ``"auto"`` — every interval the resolved backend protects
+          (both on ``lloyd_ft``, distance-only on ``fused_ft``).
+
+    Raises
+    ------
+    ValueError
+        On a negative ``rate`` or an unknown ``targets`` value, at
+        construction; target/backend mismatches surface as
+        :class:`BackendCapabilityError` at policy resolution.
     """
 
     rate: float = 1.0
@@ -90,11 +116,15 @@ class InjectionCampaign:
         wants_update = self.targets in ("update", "both")
         one_pass_ft = backend.fuses_update and backend.takes_injection
         if wants_update and not one_pass_ft:
+            why = (f"backend {backend.name!r} has no in-kernel injection "
+                   f"surface (takes_injection=False)"
+                   if backend.fuses_update else
+                   f"backend {backend.name!r} is two-pass")
             raise BackendCapabilityError(
                 f"injection targets={self.targets!r} corrupts the update "
-                f"epilogue, which only a one-pass FT backend protects "
-                f"in-kernel; backend {backend.name!r} is two-pass — use "
-                f"backend='lloyd_ft' or targets='distance'")
+                f"epilogue, which only a one-pass FT backend with in-kernel "
+                f"injection protects; {why} — use backend='lloyd_ft' or "
+                f"targets='distance'")
         if self.targets == "distance":
             return ("distance",)
         if self.targets == "update":
@@ -112,11 +142,40 @@ class InjectionCampaign:
 class FaultPolicy:
     """Composable protection policy for one estimator.
 
-    ``update_dmr=None`` (the default) is *auto*: DMR on for two-pass
-    backends, naturally absent on one-pass backends whose update runs in
-    the kernel epilogue (checksummed there under ``mode="correct"``).
-    Explicit ``True`` on a one-pass backend draws the deprecation note;
-    explicit ``False`` disables DMR everywhere.
+    One object instead of three knobs: the protection level of the
+    assignment step, DMR on the (two-pass) update step, and an optional
+    injection campaign. :meth:`resolve_backend` picks the kernel — callers
+    never name kernels.
+
+    Parameters
+    ----------
+    mode : {"off", "detect", "correct"}, default="off"
+        Protection level of the *assignment* step (compute-bound, ABFT
+        per paper §IV): ``"off"`` = no checksums (performance baseline);
+        ``"detect"`` = checksummed GEMM with offline verification
+        (Wu-et-al-style baseline); ``"correct"`` = the fully-fused online
+        ABFT detect → locate → correct kernel, resolved to the *one-pass*
+        FT kernel whose epilogue checksums also protect the fused update.
+    update_dmr : bool, optional
+        DMR on the *centroid update* of **two-pass** backends
+        (memory-bound, <1% overhead). ``None`` (default) is *auto*: DMR
+        on for two-pass backends, naturally absent on one-pass
+        (``fuses_update``) backends whose update runs in the kernel
+        epilogue (checksummed there under ``mode="correct"``). Explicit
+        ``True`` on a one-pass backend draws a deprecation note; explicit
+        ``False`` disables DMR everywhere.
+    injection : InjectionCampaign, optional
+        SEU campaign (§V-C); requires a backend with in-kernel injection
+        support and a protected ``mode``.
+
+    Examples
+    --------
+    >>> from repro.api import FaultPolicy, InjectionCampaign
+    >>> FaultPolicy.correct().protected
+    True
+    >>> FaultPolicy.correct(
+    ...     injection=InjectionCampaign(rate=1.5, targets="both")).mode
+    'correct'
     """
 
     mode: str = "off"                 # "off" | "detect" | "correct"
@@ -191,6 +250,12 @@ class FaultPolicy:
             else:
                 name = "lloyd_ft" if on_tpu else "lloyd_ft_xla"
         backend = get_backend(name)
+        if backend.supports_batch:
+            raise BackendCapabilityError(
+                f"backend {backend.name!r} is a batched (supports_batch) "
+                f"backend with a stacked (B, N, F) contract; KMeans drives "
+                f"single (M, F) problems — use repro.batch.BatchedKMeans "
+                f"for problem stacks")
         if self.protected and not backend.supports_ft:
             raise BackendCapabilityError(
                 f"FaultPolicy(mode={self.mode!r}) needs a fault-tolerant "

@@ -42,6 +42,11 @@ class AssignmentBackend:
     fuses_update:    one-pass Lloyd backend — returns the extended 5-tuple
                      ``(assign, min_dist, detected, sums, counts)`` so the
                      driver skips the separate centroid-update pass over X.
+    supports_batch:  many-problem backend — ``x`` is a (B, N, F) stack and
+                     ``c`` a (B, K, F) per-problem centroid stack; every
+                     output gains the leading problem axis. Single-problem
+                     drivers must not route (M, F) data here and batched
+                     drivers (``repro.batch``) require the flag.
     """
 
     name: str
@@ -50,6 +55,7 @@ class AssignmentBackend:
     takes_params: bool = False
     takes_injection: bool = False
     fuses_update: bool = False
+    supports_batch: bool = False
     doc: str = ""
 
     @property
@@ -60,6 +66,8 @@ class AssignmentBackend:
         VMEM footprints and traffic profiles differ, so winners must not
         cross. Only meaningful when ``takes_params`` is True, but derived
         from the capability flags either way."""
+        if self.supports_batch:
+            return "batched"
         if self.fuses_update:
             return "lloyd_ft" if self.supports_ft else "lloyd"
         return "assign"
@@ -123,3 +131,110 @@ def _ensure_builtin_backends() -> None:
     # The built-in ladder registers itself on import; importing here (not at
     # module top) keeps registry.py import-cycle-free.
     from repro.core import assignment as _assignment  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# Capability matrix rendering — ``python -m repro.api.registry --markdown``
+# generates docs/backends.md; CI re-renders and diffs so the committed file
+# cannot go stale (see tests/test_docs.py and the workflow doc-check step).
+# ---------------------------------------------------------------------------
+
+_FLAG_COLUMNS = ("supports_ft", "takes_params", "takes_injection",
+                 "fuses_update", "supports_batch")
+
+_MD_HEADER = """\
+# Backend capability matrix
+
+<!-- AUTO-GENERATED by `python -m repro.api.registry --markdown docs/backends.md`.
+     Do not edit by hand: CI fails when this file is stale. -->
+
+Every cluster-assignment implementation registers as an
+`AssignmentBackend` with declared capabilities and the uniform call
+signature `backend(x, c, *, params=None, inj=None)`; drivers select one via
+`FaultPolicy.resolve_backend` or `get_backend(name)` and never branch on
+backend names. See [architecture.md](architecture.md) for where the
+registry sits in the stack and [kernels.md](kernels.md) for the kernels
+behind the `takes_params` backends.
+"""
+
+
+def render_markdown() -> str:
+    """The registry as a markdown document (capability flags, autotune
+    kernel kind, protected injection intervals, one-line doc)."""
+    backends = list_backends()
+    short = {"supports_ft": "ft", "takes_params": "params",
+             "takes_injection": "inject", "fuses_update": "one-pass",
+             "supports_batch": "batch"}
+    lines = [_MD_HEADER]
+    lines.append("| backend | " + " | ".join(short[c] for c in _FLAG_COLUMNS)
+                 + " | kernel kind | protected intervals | description |")
+    lines.append("|---|" + "---|" * (len(_FLAG_COLUMNS) + 3))
+    for name in sorted(backends):
+        b = backends[name]
+        flags = " | ".join("✓" if getattr(b, c) else "·"
+                           for c in _FLAG_COLUMNS)
+        lines.append(f"| `{name}` | {flags} | `{b.kernel_kind}` | "
+                     f"{b.protected_intervals} | {b.doc} |")
+    lines.append("")
+    lines.append("Flag legend: **ft** = detects/corrects SDCs "
+                 "(`supports_ft`); **params** = accepts `KernelParams` "
+                 "tiles and `DataPlan`/`BatchPlan` inputs (`takes_params`); "
+                 "**inject** = accepts an in-kernel SEU descriptor "
+                 "(`takes_injection`); **one-pass** = returns the extended "
+                 "`(assign, min_dist, detected, sums, counts)` tuple "
+                 "(`fuses_update`); **batch** = operates on (B, N, F) "
+                 "problem stacks (`supports_batch`). *Kernel kind* is the "
+                 "autotune table the backend's tiles come from; *protected "
+                 "intervals* counts the independently verified SEU "
+                 "intervals one step exposes to an injection campaign.")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    """CLI: render (or freshness-check) the capability matrix."""
+    import argparse
+    import sys
+
+    # ``python -m repro.api.registry`` executes this module as __main__ —
+    # a *second* module instance with its own empty _REGISTRY, while the
+    # builtin backends register into the canonical ``repro.api.registry``.
+    # Always render through the canonical instance.
+    from repro.api import registry as _canonical
+    render = _canonical.render_markdown
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api.registry",
+        description="render the backend capability matrix as markdown")
+    ap.add_argument("--markdown", nargs="?", const="-", metavar="PATH",
+                    help="write the matrix to PATH (default: stdout)")
+    ap.add_argument("--check", metavar="PATH",
+                    help="exit 1 if PATH differs from a fresh render "
+                         "(CI staleness gate)")
+    args = ap.parse_args(argv)
+    if args.check:
+        rendered = render()
+        try:
+            with open(args.check, encoding="utf-8") as fh:
+                committed = fh.read()
+        except FileNotFoundError:
+            committed = None
+        if committed != rendered:
+            print(f"{args.check} is stale; regenerate with\n"
+                  f"  python -m repro.api.registry --markdown {args.check}",
+                  file=sys.stderr)
+            return 1
+        print(f"{args.check} is up to date")
+        return 0
+    out = render()
+    if args.markdown in (None, "-"):
+        print(out, end="")
+    else:
+        with open(args.markdown, "w", encoding="utf-8") as fh:
+            fh.write(out)
+        print(f"wrote {args.markdown}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,6 +29,12 @@ Each implementation maps (x (M, F), c (K, F)) ->
   lloyd_ft_xla XLA analogue of the one-pass FT backend (non-TPU fast path;
                detection + correction at the XLA level, no in-kernel
                injection surface).
+  lloyd_batched     batched one-pass Lloyd: B independent problems stacked
+               as (B, N, F) / (B, K, F) run through one kernel launch, the
+               problem axis outermost in the grid (``supports_batch=True``;
+               every output gains a leading B axis).
+  lloyd_batched_xla XLA analogue of the batched kernel (batched
+               contractions; non-TPU fast path).
 
 Every implementation is published through the ``repro.api`` backend
 registry as an :class:`~repro.api.registry.AssignmentBackend` declaring its
@@ -210,6 +216,40 @@ def assign_lloyd_ft_xla(x: jax.Array, c: jax.Array):
             sums, counts)
 
 
+def assign_lloyd_batched(x, c: jax.Array, params=None):
+    # Batched one-pass Lloyd: B independent problems through one kernel
+    # launch, the problem axis mapped to the outermost grid dimension
+    # (smallk epilogue per problem — batched problems have small K by
+    # construction). Extended 5-tuple contract with a leading B axis.
+    am, md, sums, counts = ops.fused_lloyd_batched(x, c, params)
+    return am, md, _zero(), sums, counts
+
+
+@jax.jit
+def assign_lloyd_batched_xla(x: jax.Array, c: jax.Array):
+    # XLA analogue of the batched one-pass kernel (non-TPU fast path): the
+    # per-problem distance GEMM, argmin and one-hot update run as batched
+    # contractions over the stacked (B, N, F) / (B, K, F) operands — XLA
+    # loops the problem axis outside each GEMM, so per-problem numerics
+    # match the B=1 call bit-for-bit while one dispatch covers all B.
+    k = c.shape[1]
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    cross = jnp.matmul(x, jnp.swapaxes(c, 1, 2),
+                       precision=jax.lax.Precision.HIGHEST,
+                       preferred_element_type=jnp.float32)       # (B, N, K)
+    d = (jnp.sum(xf * xf, axis=2, keepdims=True)
+         + jnp.sum(cf * cf, axis=2)[:, None, :] - 2.0 * cross)
+    am = jnp.argmin(d, axis=2).astype(jnp.int32)                 # (B, N)
+    md = jnp.min(d, axis=2)
+    onehot = jax.nn.one_hot(am, k, dtype=x.dtype)                # (B, N, K)
+    sums = jax.lax.dot_general(
+        onehot, x, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                      # (B, K, F)
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=1)         # (B, K)
+    return am, md, _zero(), sums, counts
+
+
 @jax.jit
 def assign_abft_offline(x: jax.Array, c: jax.Array):
     cross, detected = ft_matmul(x, c.T)
@@ -261,3 +301,14 @@ register_backend(AssignmentBackend(
     "lloyd_ft_xla", assign_lloyd_ft_xla, supports_ft=True, fuses_update=True,
     doc="XLA analogue of the one-pass FT backend (checksummed cross "
         "product + verified one-hot update; non-TPU fast path)"))
+register_backend(AssignmentBackend(
+    "lloyd_batched", assign_lloyd_batched, takes_params=True,
+    fuses_update=True, supports_batch=True,
+    doc="batched one-pass Lloyd Pallas kernel: B independent problems per "
+        "launch, problem axis outermost in the grid (smallk epilogue per "
+        "problem)"))
+register_backend(AssignmentBackend(
+    "lloyd_batched_xla", assign_lloyd_batched_xla, fuses_update=True,
+    supports_batch=True,
+    doc="XLA analogue of the batched one-pass kernel (batched contractions "
+        "over the problem stack; non-TPU fast path)"))

@@ -48,8 +48,8 @@ import jax.numpy as jnp
 
 from repro import hw as _hw
 from repro.kernels.ops import (VARIANTS, KernelParams, clamp_params,  # noqa: F401 — VARIANTS re-exported as selection vocabulary
-                               lloyd_ft_vmem_bytes, lloyd_vmem_bytes,
-                               sublane_align, _round_up)
+                               lloyd_batched_vmem_bytes, lloyd_ft_vmem_bytes,
+                               lloyd_vmem_bytes, sublane_align, _round_up)
 
 # TPU v5e constants — hoisted to repro.hw (shared with roofline/hw.py so the
 # two models can't drift); the old names stay importable from here.
@@ -62,7 +62,12 @@ VMEM_BUDGET = _hw.VMEM_BUDGET     # bytes usable per core
 # "lloyd_ft" is the one-pass FT kernel: one-pass footprint plus the fused
 # dual-checksum scratch and the expected-checksum output blocks of the
 # protected update epilogue; its model charges the checksum FLOPs/traffic.
-KINDS = ("assign", "lloyd", "lloyd_ft")
+# "batched" is the many-problem one-pass kernel: B problems per launch,
+# problem axis outermost in the grid, padded K always a single centroid
+# tile (so block_k is not a search axis and winners are additionally keyed
+# by the B bucket — a B=4 launch and a B=1024 launch amortize dispatch and
+# pipeline ramp-up very differently at the same per-problem shape).
+KINDS = ("assign", "lloyd", "lloyd_ft", "batched")
 
 # Kinds that run the one-pass (fused-update) kernel family.
 _LLOYD_KINDS = ("lloyd", "lloyd_ft")
@@ -105,6 +110,13 @@ def feasible(p: KernelParams, dtype=jnp.float32, *, kind: str = "assign",
     """
     if p.block_m % sublane_align(dtype) or p.block_k % 128 or p.block_f % 128:
         return False
+    if kind == "batched":
+        # one problem's tiles resident at a time; padded K is the single
+        # centroid tile by construction, so block_k never enters
+        if shape is None:
+            return False
+        _, k, f = shape
+        return lloyd_batched_vmem_bytes(p, k, f, dtype) <= VMEM_BUDGET
     if variant == "smallk":
         if kind == "lloyd_ft":
             # FT templates keep the generic grid (checksum scratch is
@@ -181,7 +193,7 @@ def iteration_traffic(m: int, k: int, f: int, p: KernelParams, *,
 
 def model_score(m: int, k: int, f: int, p: KernelParams,
                 dtype=jnp.float32, kind: str = "assign",
-                variant: str = "generic") -> float:
+                variant: str = "generic", batch: int = 1) -> float:
     """Analytical time estimate (seconds) for one fused-kernel launch.
 
     HBM traffic: X is re-read once per centroid tile, C once per sample
@@ -197,7 +209,16 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
     template writes each block exactly once — so whenever K fits a single
     centroid tile the small-K variant strictly wins the model, which is
     what routes it through selection.
+
+    The ``batched`` kind is B independent problems through the smallk-style
+    one-pass grid: per-problem cost is the smallk ``lloyd`` estimate and
+    the launch is its B-fold — dispatch amortization is exactly what the
+    model cannot see, which is why batched winners are *measured* on real
+    hardware and the B bucket is part of the cache key.
     """
+    if kind == "batched":
+        return batch * model_score(m, k, f, p, dtype=dtype, kind="lloyd",
+                                   variant="smallk")
     p = clamp_params(m, k, f, p, dtype)
     bytes_per = jnp.dtype(dtype).itemsize
     mp = -(-m // p.block_m) * p.block_m
@@ -246,20 +267,30 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
 
 def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
                   dtype=jnp.float32, kind: str = "assign",
-                  variant: Optional[str] = None) -> float:
+                  variant: Optional[str] = None, batch: int = 1) -> float:
     """Median wall-time of the real kernel on the current backend (seconds).
 
     Inputs are seeded-random (all-ones invited constant folding), the
     candidate pipeline is compiled exactly once up front (naively repeating
     ``fused_assign`` re-ran its eager padding prologue every call), and
     every timed call is individually ``block_until_ready`` so candidates
-    are ranked on real kernel time, not dispatch pipelining."""
-    from repro.kernels.ops import fused_assign, fused_lloyd, fused_lloyd_ft
+    are ranked on real kernel time, not dispatch pipelining. The
+    ``batched`` kind times one B-problem launch of the batched kernel —
+    the whole point of its measure mode, since dispatch amortization is
+    invisible to the analytical model."""
+    from repro.kernels.ops import (fused_assign, fused_lloyd,
+                                   fused_lloyd_batched, fused_lloyd_ft)
     kx, kc = jax.random.split(jax.random.PRNGKey(0))
-    x = jax.random.normal(kx, (m, f), dtype)
-    c = jax.random.normal(kc, (k, f), dtype)
+    if kind == "batched":
+        x = jax.random.normal(kx, (batch, m, f), dtype)
+        c = jax.random.normal(kc, (batch, k, f), dtype)
+    else:
+        x = jax.random.normal(kx, (m, f), dtype)
+        c = jax.random.normal(kc, (k, f), dtype)
     p = clamp_params(m, k, f, p, dtype)
-    if kind == "lloyd_ft":   # generic-grid template: no variant axis
+    if kind == "batched":    # smallk-style grid: no variant/block_k axis
+        fn = jax.jit(functools.partial(fused_lloyd_batched, params=p))
+    elif kind == "lloyd_ft":   # generic-grid template: no variant axis
         fn = jax.jit(functools.partial(fused_lloyd_ft, params=p))
     else:
         step = fused_lloyd if kind == "lloyd" else fused_assign
@@ -276,19 +307,44 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
 
 def select_params(m: int, k: int, f: int, *, mode: str = "model",
                   dtype=jnp.float32, kind: str = "assign",
-                  space: Optional[Iterable[KernelParams]] = None
-                  ) -> tuple[str, KernelParams]:
+                  space: Optional[Iterable[KernelParams]] = None,
+                  batch: int = 1) -> tuple[str, KernelParams]:
     """Pick the winner for one problem shape and kernel kind.
 
     Searches variant x tiles for the given dtype and returns the winning
     ``(variant, KernelParams)`` pair. The small-K variant competes whenever
     padded K fits one centroid tile and, by construction of the model,
     outranks the generic template there (no revisited-output machinery).
+    The ``batched`` kind searches (block_m, block_f) only — padded K is the
+    single centroid tile by construction — and scores one B-problem launch
+    (``batch`` enters measure mode directly and the cache key's B bucket).
     """
     from repro.kernels.ops import resolve_variant
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
     best, best_s = None, float("inf")
+    if kind == "batched":
+        seen = set()
+        for p in (space or parameter_space(dtype)):
+            if (p.block_m, p.block_f) in seen:   # block_k is not an axis
+                continue
+            seen.add((p.block_m, p.block_f))
+            if not feasible(p, dtype, kind=kind, shape=(m, k, f)):
+                continue
+            s = (model_score(m, k, f, p, dtype=dtype, kind=kind, batch=batch)
+                 if mode == "model"
+                 else measure_score(m, k, f, p, dtype=dtype, kind=kind,
+                                    batch=batch))
+            if s < best_s:
+                best, best_s = ("batched", p), s
+        if best is None:
+            raise ValueError(
+                f"no feasible 'batched' kernel parameters for per-problem "
+                f"shape {(m, k, f)}: every candidate's working set exceeds "
+                f"VMEM (the batched kernel keeps one problem's stashed X "
+                f"row tile and (K, F) partial block resident; shrink the "
+                f"problems or run them through the single-problem path)")
+        return best
     for p in (space or parameter_space(dtype)):
         # The variant is a function of (K, tiles) — the dispatch rule — so
         # each tile candidate is scored as the template it would actually

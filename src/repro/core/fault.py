@@ -158,13 +158,18 @@ def draw_tile_injection(rng, m: int, k: int, f: int, params) -> jax.Array:
     Picks a random tile of the (m, k, f) grid under ``params`` tiling, a
     random element of that tile, and a bit-flip-magnitude delta — the
     paper's threadblock-level injection model mapped to TPU tiles.
-    ``params`` must already be clamped to the problem shape.
+    ``params`` must already be clamped to the problem shape. Magnitudes
+    use the same 2^18..2^23 exponent-bit range as ``draw_step_injection``:
+    the dtype-aware detection thresholds scale with eps(input dtype), so
+    the historical 2^4 floor fell *below* the bf16/fp16 threshold — the
+    SEU then corrupted the accumulator without being detected, silently
+    breaking the campaign contract on low-precision assign-kind backends.
     """
     from repro.kernels.distance_argmin_ft import make_injection
     mp = -(-m // params.block_m)
     kp = -(-k // params.block_k)
     fp = -(-f // params.block_f)
-    delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(4, 24))
+    delta = float(rng.choice([-1.0, 1.0]) * 2.0 ** rng.integers(18, 24))
     return make_injection(int(rng.integers(mp)), int(rng.integers(kp)),
                           int(rng.integers(fp)),
                           int(rng.integers(params.block_m)),

@@ -13,8 +13,19 @@ verified update checksums are psum'd alongside its partial (sums, counts)
 after the reduction, detecting corruption introduced by the cross-shard
 psum itself (counted in the returned ``detected`` total).
 
-Accepts either a ``repro.api.KMeans`` estimator (preferred) or a legacy
-``KMeansConfig``.
+Accepts either a ``repro.api.KMeans`` estimator (preferred), a
+``repro.api.BatchedKMeans`` (problem-axis sharding — see below), or a
+legacy ``KMeansConfig``.
+
+Problem-axis mode: handing ``DistributedKMeans`` a
+:class:`~repro.batch.BatchedKMeans` switches the sharded dimension from
+rows to *problems* — each device runs the batched one-pass chunk on its
+own slice of the (B, N, F) stack. Independent problems share nothing, so
+the hot path has **no psum at all** (embarrassingly parallel; the only
+cross-device traffic is the host's convergence check at chunk
+boundaries), and per-problem results are bit-comparable to the
+single-device batched fit because both drivers run the same
+``make_batched_chunk`` body.
 """
 from __future__ import annotations
 
@@ -31,8 +42,9 @@ from repro.kernels import ref
 
 class DistributedKMeans:
     def __init__(self, config, mesh):
-        from repro.api import KMeans as ApiKMeans
-        if isinstance(config, ApiKMeans):
+        from repro.api import BatchedKMeans, KMeans as ApiKMeans
+        self.problem_axis = isinstance(config, BatchedKMeans)
+        if isinstance(config, (ApiKMeans, BatchedKMeans)):
             self.est = config
         else:   # legacy KMeansConfig
             from repro.core.kmeans import _make_estimator
@@ -51,6 +63,15 @@ class DistributedKMeans:
 
     def shard_data(self, x: jax.Array) -> jax.Array:
         x = jnp.asarray(x)
+        if self.problem_axis:
+            assert x.ndim == 3, (
+                f"problem-axis mode shards stacked (B, N, F) problems, "
+                f"got shape {x.shape}")
+            assert x.shape[0] % self._dp == 0, (
+                f"problems {x.shape[0]} must divide data parallelism "
+                f"{self._dp}")
+            return jax.device_put(
+                x, NamedSharding(self.mesh, P(self._row, None, None)))
         assert x.shape[0] % self._dp == 0, (
             f"rows {x.shape[0]} must divide data parallelism {self._dp}")
         return jax.device_put(
@@ -70,6 +91,7 @@ class DistributedKMeans:
             backend = get_backend({
                 "fused": "gemm_fused", "fused_ft": "abft_offline",
                 "lloyd": "lloyd_xla", "lloyd_ft": "lloyd_ft_xla",
+                "lloyd_batched": "lloyd_batched_xla",
             }.get(backend.name, backend.name))
         return backend
 
@@ -144,6 +166,83 @@ class DistributedKMeans:
             out_specs=(P(self._row), P(None, None), P(), P(), P()),
             check_rep=False))
 
+    # -- problem-axis mode: shard over B, no psum on the hot path -----------
+
+    def _build_step_problems(self, b_local: int, n: int, f: int,
+                             n_steps: int):
+        """One ``n_steps``-iteration batched chunk per shard: each device
+        runs :func:`~repro.batch.estimator.make_batched_chunk` — the exact
+        body the single-device :class:`~repro.batch.BatchedKMeans` jits —
+        on its own problems. No collective touches the iteration loop; the
+        single psum folds the per-shard detected-error counters once per
+        chunk (control plane, not hot path)."""
+        from repro.batch.estimator import make_batched_chunk
+        from repro.kernels import ops
+        est = self.est
+        backend = self._shard_backend()
+        params = est._resolve_params(b_local, n, f) \
+            if backend.takes_params else None
+        chunk = make_batched_chunk(backend, params, est._cast, est.tol,
+                                   n_steps)
+        daxes = self._daxes
+
+        def local_chunk(x, c, am, inertia, done, keys, it0):
+            plan = ops.plan_data_batched(est._cast(x), params) \
+                if backend.takes_params else est._cast(x)
+            det0 = jnp.zeros((), jnp.int32)
+            (c, am, inertia, done, det), live = chunk(
+                plan, c, am, inertia, done, det0, keys, it0)
+            return c, am, inertia, done, jax.lax.psum(det, daxes), live
+
+        row = self._row
+        return jax.jit(shard_map(
+            local_chunk, mesh=self.mesh,
+            in_specs=(P(row, None, None), P(row, None, None), P(row, None),
+                      P(row), P(row), P(row, None), P()),
+            out_specs=(P(row, None, None), P(row, None), P(row), P(row),
+                       P(), P(None, row)),
+            check_rep=False))
+
+    def _fit_problems(self, xs: jax.Array, centroids: jax.Array,
+                      max_iters: int, start_iteration: int,
+                      checkpointer, checkpoint_interval: int):
+        import numpy as np
+        est = self.est
+        bsz, n, f = xs.shape
+        keys = est._problem_keys(bsz)     # problem b seeds from its global
+        centroids = jnp.asarray(centroids, jnp.float32)     # index, so the
+        am = jnp.zeros((bsz, n), jnp.int32)   # sharded fit matches the
+        inertia = jnp.full((bsz,), jnp.inf, jnp.float32)   # single-device
+        done = jnp.zeros((bsz,), jnp.bool_)                # one exactly
+        iters = np.zeros((bsz,), np.int64)
+        total_det = 0
+        steps = {}
+        it0 = start_iteration
+        saved = False
+        while it0 < max_iters:
+            n_steps = min(est.sync_every, max_iters - it0)
+            if n_steps not in steps:
+                steps[n_steps] = self._build_step_problems(
+                    bsz // self._dp, n, f, n_steps)
+            centroids, am, inertia, done, det, live = steps[n_steps](
+                xs, centroids, am, inertia, done, keys, jnp.int32(it0))
+            done_h, live_h = jax.device_get((done, live))
+            iters += live_h.sum(axis=0).astype(np.int64)
+            total_det += int(jax.device_get(det))
+            it0 += n_steps
+            saved = it0 % checkpoint_interval == 0
+            if checkpointer is not None and saved:
+                checkpointer.save(it0, {
+                    "centroids": centroids,
+                    "iteration": jnp.asarray(it0, jnp.int32)})
+            if bool(done_h.all()):
+                break
+        if checkpointer is not None and not saved and it0 > start_iteration:
+            checkpointer.save(it0, {
+                "centroids": centroids,
+                "iteration": jnp.asarray(it0, jnp.int32)})
+        return centroids, am, inertia, np.maximum(iters, 1), total_det
+
     # -- driver --------------------------------------------------------------
 
     def fit(self, xs: jax.Array, centroids: jax.Array, *,
@@ -154,9 +253,20 @@ class DistributedKMeans:
         Returns (centroids, assign, inertia, iterations, detected) —
         ``iterations`` counts completed iterations from zero, so a restart
         with ``start_iteration`` continues the same trajectory.
+
+        Problem-axis mode (a :class:`~repro.batch.BatchedKMeans` was
+        passed): ``xs`` is the (B, N, F) problem stack sharded over B,
+        ``centroids`` the (B, K, F) stack, and the returned ``assign`` /
+        ``inertia`` / ``iterations`` all carry the per-problem leading
+        axis (``iterations`` is each problem's executed count).
         """
         import numpy as np
         est = self.est
+        if self.problem_axis:
+            return self._fit_problems(
+                xs, centroids,
+                max_iters if max_iters is not None else est.max_iter,
+                start_iteration, checkpointer, checkpoint_interval)
         max_iters = max_iters if max_iters is not None else est.max_iter
         m, f = xs.shape
         if self._step is None:

@@ -9,7 +9,7 @@ in a single pass: the GEMM (-2 X C^T), the paper's fused epilogue (thread /
 threadblock min-reduction) and the cross-threadblock broadcast are all
 folded into one Pallas kernel.
 
-TPU adaptation (see DESIGN.md §2):
+TPU adaptation (see docs/kernels.md):
   * the contraction (feature) axis is the innermost grid dimension with a
     VMEM scratch accumulator — the analogue of the paper's cp.async k-loop;
     Mosaic generates the HBM->VMEM double-buffered pipeline from BlockSpecs;

@@ -34,6 +34,17 @@ visited once, so min/argmin writes directly (no revisit compare) and the
 one-hot update epilogue fires in the same grid step. X and C tiles may be
 f32, bf16 or fp16; the stash buffer holds the input dtype (halving its VMEM
 at 2-byte dtypes) while every accumulator and output stays f32.
+
+Batched many-problem variant (:func:`lloyd_step_batched`): production
+traffic is rarely one big clustering problem — it is thousands of
+independent small ones (per-user embeddings, per-shard codebooks) whose
+individual kernel launches waste the MXU. The batched template threads a
+leading problem dimension ``B`` through the grid as its *outermost*
+dimension ``(B, M/bm, F/bf)``: each problem carries its own centroid tile
+and per-problem accumulator, and — because batched problems have small K by
+construction (padded K is a single centroid tile) — every grid step reuses
+the ``smallk`` epilogue, min/argmin written directly and the one-hot update
+emitted in the same step. One launch amortizes B dispatches.
 """
 from __future__ import annotations
 
@@ -161,6 +172,128 @@ def _kernel_smallk(meta_ref, x_ref, c_ref, cn_ref,
         argmin_ref[...] = local_arg
         _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
                      m_idx, bm)
+
+
+def _kernel_batched(meta_ref, x_ref, c_ref, cn_ref,
+                    mind_ref, argmin_ref, sums_ref, counts_ref,
+                    acc_ref, xbuf_ref):
+    """One problem's (bm, kp) tile of the batched grid (B, M/bm, F/bf).
+
+    The problem index is the outermost grid dimension: every block spec
+    selects problem ``b``'s slab, so the kernel body is the ``smallk``
+    single-sweep epilogue on that problem's own centroid tile and
+    accumulator — blocks just carry a leading length-1 problem axis.
+
+    meta_ref  : (1,)              SMEM — [true_n] (shared: stacked problems
+                                  are padded together)
+    x_ref     : (1, bm, bf)       problem b's sample tile
+    c_ref     : (1, kp, bf)       problem b's (single) centroid tile
+    cn_ref    : (1, 1, kp)        problem b's centroid squared norms
+    mind_ref  : (1, bm, 1)        min distance (output, single visit)
+    argmin_ref: (1, bm, 1)        argmin       (output, single visit)
+    sums_ref  : (1, 1, kp, fp)    per-row-tile partial cluster sums
+    counts_ref: (1, 1, kp)        per-row-tile partial cluster counts
+    acc_ref   : (bm, kp)          per-problem VMEM scratch accumulator
+    xbuf_ref  : (bm, fp)          VMEM stash of the row tile's chunks
+    """
+    m_idx = pl.program_id(1)
+    f_idx = pl.program_id(2)
+    nf = pl.num_programs(2)
+    bm = acc_ref.shape[0]
+    bf = x_ref.shape[2]
+
+    @pl.when(f_idx == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Single centroid-tile sweep per problem: every feature step is a
+    # first visit, so stash unconditionally (smallk rule).
+    xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[0]
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], c_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == nf - 1)
+    def _epilogue():
+        local_min, local_arg = tile_min_argmin(acc_ref[...], cn_ref[0], 0)
+        mind_ref[0] = local_min      # single visit: direct write
+        argmin_ref[0] = local_arg
+        kp = counts_ref.shape[-1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + m_idx * bm
+        valid = (rows < meta_ref[0]).astype(jnp.float32)
+        clusters = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+        onehot = (local_arg == clusters).astype(jnp.float32) * valid
+        counts_ref[0, 0] = jnp.sum(onehot, axis=0)
+        sums_ref[0, 0] = jax.lax.dot_general(
+            onehot.astype(xbuf_ref.dtype), xbuf_ref[...],
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_f", "interpret"))
+def lloyd_step_batched(
+    x: jax.Array,
+    c: jax.Array,
+    cn: jax.Array,
+    meta: jax.Array,
+    *,
+    block_m: int = 256,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Raw batched one-pass kernel entry: B independent problems, one launch.
+
+    x (B, N, F) stacked samples, c (B, K, F) per-problem centroids (f32/
+    bf16/fp16), cn (B, 1, K) f32 per-problem centroid sq-norms with +inf in
+    padded slots, meta (1,) int32 = [true_n]. Shapes must be pre-padded to
+    the block grid; padded K must be a single centroid tile (the smallk
+    condition — batched problems have small K by construction), so K itself
+    is the centroid tile and there is no ``block_k`` knob. Returns
+    (min_d (B, N, 1), argmin (B, N, 1), sums (B, N/bm, K, F),
+    counts (B, N/bm, K)); sum the partial blocks over axis 1 for each
+    problem's (K, F) / (K,) totals.
+    """
+    bsz, m, f = x.shape
+    k = c.shape[1]
+    assert m % block_m == 0 and f % block_f == 0 and k % 128 == 0, (
+        f"unpadded shapes {(bsz, m, k, f)} vs blocks "
+        f"({block_m}, {k}, {block_f})")
+    num_m = m // block_m
+
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, m, 1), jnp.float32),
+        jax.ShapeDtypeStruct((bsz, m, 1), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, num_m, k, f), jnp.float32),
+        jax.ShapeDtypeStruct((bsz, num_m, k), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((block_m, k), jnp.float32),
+        pltpu.VMEM((block_m, f), x.dtype),   # stash in the input dtype
+    ]
+    kernel = pl.pallas_call(
+        _kernel_batched,
+        grid=(bsz, num_m, f // block_f),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_m, block_f), lambda b, i, t: (b, i, t)),
+            pl.BlockSpec((1, k, block_f), lambda b, i, t: (b, 0, t)),
+            pl.BlockSpec((1, 1, k), lambda b, i, t: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m, 1), lambda b, i, t: (b, i, 0)),
+            pl.BlockSpec((1, block_m, 1), lambda b, i, t: (b, i, 0)),
+            pl.BlockSpec((1, 1, k, f), lambda b, i, t: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda b, i, t: (b, i, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    return kernel(meta, x, c, cn)
 
 
 @functools.partial(

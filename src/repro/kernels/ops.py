@@ -86,6 +86,23 @@ def lloyd_ft_vmem_bytes(params: KernelParams, k: int, f: int,
     return lloyd_vmem_bytes(params, k, f, dtype) + (2 * fp + 2) * 4
 
 
+def lloyd_batched_vmem_bytes(params: KernelParams, k: int, f: int,
+                             dtype=jnp.float32) -> int:
+    """Working-set estimate for the batched one-pass kernel: one problem's
+    tiles are resident at a time (the problem axis is the outermost grid
+    dimension), so the footprint is the smallk one-pass working set with
+    padded K as the single centroid tile — ``block_k`` is not a knob."""
+    b = _itemsize(dtype)
+    kp = _round_up(k, 128)
+    fp = _round_up(f, params.block_f)
+    tile = (params.block_m * params.block_f + kp * params.block_f) * b
+    acc = params.block_m * kp * 4
+    xbuf = params.block_m * fp * b
+    out_blocks = (kp * fp + kp) * 4
+    sums = 2 * (params.block_m + kp) * 4
+    return 2 * tile + acc + xbuf + out_blocks + sums
+
+
 def resolve_variant(k: int, params: KernelParams,
                     variant: Optional[str] = None) -> str:
     """Template dispatch rule shared with the autotuner: the small-K fast
@@ -146,6 +163,65 @@ def plan_data(x: jax.Array, params: Optional[KernelParams] = None) -> DataPlan:
     fp = _round_up(f, params.block_f)
     xp = jnp.pad(x, ((0, mp - m), (0, fp - f)))
     return DataPlan(x=x, xp=xp, xn=xn, m=m, f=f, params=params)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Per-fit data plan for B stacked problems: the (B, N, F) block padded
+    to the kernel grid and its per-problem row squared norms, computed
+    exactly once and reused across every batched Lloyd iteration.
+
+    x      : (b, n, f)   the original stacked samples
+    xp     : (b, np, fp) X padded to the block grid (== x when params is
+             None)
+    xn     : (b, n)      per-problem row squared norms, f32
+    b, n, f: true (unpadded) dimensions
+    params : the KernelParams the padding was laid out for (None = no
+             Pallas backend in play; xp is x unpadded)
+    """
+
+    x: jax.Array
+    xp: jax.Array
+    xn: jax.Array
+    b: int
+    n: int
+    f: int
+    params: Optional[KernelParams]
+
+
+jax.tree_util.register_pytree_node(
+    BatchPlan,
+    lambda p: ((p.x, p.xp, p.xn), (p.b, p.n, p.f, p.params)),
+    lambda aux, kids: BatchPlan(kids[0], kids[1], kids[2], *aux))
+
+
+def plan_data_batched(x: jax.Array,
+                      params: Optional[KernelParams] = None) -> BatchPlan:
+    """Build the per-fit :class:`BatchPlan` (pad + row norms, once).
+
+    Padding happens on the whole (B, N, F) block in one op — the stacked
+    layout means every problem shares N and F, so one pad covers all B
+    problems (a per-problem loop of pads is exactly the dispatch overhead
+    the batched path exists to remove)."""
+    b, n, f = x.shape
+    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=2)
+    if params is None:
+        return BatchPlan(x=x, xp=x, xn=xn, b=b, n=n, f=f, params=None)
+    np_ = _round_up(n, params.block_m)
+    fp = _round_up(f, params.block_f)
+    xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, fp - f)))
+    return BatchPlan(x=x, xp=xp, xn=xn, b=b, n=n, f=f, params=params)
+
+
+def _pad_centroids_batched(c, k: int, kp: int, fp: int):
+    """Pad per-problem centroids to (B, kp, fp) and build +inf-masked
+    squared norms (B, 1, kp) so padded slots never win any problem's
+    argmin."""
+    cpad = jnp.pad(c, ((0, 0), (0, kp - c.shape[1]), (0, fp - c.shape[2])))
+    cn = jnp.sum(cpad.astype(jnp.float32) ** 2, axis=2)        # (B, kp)
+    slot = jnp.arange(kp)
+    cn = jnp.where(slot[None, :] < k, cn, jnp.inf)[:, None, :]
+    return cpad, cn
 
 
 def _pad_centroids(c, k: int, kp: int, fp: int):
@@ -270,6 +346,71 @@ def fused_lloyd(
     sums = _tree_sum(sums)[:k, :plan.f]
     counts = _tree_sum(counts)[:k]
     return am[:m, 0], mind[:m, 0] + plan.xn, sums, counts
+
+
+def _resolve_padded_batched(x, c, params: Optional[KernelParams]):
+    """Batched front end: accept a raw (B, N, F) stack or a prebuilt
+    :class:`BatchPlan` and return (plan, padded centroids, masked centroid
+    norms, params). Centroids are cast to the plan's dtype like the
+    single-problem path; padded K is always one centroid tile (the batched
+    template is the smallk epilogue by construction)."""
+    k = c.shape[1]
+    if isinstance(x, BatchPlan):
+        plan = x
+        params = plan.params
+        if params is None:
+            raise ValueError(
+                "BatchPlan was built without KernelParams (plan_data_batched"
+                "(x) with params=None pads nothing); build it with the "
+                "kernel's tile selection — plan_data_batched(x, params) — "
+                "before feeding the batched Pallas kernel")
+    else:
+        if params is None:
+            from repro.api.cache import default_cache
+            _, params = default_cache().lookup(
+                x.shape[1], k, x.shape[2], kind="batched", dtype=x.dtype,
+                batch=x.shape[0])
+        params = clamp_params(x.shape[1], k, x.shape[2], params,
+                              dtype=x.dtype)
+        plan = plan_data_batched(x, params)
+    c = c.astype(plan.xp.dtype)
+    kp = _round_up(k, 128)
+    cp, cn = _pad_centroids_batched(c, k, kp, plan.xp.shape[2])
+    return plan, cp, cn, params
+
+
+def fused_lloyd_batched(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-pass Lloyd step for B independent problems in a single launch.
+
+    ``x`` may be a raw (B, N, F) stack or a prebuilt :class:`BatchPlan`;
+    ``c`` is the (B, K, F) per-problem centroid stack. f32, bf16 and fp16
+    inputs all lower (f32 accumulators and outputs). The problem axis maps
+    to the outermost grid dimension of the kernel, so one launch replaces B
+    dispatches; per-problem arithmetic is identical to a loop of
+    single-problem :func:`fused_lloyd` calls at the same tiles (same
+    epilogue, same tree-reduction order). Returns (assign (B, N) int32,
+    true squared distance (B, N) f32, sums (B, K, F) f32,
+    counts (B, K) f32).
+    """
+    plan, cp, cn, params = _resolve_padded_batched(x, c, params)
+    if interpret is None:
+        interpret = not on_tpu()
+    k, n = c.shape[1], plan.n
+    meta = jnp.array([n], jnp.int32)
+    mind, am, sums, counts = _ll.lloyd_step_batched(
+        plan.xp, cp, cn, meta, block_m=params.block_m,
+        block_f=params.block_f, interpret=interpret)
+    # same balanced pairwise order as the single-problem reduction, per
+    # problem: collapse the row-tile partials (axis 1) for all B at once
+    sums = _tree_sum(jnp.moveaxis(sums, 1, 0))[:, :k, :plan.f]
+    counts = _tree_sum(jnp.moveaxis(counts, 1, 0))[:, :k]
+    return am[:, :n, 0], mind[:, :n, 0] + plan.xn, sums, counts
 
 
 def _verify_update_partials(plan, am, sums_p, counts_p, ucheck, ccheck,

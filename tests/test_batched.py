@@ -1,0 +1,355 @@
+"""Batched many-problem K-means: kernel/estimator bit-equality against the
+single-problem path, per-problem convergence masks, the v4 autotune cache
+schema (B buckets), and problem-axis sharding parity.
+
+Pallas kernels run interpret=True (kernel bodies execute in Python on CPU).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AutotuneCache, BackendCapabilityError, BatchedKMeans,
+                       batch_bucket, get_backend, shape_bucket)
+from repro.api.cache import SCHEMA_VERSION
+from repro.core.autotune import feasible, model_score, select_params
+from repro.data.blobs import make_blobs
+from repro.kernels import ops
+from repro.kernels.ops import KernelParams
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BATCH_SHAPES = [
+    (3, 200, 7, 33),          # every dim off-grid
+    (2, 256, 8, 128),         # exact tiles
+    (4, 70, 3, 16),           # tiny: block clamping
+]
+
+
+def _stack(b, n, f, k, seed=0):
+    x = jnp.stack([make_blobs(n, f, k, seed=seed + i)[0] for i in range(b)])
+    kc = jax.random.PRNGKey(seed + 99)
+    c = jax.random.normal(kc, (b, k, f), jnp.float32)
+    return x, c
+
+
+class TestBatchedKernel:
+    @pytest.mark.parametrize("b,n,k,f", BATCH_SHAPES)
+    def test_bit_identical_to_single_problem_kernel(self, b, n, k, f):
+        """The tentpole invariant: one batched launch == a loop of
+        single-problem fused_lloyd calls, bit for bit, per problem."""
+        x, c = _stack(b, n, f, k)
+        p = ops.clamp_params(n, k, f, KernelParams(256, 128, 128))
+        am, md, sums, counts = ops.fused_lloyd_batched(x, c, p,
+                                                       interpret=True)
+        assert am.shape == (b, n) and md.shape == (b, n)
+        assert sums.shape == (b, k, f) and counts.shape == (b, k)
+        for i in range(b):
+            am1, md1, sums1, counts1 = ops.fused_lloyd(x[i], c[i], p,
+                                                       interpret=True)
+            np.testing.assert_array_equal(np.asarray(am[i]),
+                                          np.asarray(am1))
+            np.testing.assert_array_equal(np.asarray(md[i]),
+                                          np.asarray(md1))
+            np.testing.assert_array_equal(np.asarray(sums[i]),
+                                          np.asarray(sums1))
+            np.testing.assert_array_equal(np.asarray(counts[i]),
+                                          np.asarray(counts1))
+
+    def test_low_precision_dtypes_lower(self):
+        b, n, k, f = 2, 96, 4, 32
+        x, c = _stack(b, n, f, k)
+        p = ops.clamp_params(n, k, f, KernelParams(256, 128, 128),
+                             dtype=jnp.bfloat16)
+        for dtype in (jnp.bfloat16, jnp.float16):
+            am, md, sums, counts = ops.fused_lloyd_batched(
+                x.astype(dtype), c.astype(dtype), p, interpret=True)
+            assert sums.dtype == jnp.float32
+            assert counts.dtype == jnp.float32
+            assert md.dtype == jnp.float32
+            # counts are exact whatever the tile dtype
+            np.testing.assert_allclose(np.asarray(jnp.sum(counts, axis=1)),
+                                       np.full(b, n), rtol=0)
+
+    def test_batch_plan_reused_across_calls(self):
+        """plan_data_batched pads the whole (B, N, F) block once; feeding
+        the plan back in must give the raw-array result."""
+        b, n, k, f = 2, 100, 5, 20
+        x, c = _stack(b, n, f, k)
+        p = ops.clamp_params(n, k, f, KernelParams(256, 128, 128))
+        plan = ops.plan_data_batched(x, p)
+        assert plan.xp.shape[1] % p.block_m == 0
+        got = ops.fused_lloyd_batched(plan, c, interpret=True)
+        want = ops.fused_lloyd_batched(x, c, p, interpret=True)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_plan_without_params_rejected(self):
+        x, _ = _stack(2, 64, 8, 4)
+        plan = ops.plan_data_batched(x)   # params=None: pads nothing
+        with pytest.raises(ValueError, match="without KernelParams"):
+            ops.fused_lloyd_batched(plan, jnp.zeros((2, 4, 8)))
+
+
+class TestBatchedEstimator:
+    def test_bit_identical_to_loop_of_fits(self):
+        """fit on the (B, N, F) stack == a Python loop of B single-problem
+        fits seeded ``random_state + b``, bit for bit (the contract that
+        makes the batched path a pure performance move)."""
+        b, n, f, k = 6, 256, 16, 4
+        x, _ = _stack(b, n, f, k, seed=10)
+        bkm = BatchedKMeans(n_clusters=k, max_iter=25, random_state=3)
+        bkm.fit(x)
+        for i in range(b):
+            one = BatchedKMeans(n_clusters=k, max_iter=25,
+                                random_state=3 + i).fit(x[i:i + 1])
+            np.testing.assert_array_equal(
+                np.asarray(one.cluster_centers_[0]),
+                np.asarray(bkm.cluster_centers_[i]))
+            np.testing.assert_array_equal(np.asarray(one.labels_[0]),
+                                          np.asarray(bkm.labels_[i]))
+            assert one.n_iter_[0] == bkm.n_iter_[i]
+            assert one.inertia_[0] == bkm.inertia_[i]
+
+    def test_convergence_mask_isolation(self):
+        """One converged problem must not perturb the others: adding an
+        instantly-converging problem to the batch leaves every other
+        problem's full trajectory unchanged."""
+        b, n, f, k = 4, 256, 8, 3
+        x, _ = _stack(b, n, f, k, seed=42)
+        base = BatchedKMeans(n_clusters=k, max_iter=30, random_state=5)
+        base.fit(x)
+        # problem 0 replaced by its own fitted centroids' data -> centroids
+        # warm-started at the solution converge in one step
+        warm = jnp.asarray(base.cluster_centers_)
+        again = BatchedKMeans(n_clusters=k, max_iter=30, random_state=5)
+        again.fit(x, centroids=warm)
+        assert int(again.n_iter_[0]) <= 2     # instant convergers...
+        # ...and a mixed batch (one frozen, rest live) matches per-problem
+        mixed_c0 = warm.at[1:].set(
+            BatchedKMeans(n_clusters=k, random_state=5)
+            .init_centroids(x)[1:])
+        mixed = BatchedKMeans(n_clusters=k, max_iter=30, random_state=5)
+        mixed.fit(x, centroids=mixed_c0)
+        solo = BatchedKMeans(n_clusters=k, max_iter=30, random_state=5)
+        solo.fit(x[1:], centroids=mixed_c0[1:])
+        # problems 1.. ran exactly as if problem 0 (which froze first)
+        # were absent — masks freeze without desynchronizing
+        np.testing.assert_array_equal(np.asarray(mixed.cluster_centers_[1:]),
+                                      np.asarray(solo.cluster_centers_))
+        np.testing.assert_array_equal(np.asarray(mixed.labels_[1:]),
+                                      np.asarray(solo.labels_))
+        np.testing.assert_array_equal(mixed.n_iter_[1:], solo.n_iter_)
+
+    def test_frozen_problem_stops_updating(self):
+        """A problem that converges at iteration t keeps exactly its
+        iteration-t state while the batch keeps stepping."""
+        b, n, f, k = 3, 256, 8, 3
+        x, _ = _stack(b, n, f, k, seed=7)
+        short = BatchedKMeans(n_clusters=k, max_iter=60, random_state=1,
+                              sync_every=60).fit(x)
+        # rerun with a larger budget: already-converged problems unchanged
+        longer = BatchedKMeans(n_clusters=k, max_iter=90, random_state=1,
+                               sync_every=90).fit(x)
+        np.testing.assert_array_equal(short.n_iter_, longer.n_iter_)
+        np.testing.assert_array_equal(np.asarray(short.cluster_centers_),
+                                      np.asarray(longer.cluster_centers_))
+
+    def test_pallas_backend_matches_xla(self):
+        b, n, f, k = 2, 128, 8, 4
+        x, _ = _stack(b, n, f, k, seed=2)
+        pal = BatchedKMeans(n_clusters=k, max_iter=4, sync_every=4,
+                            backend="lloyd_batched", random_state=1).fit(x)
+        xla = BatchedKMeans(n_clusters=k, max_iter=4, sync_every=4,
+                            backend="lloyd_batched_xla",
+                            random_state=1).fit(x)
+        np.testing.assert_allclose(np.asarray(pal.cluster_centers_),
+                                   np.asarray(xla.cluster_centers_),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(pal.n_iter_, xla.n_iter_)
+
+    def test_predict_score_state_roundtrip(self):
+        b, n, f, k = 3, 128, 8, 4
+        x, _ = _stack(b, n, f, k, seed=11)
+        bkm = BatchedKMeans(n_clusters=k, max_iter=10, random_state=0)
+        labels = bkm.fit_predict(x)
+        assert labels.shape == (b, n)
+        assert bkm.score(x).shape == (b,)
+        restored = BatchedKMeans.from_state(bkm.get_state())
+        np.testing.assert_array_equal(np.asarray(restored.predict(x)),
+                                      np.asarray(bkm.predict(x)))
+        np.testing.assert_array_equal(restored.n_iter_, bkm.n_iter_)
+
+    def test_input_validation(self):
+        with pytest.raises(ValueError, match="stacked"):
+            BatchedKMeans(n_clusters=2).fit(jnp.zeros((16, 4)))
+        with pytest.raises(BackendCapabilityError, match="supports_batch"):
+            BatchedKMeans(n_clusters=2, backend="lloyd")
+        bkm = BatchedKMeans(n_clusters=2, max_iter=3)
+        bkm.fit(jnp.asarray(np.random.default_rng(0)
+                            .normal(size=(2, 64, 4)).astype(np.float32)))
+        with pytest.raises(ValueError, match="B=2"):
+            bkm.predict(jnp.zeros((3, 64, 4)))
+
+    def test_backend_capability_flags(self):
+        for name in ("lloyd_batched", "lloyd_batched_xla"):
+            be = get_backend(name)
+            assert be.supports_batch and be.fuses_update
+            assert be.kernel_kind == "batched"
+        assert not get_backend("lloyd").supports_batch
+
+    def test_fresh_interpreter_can_import_repro_batch_first(self):
+        """repro.batch must import standalone: the repro.api re-export is
+        lazy, so importing the batch package first cannot re-enter a
+        partially initialized repro.api (circular-import regression)."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env["JAX_PLATFORMS"] = "cpu"
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "import repro.batch; from repro.api import BatchedKMeans; "
+             "assert BatchedKMeans is repro.batch.BatchedKMeans"],
+            capture_output=True, text=True, env=env, timeout=120)
+        assert out.returncode == 0, out.stderr[-2000:]
+
+    def test_single_problem_estimator_rejects_batched_backend(self):
+        """The registry contract is symmetric: KMeans must refuse a
+        supports_batch backend at construction (a typed error, not a
+        shape crash deep inside the batched kernel)."""
+        from repro.api import KMeans
+        with pytest.raises(BackendCapabilityError, match="BatchedKMeans"):
+            KMeans(4, backend="lloyd_batched_xla")
+        with pytest.raises(BackendCapabilityError, match="BatchedKMeans"):
+            KMeans(4, backend="lloyd_batched")
+
+    def test_update_target_on_injectionless_onepass_names_real_reason(self):
+        """lloyd_ft_xla is one-pass FT but has no in-kernel injection
+        surface; the capability error must say that, not call it
+        'two-pass'."""
+        from repro.api import InjectionCampaign
+        camp = InjectionCampaign(rate=1.0, targets="update")
+        with pytest.raises(BackendCapabilityError,
+                           match="no in-kernel injection surface"):
+            camp.resolved_targets(get_backend("lloyd_ft_xla"))
+        with pytest.raises(BackendCapabilityError, match="two-pass"):
+            camp.resolved_targets(get_backend("abft_offline"))
+
+
+class TestBatchedAutotune:
+    def test_batched_kind_selects_and_scales_with_batch(self):
+        v, p = select_params(256, 8, 32, kind="batched", batch=64)
+        assert v == "batched"
+        assert feasible(p, kind="batched", shape=(256, 8, 32))
+        s1 = model_score(256, 8, 32, p, kind="batched", batch=1)
+        s64 = model_score(256, 8, 32, p, kind="batched", batch=64)
+        assert s64 == pytest.approx(64 * s1)
+
+    def test_batched_kind_needs_shape(self):
+        assert not feasible(KernelParams(), kind="batched", shape=None)
+
+    def test_cache_batch_buckets_are_isolated(self):
+        """A B=4 winner must never serve a B=1024 launch (or a
+        single-problem kind) — batch-crossing is the v3 lesson."""
+        cache = AutotuneCache(None)
+        cache.put(256, 8, 32, KernelParams(512, 128, 256), kind="batched",
+                  variant="batched", batch=4)
+        v, p = cache.lookup(256, 8, 32, kind="batched", batch=4)
+        assert (v, p.block_m) == ("batched", 512)
+        _, q = cache.lookup(256, 8, 32, kind="batched", batch=1024)
+        assert (q.block_m, q.block_k, q.block_f) != (512, 128, 256)
+        _, r = cache.lookup(256, 8, 32, kind="lloyd")
+        assert (r.block_m, r.block_k, r.block_f) != (512, 128, 256)
+
+    def test_v4_roundtrip_with_batch_bucket(self, tmp_path):
+        path = str(tmp_path / "v4.json")
+        cache = AutotuneCache(path)
+        cache.put(256, 8, 32, KernelParams(256, 128, 128), kind="batched",
+                  variant="batched", batch=64)
+        cache.save()
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        assert on_disk["schema"] == SCHEMA_VERSION == 4
+        assert batch_bucket(64) == "b6"
+        assert on_disk["kinds"]["batched/float32/b6"][
+            shape_bucket(256, 8, 32)] == ["batched", 256, 128, 128]
+        v, p = AutotuneCache(path).lookup(256, 8, 32, kind="batched",
+                                          batch=64)
+        assert v == "batched" and p.block_m == 256
+
+    def test_v3_file_upgrades_to_v4(self, tmp_path):
+        """v3 (kind/dtype keys, no batch axis) -> load -> lookup -> save ->
+        v4 round trip: every v3 winner lands in bucket b0 of its
+        kind/dtype and keeps serving single-problem lookups."""
+        path = str(tmp_path / "v3.json")
+        bucket = shape_bucket(4096, 100, 128)
+        with open(path, "w") as fh:
+            json.dump({"schema": 3,
+                       "kinds": {"lloyd/bfloat16":
+                                 {bucket: ["smallk", 512, 128, 128]}}}, fh)
+        cache = AutotuneCache(path)
+        v, p = cache.lookup(4096, 100, 128, kind="lloyd",
+                            dtype=jnp.bfloat16)
+        assert v == "smallk"
+        assert (p.block_m, p.block_k, p.block_f) == (512, 128, 128)
+        # the batched kind never inherits a single-problem winner
+        _, q = cache.lookup(4096, 100, 128, kind="batched",
+                            dtype=jnp.bfloat16, batch=8)
+        assert q is not None
+        cache.save()
+        with open(path) as fh:
+            upgraded = json.load(fh)
+        assert upgraded["schema"] == 4
+        assert upgraded["kinds"]["lloyd/bfloat16/b0"][bucket] == \
+            ["smallk", 512, 128, 128]
+
+    def test_measure_mode_runs_batched_kernel(self):
+        from repro.core.autotune import measure_score
+        t = measure_score(64, 4, 16, KernelParams(64, 128, 128),
+                          iters=1, kind="batched", batch=2)
+        assert t > 0.0
+
+
+class TestProblemAxisSharding:
+    def test_sharded_fit_matches_single_device(self):
+        """Problem-axis mode: 8 devices, B=16 problems, no psum on the hot
+        path — results bit-identical to the single-device batched fit."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env["JAX_PLATFORMS"] = "cpu"
+        code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import BatchedKMeans
+        from repro.dist.kmeans_dist import DistributedKMeans
+        from repro.data.blobs import make_blobs
+
+        B, N, F, K = 16, 256, 8, 4
+        x = jnp.stack([make_blobs(N, F, K, seed=b)[0] for b in range(B)])
+        mesh = jax.make_mesh((8,), ("data",))
+        est = BatchedKMeans(n_clusters=K, max_iter=20, random_state=0)
+        c0 = est.init_centroids(x)
+        dk = DistributedKMeans(est, mesh)
+        assert dk.problem_axis
+        assert dk._shard_backend().name == "lloyd_batched_xla"
+        c, am, inertia, iters, det = dk.fit(dk.shard_data(x), c0)
+        ref = BatchedKMeans(n_clusters=K, max_iter=20,
+                            random_state=0).fit(x, centroids=c0)
+        np.testing.assert_array_equal(np.asarray(c),
+                                      np.asarray(ref.cluster_centers_))
+        np.testing.assert_array_equal(np.asarray(am),
+                                      np.asarray(ref.labels_))
+        np.testing.assert_array_equal(iters, ref.n_iter_)
+        assert det == 0
+        print("PARITY OK")
+        """
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, env=env,
+                             timeout=420)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "PARITY OK" in out.stdout

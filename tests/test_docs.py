@@ -1,0 +1,142 @@
+"""Executable-docs gates: the documentation cannot silently rot.
+
+Three mechanisms, mirroring the CI doc-check steps:
+
+  * the auto-generated backend capability matrix (docs/backends.md) must
+    match a fresh render of the registry — regenerating is one command
+    (``make docs``), so staleness is always a one-line fix;
+  * every fenced ``python`` block in README.md and docs/*.md must at least
+    *compile*; blocks written as doctests (``>>>``) are additionally
+    *executed* and their outputs checked;
+  * the docs index (DESIGN.md) and cross-links must point at files that
+    exist.
+"""
+import doctest
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = os.path.join(REPO, "docs")
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_LINK = re.compile(r"\]\(((?:docs/)?[\w./-]+\.md)\)")
+
+
+def _doc_files():
+    files = [os.path.join(REPO, "README.md"),
+             os.path.join(REPO, "DESIGN.md")]
+    files += sorted(os.path.join(DOCS, f) for f in os.listdir(DOCS)
+                    if f.endswith(".md"))
+    return files
+
+
+def _blocks(path):
+    with open(path, encoding="utf-8") as fh:
+        return _FENCE.findall(fh.read())
+
+
+class TestCapabilityMatrixFreshness:
+    def test_backends_md_matches_registry(self):
+        from repro.api.registry import render_markdown
+        path = os.path.join(DOCS, "backends.md")
+        assert os.path.exists(path), "docs/backends.md missing — run " \
+            "`python -m repro.api.registry --markdown docs/backends.md`"
+        with open(path, encoding="utf-8") as fh:
+            committed = fh.read()
+        assert committed == render_markdown(), (
+            "docs/backends.md is stale; regenerate with `make docs` (a "
+            "backend or capability flag changed without re-rendering the "
+            "matrix)")
+
+    def test_check_cli_agrees(self, capsys):
+        from repro.api.registry import main
+        assert main(["--check", os.path.join(DOCS, "backends.md")]) == 0
+
+    def test_check_cli_flags_stale_file(self, tmp_path):
+        from repro.api.registry import main
+        stale = tmp_path / "backends.md"
+        stale.write_text("# not the matrix\n")
+        assert main(["--check", str(stale)]) == 1
+
+
+class TestCodeBlocks:
+    @pytest.mark.parametrize("path", _doc_files(),
+                             ids=[os.path.basename(p) for p in _doc_files()])
+    def test_python_blocks_compile(self, path):
+        for i, block in enumerate(_blocks(path)):
+            src = block
+            if ">>>" in block:      # doctest blocks are executed below
+                continue
+            try:
+                compile(src, f"{os.path.basename(path)}[block {i}]", "exec")
+            except SyntaxError as e:
+                pytest.fail(f"{os.path.basename(path)} code block {i} does "
+                            f"not compile: {e}")
+
+    @pytest.mark.parametrize("path", _doc_files(),
+                             ids=[os.path.basename(p) for p in _doc_files()])
+    def test_doctest_blocks_execute(self, path):
+        parser = doctest.DocTestParser()
+        runner = doctest.DocTestRunner(verbose=False,
+                                       optionflags=doctest.ELLIPSIS)
+        ran = 0
+        for i, block in enumerate(_blocks(path)):
+            if ">>>" not in block:
+                continue
+            test = parser.get_doctest(
+                block, {}, f"{os.path.basename(path)}[block {i}]",
+                path, 0)
+            result = runner.run(test, clear_globs=False)
+            ran += result.attempted
+            assert result.failed == 0, (
+                f"doctest block {i} in {os.path.basename(path)} failed "
+                f"({result.failed}/{result.attempted} examples)")
+        if os.path.basename(path) == "autotune.md":
+            assert ran > 0, "autotune.md lost its executable example"
+
+    def test_estimator_docstring_examples_execute(self):
+        """The BatchedKMeans docstring example is part of the public docs
+        surface — run it like the .md doctests."""
+        from repro.batch import estimator as mod
+        runner = doctest.DocTestRunner(verbose=False,
+                                       optionflags=doctest.ELLIPSIS)
+        finder = doctest.DocTestFinder(exclude_empty=True)
+        ran = 0
+        for test in finder.find(mod.BatchedKMeans, "BatchedKMeans"):
+            result = runner.run(test)
+            ran += result.attempted
+            assert result.failed == 0
+        assert ran > 0, "BatchedKMeans lost its docstring example"
+
+
+class TestDocLinks:
+    def test_design_md_is_an_index_and_links_resolve(self):
+        with open(os.path.join(REPO, "DESIGN.md"), encoding="utf-8") as fh:
+            design = fh.read()
+        # the index stays one page and defers to docs/
+        assert design.count("\n") < 60, "DESIGN.md grew past an index again"
+        links = _LINK.findall(design)
+        assert any("architecture" in l for l in links)
+        for link in links:
+            assert os.path.exists(os.path.join(REPO, link)), \
+                f"DESIGN.md links to missing file {link}"
+
+    @pytest.mark.parametrize("path", _doc_files(),
+                             ids=[os.path.basename(p) for p in _doc_files()])
+    def test_cross_links_resolve(self, path):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        base = os.path.dirname(path)
+        for link in _LINK.findall(text):
+            target = os.path.join(REPO, link) if link.startswith("docs/") \
+                else os.path.join(base, link)
+            assert os.path.exists(target), \
+                f"{os.path.basename(path)} links to missing file {link}"
+
+    def test_docs_suite_complete(self):
+        for name in ("architecture.md", "kernels.md", "fault_tolerance.md",
+                     "autotune.md", "backends.md"):
+            assert os.path.exists(os.path.join(DOCS, name)), \
+                f"docs/{name} missing from the suite"

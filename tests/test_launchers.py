@@ -80,15 +80,15 @@ class TestAutotuneTable:
         cache = AutotuneCache(path)
         table = cache.build([(16384, 64, 64), (131072, 128, 128)],
                             mode="model")
-        assert len(table["assign/float32"]) == 2
+        assert len(table["assign/float32/b0"]) == 2
         v, p = cache.lookup(16384, 64, 64)
         assert [v, p.block_m, p.block_k, p.block_f] == \
-            table["assign/float32"]["14-6-6"]
+            table["assign/float32/b0"]["14-6-6"]
         # a fresh cache instance reloads the persisted winners
         fresh = AutotuneCache(path)
         w, q = fresh.lookup(131072, 128, 128)
         assert [w, q.block_m, q.block_k, q.block_f] == \
-            table["assign/float32"][shape_bucket(131072, 128, 128)]
+            table["assign/float32/b0"][shape_bucket(131072, 128, 128)]
         with open(path) as fh:
             assert json.load(fh) == {"schema": SCHEMA_VERSION,
                                      "kinds": table}
@@ -114,7 +114,7 @@ class TestAutotuneTable:
         with open(path) as fh:
             on_disk = json.load(fh)
         assert on_disk["schema"] >= 3
-        assert on_disk["kinds"]["assign/float32"][
+        assert on_disk["kinds"]["assign/float32/b0"][
             shape_bucket(1024, 64, 64)] == ["generic", 64, 128, 128]
 
     def test_kinds_are_isolated(self, tmp_path):

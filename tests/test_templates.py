@@ -1,5 +1,5 @@
 """Template family (paper §III-B): dtype-specialized kernel paths, the
-small-K fast-path variant, variant-aware selection, the v3 cache schema,
+small-K fast-path variant, variant-aware selection, the v4 cache schema,
 and the estimator's ``compute_dtype`` / chunked-inference surface.
 
 Kernels run interpret=True (kernel bodies execute in Python on CPU)."""
@@ -205,8 +205,8 @@ class TestVariantAwareSelection:
         assert tbf["total"] < t32["total"]
 
 
-class TestCacheSchemaV3:
-    def test_v3_roundtrip_with_variant_and_dtype(self, tmp_path):
+class TestCacheSchemaV4:
+    def test_v4_roundtrip_with_variant_and_dtype(self, tmp_path):
         path = str(tmp_path / "v3.json")
         cache = AutotuneCache(path)
         cache.put(4096, 100, 128, KernelParams(512, 128, 128),
@@ -214,8 +214,8 @@ class TestCacheSchemaV3:
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] == SCHEMA_VERSION == 3
-        assert on_disk["kinds"]["lloyd/bfloat16"][
+        assert on_disk["schema"] == SCHEMA_VERSION == 4
+        assert on_disk["kinds"]["lloyd/bfloat16/b0"][
             shape_bucket(4096, 100, 128)] == ["smallk", 512, 128, 128]
         fresh = AutotuneCache(path)
         v, p = fresh.lookup(4096, 100, 128, kind="lloyd",
@@ -240,11 +240,11 @@ class TestCacheSchemaV3:
         cache.save()
         with open(path) as fh:
             upgraded = json.load(fh)
-        assert upgraded["schema"] == 3
-        assert upgraded["kinds"]["lloyd/float32"][bucket] \
+        assert upgraded["schema"] == 4
+        assert upgraded["kinds"]["lloyd/float32/b0"][bucket] \
             == ["generic", 128, 128, 256]
 
-    def test_v1_chain_upgrades_to_v3(self, tmp_path):
+    def test_v1_chain_upgrades_to_v4(self, tmp_path):
         """v1 -> load -> save -> v3 -> load: the winner survives the whole
         schema chain under (assign, generic, float32)."""
         path = str(tmp_path / "v1.json")
