@@ -2,10 +2,21 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-smoke bench-check bench-ft bench-batched \
-        quickstart docs docs-check
+        quickstart docs docs-check lint typecheck analysis static
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
+
+lint:            ## ruff (config in pyproject.toml)
+	ruff check src tests benchmarks examples
+
+typecheck:       ## mypy, strict on repro.api / repro.kernels.ops / repro.analysis
+	mypy
+
+analysis:        ## repo-specific static passes: contracts, lint, recompile
+	$(PY) -m repro.analysis --check
+
+static: lint typecheck analysis  ## every static gate CI runs before the tests
 
 test-fast:       ## API + kmeans + kernels only (quick signal)
 	$(PY) -m pytest -q tests/test_api.py tests/test_kmeans.py tests/test_kernels.py

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import distance_flops, row, time_call
+from benchmarks.common import row, time_call
 from repro.core import assignment as assign_mod
 
 M = 8_192

@@ -17,7 +17,6 @@ import shutil
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig

@@ -1,0 +1,22 @@
+"""Static-analysis gates for the kernel stack (``python -m repro.analysis``).
+
+Three passes, each runnable standalone and wired into CI before the test
+job (see docs/analysis.md):
+
+* :mod:`repro.analysis.contracts` — kernel contract checker (VMEM byte
+  models vs real BlockSpecs, tile alignment, f32-accumulate rule,
+  registry flags vs signatures, FT descriptor slots), all via abstract
+  evaluation — no TPU.
+* :mod:`repro.analysis.lint` — AST hygiene linter for the hot paths
+  (host-sync funnel, jit-in-loop, module-global mutable state,
+  hardcoded interpret mode).
+* :mod:`repro.analysis.recompile` — recompile gate: warm reruns of the
+  estimator hot paths must not trigger new XLA compiles.
+
+Exit codes and the ``--format=github`` annotation style are shared with
+``python -m repro.api.registry`` via :mod:`repro.analysis.report`.
+"""
+from repro.analysis.report import (EXIT_OK, EXIT_USAGE,  # noqa: F401
+                                   EXIT_VIOLATIONS, Violation)
+
+PASSES = ("contracts", "lint", "recompile")

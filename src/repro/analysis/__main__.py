@@ -1,0 +1,59 @@
+"""Driver: ``python -m repro.analysis [--check] [--pass NAME] ...``.
+
+``--check`` runs every pass (the CI gate); ``--pass`` narrows to one.
+Exit codes (shared with ``python -m repro.api.registry``): 0 clean,
+1 violations, 2 usage error. ``--format=github`` emits workflow-command
+annotations pointing at the offending file/line.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.analysis import PASSES, report
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis gates: kernel contracts, hot-path "
+                    "hygiene lint, recompile gate")
+    ap.add_argument("--check", action="store_true",
+                    help="run every pass and exit 1 on any violation "
+                         "(the CI gate; also the default action)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=PASSES, metavar="NAME",
+                    help=f"run only this pass (repeatable); one of "
+                         f"{', '.join(PASSES)}")
+    ap.add_argument("--format", choices=report.FORMATS, default="text",
+                    help="violation output style (github = workflow "
+                         "annotations)")
+    ap.add_argument("--root", default=None,
+                    help="repository root for the lint pass (default: "
+                         "this checkout)")
+    args = ap.parse_args(argv)
+    selected = tuple(args.passes) if args.passes else PASSES
+
+    violations: list[report.Violation] = []
+    for name in selected:
+        if name == "contracts":
+            from repro.analysis import contracts
+            found = contracts.run()
+        elif name == "lint":
+            from repro.analysis import lint
+            found = lint.run(root=args.root)
+        else:
+            from repro.analysis import recompile
+            found = recompile.run()
+        print(f"[repro.analysis] {name}: "
+              f"{len(found) or 'no'} violation(s)")
+        violations.extend(found)
+    code = report.emit(violations, fmt=args.format)
+    if code == report.EXIT_OK:
+        print(f"[repro.analysis] all {len(selected)} pass(es) clean")
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

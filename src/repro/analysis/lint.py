@@ -1,0 +1,248 @@
+"""Pass 2 — hot-path hygiene linter (custom AST checks over src/repro).
+
+Four rules, each targeting a bug class this repo has actually shipped or
+explicitly designs against:
+
+``host-sync``       device->host synchronization outside the designated
+                    ``_host_read`` funnel: ``.item()``, ``jax.device_get``
+                    anywhere; ``np.asarray`` and ``float()``/``int()`` on
+                    bare variables in the hot-path packages (estimator
+                    fit/predict paths). Serialization boundaries
+                    (``get_state``/``from_state``) and the funnel itself
+                    are exempt.
+``jit-in-loop``     ``jax.jit``/``jax.pmap`` constructed inside a loop
+                    body — a fresh jit wrapper per iteration recompiles
+                    every call.
+``module-state``    a module-global mutable literal (the PR-1
+                    ``_cached_table`` bug class): process-wide hidden
+                    state that leaks across estimators and tests.
+                    ALL_CAPS names are exempt — constants by repo
+                    convention (lookup tables, shape lists).
+``interpret-mode``  a hardcoded ``interpret=True`` in library code —
+                    interpret mode is a per-call decision owned by
+                    ``ops.on_tpu()``, never baked in.
+
+Suppression: append ``# analysis: allow=<rule>[,<rule>...]`` to the
+offending line. Every suppression is visible in the diff and greppable.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterator, Optional, Sequence
+
+from repro.analysis.report import Violation
+
+RULES = ("host-sync", "jit-in-loop", "module-state", "interpret-mode")
+
+_PRAGMA = re.compile(r"#\s*analysis:\s*allow=([\w,-]+)")
+
+# The one sanctioned sync point, plus the serialization boundary where
+# host transfer is the entire job.
+_FUNNEL_FUNCS = frozenset({"_host_read"})
+_HOST_BOUNDARY_FUNCS = frozenset({"_host_read", "get_state", "from_state"})
+
+# Packages whose functions are (or call into) per-iteration hot paths;
+# the scalar-read rules (np.asarray / float / int on bare names) apply
+# here. ``.item()`` and ``jax.device_get`` are flagged everywhere.
+_HOT_PATH_PREFIXES = ("api", "batch", "core", "dist")
+
+
+def _allowed(src: str) -> dict[int, frozenset[str]]:
+    """line -> rules suppressed on that line via the pragma comment."""
+    out: dict[int, frozenset[str]] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _PRAGMA.search(line)
+        if m:
+            out[i] = frozenset(r.strip() for r in m.group(1).split(","))
+    return out
+
+
+def _dotted(node: ast.AST) -> str:
+    """``jax.device_get`` -> "jax.device_get"; best effort."""
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, allowed: dict[int, frozenset[str]],
+                 hot_path: bool) -> None:
+        self.relpath = relpath
+        self.allowed = allowed
+        self.hot_path = hot_path
+        self.func_stack: list[str] = []
+        self.loop_depth = 0
+        self.violations: list[Violation] = []
+
+    # -- helpers -----------------------------------------------------------
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", None)
+        if line is not None and rule in self.allowed.get(line, frozenset()):
+            return
+        self.violations.append(Violation(
+            "lint", rule, file=self.relpath, line=line, message=message))
+
+    def _in_funnel(self) -> bool:
+        return any(f in _FUNNEL_FUNCS for f in self.func_stack)
+
+    def _in_host_boundary(self) -> bool:
+        return any(f in _HOST_BOUNDARY_FUNCS for f in self.func_stack)
+
+    # -- scopes ------------------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    def _visit_loop(self, node: ast.AST) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _visit_loop
+
+    # -- rules -------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        short = name.rsplit(".", 1)[-1]
+        # host-sync: .item() and jax.device_get anywhere outside the funnel
+        if short == "item" and isinstance(node.func, ast.Attribute) \
+                and not node.args and not self._in_funnel():
+            self._flag("host-sync", node,
+                       ".item() synchronizes device->host; route the value "
+                       "through the _host_read funnel")
+        if name in ("jax.device_get",) and not self._in_funnel():
+            self._flag("host-sync", node,
+                       "jax.device_get outside the _host_read funnel; "
+                       "every host transfer goes through one audited door")
+        # host-sync (hot paths): np.asarray / float / int on device values
+        if self.hot_path and not self._in_host_boundary():
+            if name in ("np.asarray", "numpy.asarray") and node.args \
+                    and isinstance(node.args[0], (ast.Name, ast.Attribute)) \
+                    and not (isinstance(node.args[0], ast.Name)
+                             and node.args[0].id.endswith(("_h", "_host"))):
+                self._flag("host-sync", node,
+                           "np.asarray on a (possibly traced) array "
+                           "synchronizes; use _host_read (naming the "
+                           "result with an _h suffix), or pragma if the "
+                           "value is host data")
+            # float(v)/int(v) on a bare variable is a hidden sync when v
+            # is a device value. Values already read through the funnel
+            # carry an _h/_host suffix by convention and are exempt; so
+            # is float(_host_read(...)) directly.
+            if name in ("float", "int") and len(node.args) == 1 \
+                    and isinstance(node.args[0], ast.Name) \
+                    and not node.args[0].id.endswith(("_h", "_host")):
+                self._flag("host-sync", node,
+                           f"{name}() on a bare variable blocks on the "
+                           f"device if it is a traced/async value; read it "
+                           f"via _host_read first (naming the result with "
+                           f"an _h suffix), or pragma a genuine host "
+                           f"scalar")
+        # jit-in-loop
+        if name in ("jax.jit", "jax.pmap") and self.loop_depth > 0:
+            self._flag("jit-in-loop", node,
+                       f"{name} constructed inside a loop body builds a "
+                       f"fresh cache per iteration and recompiles every "
+                       f"call; hoist the jit out of the loop")
+        # interpret-mode
+        for kw in node.keywords:
+            if kw.arg == "interpret" \
+                    and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is True:
+                self._flag("interpret-mode", kw.value,
+                           "hardcoded interpret=True in library code; "
+                           "interpret mode is decided per call from "
+                           "ops.on_tpu()")
+        self.generic_visit(node)
+
+    def visit_Module(self, node: ast.Module) -> None:
+        for stmt in node.body:
+            targets: list[ast.expr] = []
+            value: Optional[ast.expr] = None
+            if isinstance(stmt, ast.Assign):
+                targets, value = stmt.targets, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets, value = [stmt.target], stmt.value
+            if value is None:
+                continue
+            mutable = isinstance(value, (ast.Dict, ast.List, ast.Set)) or (
+                isinstance(value, ast.Call)
+                and _dotted(value.func) in ("dict", "list", "set",
+                                            "collections.defaultdict",
+                                            "defaultdict"))
+            if not mutable:
+                continue
+            for t in targets:
+                # ALL_CAPS module globals are constants by repo convention
+                # (lookup tables, shape lists); the bug class this rule
+                # exists for (_cached_table) is a lowercase mutable.
+                if isinstance(t, ast.Name) \
+                        and not t.id.startswith("__") \
+                        and not t.id.isupper():
+                    self._flag("module-state", stmt,
+                               f"module-global mutable {t.id!r}: hidden "
+                               f"process-wide state (the _cached_table bug "
+                               f"class); make it injectable or pragma a "
+                               f"sanctioned registry")
+        self.generic_visit(node)
+
+
+def _py_files(root: str) -> Iterator[str]:
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_source(src: str, relpath: str) -> list[Violation]:
+    """Lint one file's source text (``relpath`` is for reporting and for
+    the hot-path scoping rule)."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation("lint", "parse", file=relpath, line=e.lineno,
+                          message=f"file does not parse: {e.msg}")]
+    parts = relpath.replace(os.sep, "/").split("/")
+    try:
+        sub = parts[parts.index("repro") + 1]
+    except (ValueError, IndexError):
+        sub = parts[0] if parts else ""
+    hot = sub in _HOT_PATH_PREFIXES
+    v = _Visitor(relpath, _allowed(src), hot)
+    v.visit(tree)
+    return v.violations
+
+
+def run(root: Optional[str] = None,
+        files: Optional[Sequence[str]] = None) -> list[Violation]:
+    """Lint ``src/repro`` under ``root`` (default: this checkout), or an
+    explicit file list; empty list = clean."""
+    if files is None:
+        base = root or os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        tree_root = os.path.join(base, "src", "repro")
+        files = list(_py_files(tree_root))
+        repo = base
+    else:
+        repo = root or os.getcwd()
+    out: list[Violation] = []
+    for path in files:
+        rel = os.path.relpath(path, repo) if os.path.isabs(path) else path
+        with open(path, encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), rel))
+    return out

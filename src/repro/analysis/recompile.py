@@ -1,0 +1,167 @@
+"""Pass 3 — recompile gate: no shape-stable hot path may retrace.
+
+``jax.monitoring`` fires ``/jax/core/compile/backend_compile_duration``
+once per actual XLA compile; :class:`CompileCounter` listens and the gate
+runs each hot-path scenario twice — a cold pass (compiles expected) and a
+warm pass (zero new compiles allowed). A change that threads a Python
+scalar, a fresh ``jax.jit`` wrapper, or a shape-dependent constant into a
+fit/predict path shows up as a nonzero warm count here, before it ships
+as a 100x slowdown on device.
+
+Distinct (m, f) *buckets* retracing is by design (the DataPlan carries
+static dims); the invariant gated here is that *reuse* — same estimator,
+same shapes, new data — never compiles again. Scenarios are injectable
+so the test suite can prove the gate fires on a deliberately
+recompile-happy fixture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.analysis.report import Violation
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileCounter:
+    """Counts XLA backend compiles via the jax.monitoring listener API.
+
+    The listener registry has no public unregister, so the callback stays
+    registered but inert (``enabled`` False) outside ``counting()``.
+    """
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.enabled = False
+        self._registered = False
+
+    def _cb(self, event: str, duration: float, **kw: object) -> None:
+        if self.enabled and event == _COMPILE_EVENT:
+            self.count += 1
+
+    def install(self) -> "CompileCounter":
+        if not self._registered:
+            jax.monitoring.register_event_duration_secs_listener(self._cb)
+            self._registered = True
+        return self
+
+    def counting(self) -> "_Counting":
+        return _Counting(self)
+
+
+class _Counting:
+    """Context manager: enable the counter, report compiles seen."""
+
+    def __init__(self, counter: CompileCounter) -> None:
+        self._counter = counter
+        self._start = 0
+
+    def __enter__(self) -> "_Counting":
+        self._counter.install()
+        self._counter.enabled = True
+        self._start = self._counter.count
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self._counter.enabled = False
+
+    @property
+    def compiles(self) -> int:
+        return self._counter.count - self._start
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One hot path: ``make()`` returns a step thunk; the gate runs it
+    once cold, then asserts the warm rerun stays within ``warm_budget``
+    (0 = fully cached) new compiles."""
+
+    name: str
+    make: Callable[[], Callable[[], None]]
+    warm_budget: int = 0
+    file: Optional[str] = None
+
+
+def _fit_predict_scenario() -> Callable[[], None]:
+    from repro.api.estimator import KMeans
+    rng = np.random.default_rng(0)
+    est = KMeans(n_clusters=8, max_iter=3, backend="lloyd_xla",
+                 sync_every=1, random_state=0)
+    xs = [np.asarray(rng.normal(size=(384, 16)), np.float32)
+          for _ in range(2)]
+    state = {"i": 0}
+
+    def step() -> None:
+        x = xs[state["i"] % len(xs)]   # new data, same shape, every pass
+        state["i"] += 1
+        est.fit(x)
+        est.predict(x)
+        est.predict(x)                 # immediate predict reuse
+    return step
+
+
+def _chunked_predict_scenario() -> Callable[[], None]:
+    from repro.api.estimator import KMeans
+    rng = np.random.default_rng(1)
+    est = KMeans(n_clusters=4, max_iter=2, backend="lloyd_xla",
+                 sync_every=1, predict_chunk_rows=128, random_state=0)
+    x = np.asarray(rng.normal(size=(256, 8)), np.float32)
+    est.fit(x)
+    q = np.asarray(rng.normal(size=(300, 8)), np.float32)
+
+    def step() -> None:
+        est.predict(q)   # 300 rows / 128-row chunks: tail chunk included
+    return step
+
+
+def _batched_fit_scenario() -> Callable[[], None]:
+    from repro.batch.estimator import BatchedKMeans
+    rng = np.random.default_rng(2)
+    est = BatchedKMeans(n_clusters=4, max_iter=3, backend="lloyd_batched_xla",
+                        sync_every=1, random_state=0)
+    xs = [np.asarray(rng.normal(size=(4, 128, 8)), np.float32)
+          for _ in range(2)]
+    state = {"i": 0}
+
+    def step() -> None:
+        est.fit(xs[state["i"] % len(xs)])
+        state["i"] += 1
+    return step
+
+
+def default_scenarios() -> list[Scenario]:
+    return [
+        Scenario("kmeans-fit-predict-warm", _fit_predict_scenario,
+                 file="src/repro/api/estimator.py"),
+        Scenario("kmeans-chunked-predict-warm", _chunked_predict_scenario,
+                 file="src/repro/api/estimator.py"),
+        Scenario("batched-fit-warm", _batched_fit_scenario,
+                 file="src/repro/batch/estimator.py"),
+    ]
+
+
+def run(scenarios: Optional[Sequence[Scenario]] = None,
+        counter: Optional[CompileCounter] = None) -> List[Violation]:
+    """Run every scenario cold then warm; empty list = clean."""
+    out: List[Violation] = []
+    ctr = counter if counter is not None else CompileCounter()
+    for sc in scenarios if scenarios is not None else default_scenarios():
+        step = sc.make()
+        with ctr.counting() as cold:
+            step()
+        cold_compiles = cold.compiles
+        with ctr.counting() as warm:
+            step()
+        if warm.compiles > sc.warm_budget:
+            out.append(Violation(
+                "recompile", "shape-stable-retrace", file=sc.file,
+                message=f"scenario {sc.name!r}: warm rerun triggered "
+                        f"{warm.compiles} compile(s) (budget "
+                        f"{sc.warm_budget}; cold pass compiled "
+                        f"{cold_compiles}) — a shape-stable hot path is "
+                        f"retracing"))
+    return out

@@ -1,0 +1,69 @@
+"""Shared violation reporting for the static-analysis gates.
+
+Both ``python -m repro.analysis`` and ``python -m repro.api.registry``
+speak this vocabulary so CI wiring is uniform:
+
+exit codes
+    ``EXIT_OK`` (0)          every check passed
+    ``EXIT_VIOLATIONS`` (1)  at least one violation (or a stale file)
+    ``EXIT_USAGE`` (2)       bad invocation (argparse's own convention)
+
+formats
+    ``text``    ``[pass/rule] file:line: message`` — human/grep friendly
+    ``github``  GitHub Actions workflow commands (``::error file=...``)
+                so CI failures annotate the offending file/line in the PR
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import IO, Optional, Sequence
+
+EXIT_OK = 0
+EXIT_VIOLATIONS = 1
+EXIT_USAGE = 2
+
+FORMATS = ("text", "github")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding from one analysis pass.
+
+    pass_name: which gate fired ("contracts" | "lint" | "recompile" |
+               "docs"); rule: the short machine-readable rule id within
+               that pass (e.g. "vmem-model", "host-sync").
+    """
+
+    pass_name: str
+    rule: str
+    message: str
+    file: Optional[str] = None
+    line: Optional[int] = None
+
+    def render(self, fmt: str = "text") -> str:
+        if fmt not in FORMATS:
+            raise ValueError(f"format must be one of {FORMATS}, got {fmt!r}")
+        if fmt == "github":
+            loc = ""
+            if self.file:
+                loc = f" file={self.file}"
+                if self.line is not None:
+                    loc += f",line={self.line}"
+            sep = "," if loc else " "
+            return (f"::error{loc}{sep}title={self.pass_name}/{self.rule}::"
+                    f"{self.message}")
+        where = ""
+        if self.file:
+            where = (f"{self.file}:{self.line}: " if self.line is not None
+                     else f"{self.file}: ")
+        return f"[{self.pass_name}/{self.rule}] {where}{self.message}"
+
+
+def emit(violations: Sequence[Violation], fmt: str = "text",
+         stream: Optional[IO[str]] = None) -> int:
+    """Print every violation and return the matching exit code."""
+    out = stream if stream is not None else sys.stderr
+    for v in violations:
+        print(v.render(fmt), file=out)
+    return EXIT_VIOLATIONS if violations else EXIT_OK

@@ -33,7 +33,7 @@ __all__ = [
 ]
 
 
-def __getattr__(name):
+def __getattr__(name: str) -> object:
     # Lazy re-export (PEP 562): repro.batch.estimator imports repro.api.cache,
     # so an eager import here would make a fresh ``import repro.batch`` fail
     # on the circular re-entry into this partially initialized package.

@@ -42,7 +42,7 @@ import json
 import math
 import os
 import threading
-from typing import Iterable, Optional
+from typing import Any, Iterable, Optional
 
 import numpy as np
 
@@ -69,7 +69,7 @@ def batch_bucket(batch: int) -> str:
     return f"b{int(math.log2(max(batch, 1)))}"
 
 
-def _dtype_name(dtype) -> str:
+def _dtype_name(dtype: Any) -> str:
     """Normalize a dtype spec (None / str / np dtype / jnp scalar type) to
     the canonical name used in table keys."""
     if dtype is None:
@@ -77,7 +77,7 @@ def _dtype_name(dtype) -> str:
     return np.dtype(dtype).name
 
 
-def _key(kind: str, dtype, batch: int = 1) -> str:
+def _key(kind: str, dtype: Any, batch: int = 1) -> str:
     return f"{kind}/{_dtype_name(dtype)}/{batch_bucket(batch)}"
 
 
@@ -89,10 +89,11 @@ class AutotuneCache:
     entry is ``[variant, block_m, block_k, block_f]``.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None) -> None:
         self.path = path
         self._table: Optional[dict[str, dict[str, list]]] = None
-        self._computed: dict[tuple, tuple[str, KernelParams]] = {}
+        self._computed: dict[tuple[int, int, int, str, str, str],
+                             tuple[str, KernelParams]] = {}
         self._lock = threading.RLock()   # build() holds it across put/save
 
     @classmethod
@@ -104,7 +105,7 @@ class AutotuneCache:
     # -- table I/O ---------------------------------------------------------
 
     @staticmethod
-    def _upgrade(raw) -> dict:
+    def _upgrade(raw: Any) -> dict[str, dict[str, list]]:
         """Any on-disk schema -> the v4 in-memory shape."""
         if isinstance(raw, dict) and raw.get("schema", 1) >= 4:
             return {k: dict(v) for k, v in raw["kinds"].items()}
@@ -123,7 +124,7 @@ class AutotuneCache:
         return {_key("assign", None): {b: [_LEGACY_VARIANT, *blocks]
                                        for b, blocks in dict(raw).items()}}
 
-    def _load(self) -> dict:
+    def _load(self) -> dict[str, dict[str, list]]:
         if self._table is None:
             table: dict[str, dict[str, list]] = {}
             if self.path and os.path.exists(self.path):
@@ -148,7 +149,7 @@ class AutotuneCache:
     # -- lookup / update ---------------------------------------------------
 
     def put(self, m: int, k: int, f: int, params: KernelParams, *,
-            kind: str = "assign", dtype=None,
+            kind: str = "assign", dtype: Any = None,
             variant: str = _LEGACY_VARIANT, batch: int = 1) -> None:
         with self._lock:
             self._load().setdefault(_key(kind, dtype, batch), {})[
@@ -156,7 +157,7 @@ class AutotuneCache:
                 variant, params.block_m, params.block_k, params.block_f]
 
     def lookup(self, m: int, k: int, f: int, *, kind: str = "assign",
-               dtype=None, batch: int = 1) -> tuple[str, KernelParams]:
+               dtype: Any = None, batch: int = 1) -> tuple[str, KernelParams]:
         """Persisted ``(variant, params)`` winner for (kind, dtype, batch
         bucket, shape bucket), else the analytical winner computed on the
         fly (memoized per cache instance). An entry of a *different* kind,
@@ -179,8 +180,9 @@ class AutotuneCache:
             return self._computed[key]
 
     def build(self, shapes: Iterable[tuple[int, int, int]], *,
-              mode: str = "model", dtype=None,
-              kinds: Iterable[str] = ("assign",), batch: int = 1) -> dict:
+              mode: str = "model", dtype: Any = None,
+              kinds: Iterable[str] = ("assign",),
+              batch: int = 1) -> dict[str, dict[str, list]]:
         """Run the selection pipeline over ``shapes`` for each kernel kind,
         record the winners, and persist if file-backed. Returns the
         "kind/dtype/bN" -> bucket -> [variant, blocks...] table."""

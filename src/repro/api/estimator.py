@@ -16,7 +16,7 @@ estimator never branches on backend names.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.api.cache import AutotuneCache, default_cache
 from repro.api.policy import FaultPolicy, InjectionCampaign
-from repro.api.registry import AssignmentBackend, BackendCapabilityError
+from repro.api.registry import AssignmentBackend
 from repro.kernels import ops, ref
 
 _INITS = ("kmeans++", "random")
@@ -40,7 +40,7 @@ class NotFittedError(RuntimeError):
     pass
 
 
-def _host_read(value):
+def _host_read(value: Any) -> Any:
     """The single device->host funnel of the fit loop.
 
     Every synchronization the full-batch fit performs goes through here —
@@ -138,12 +138,12 @@ class KMeans:
                  fault: Optional[FaultPolicy] = None,
                  backend: Optional[str] = None,
                  batch_size: Optional[int] = None,
-                 params=None,
+                 params: Optional[ops.KernelParams] = None,
                  autotune: Optional[AutotuneCache] = None,
                  sync_every: int = 10,
-                 compute_dtype="float32",
+                 compute_dtype: Any = "float32",
                  predict_chunk_rows: Optional[int] = None,
-                 random_state: int = 0):
+                 random_state: int = 0) -> None:
         if n_clusters < 1:
             raise ValueError(f"n_clusters must be >= 1, got {n_clusters}")
         if init not in _INITS:
@@ -195,7 +195,7 @@ class KMeans:
                    "checksummed one-pass kernel)")
                 + "; the flag is ignored here",
                 DeprecationWarning, stacklevel=2)
-        self._step_cache: dict = {}
+        self._step_cache: dict[tuple, Callable[..., Any]] = {}
         self._n_host_syncs: int = 0   # fit-loop host reads (observability)
         # streaming state (partial_fit)
         self._counts: Optional[jax.Array] = None
@@ -210,7 +210,7 @@ class KMeans:
     # internals
     # ------------------------------------------------------------------
 
-    def _check_fitted(self):
+    def _check_fitted(self) -> None:
         if self.cluster_centers_ is None:
             raise NotFittedError(
                 "this KMeans instance is not fitted yet; call fit() or "
@@ -221,7 +221,9 @@ class KMeans:
         return a if a.dtype == self.compute_dtype else \
             a.astype(self.compute_dtype)
 
-    def _resolve_params(self, m: int, f: int, *, backend=None):
+    def _resolve_params(self, m: int, f: int, *,
+                        backend: Optional[AssignmentBackend] = None
+                        ) -> Optional[ops.KernelParams]:
         """Tile selection for one problem shape: explicit override, else the
         injectable autotune cache (paper §III-B table lookup), keyed by
         kernel kind *and* compute dtype. One-pass backends consult the
@@ -256,7 +258,8 @@ class KMeans:
                                else "abft_offline")
         return get_backend("fused" if b.takes_params else "gemm_fused")
 
-    def _assign_fn(self, params):
+    def _assign_fn(self, params: Optional[ops.KernelParams]
+                   ) -> Callable[..., Any]:
         """jit'd (x, c[, inj]) -> (assign, true sq-dist, detected)."""
         key = ("assign", params)
         if key not in self._step_cache:
@@ -271,7 +274,8 @@ class KMeans:
             self._step_cache[key] = fn
         return self._step_cache[key]
 
-    def _apply_update(self, out, x, centroids):
+    def _apply_update(self, out: tuple, x: jax.Array,
+                      centroids: jax.Array) -> tuple:
         """One centroid update from a backend result: one-pass backends
         already carry (sums, counts); two-pass backends pay the second
         pass over X (optionally DMR-protected)."""
@@ -285,13 +289,15 @@ class KMeans:
                                             use_dmr=self._use_dmr)
         return am, md, det, new_c, counts
 
-    def _lloyd_step_fn(self, params):
+    def _lloyd_step_fn(self, params: Optional[ops.KernelParams]
+                       ) -> Callable[..., Any]:
         """jit'd full Lloyd step: assignment + update (fused or two-pass)."""
         key = ("lloyd", params)
         if key not in self._step_cache:
             backend = self._backend
 
-            def step(x, centroids, inj=None):
+            def step(x: jax.Array, centroids: jax.Array,
+                     inj: Any = None) -> tuple:
                 x = self._cast(x)
                 out = backend(x, self._cast(centroids), params=params,
                               inj=inj)
@@ -305,7 +311,8 @@ class KMeans:
             self._step_cache[key] = jax.jit(step, static_argnames=static)
         return self._step_cache[key]
 
-    def _stream_step_fn(self, params):
+    def _stream_step_fn(self, params: Optional[ops.KernelParams]
+                        ) -> Callable[..., Any]:
         """jit'd streaming (mini-batch) step with per-center count decay —
         the partial_fit update rule (Sculley-style online k-means)."""
         from repro.core.kmeans import protected_sums
@@ -315,7 +322,8 @@ class KMeans:
             use_dmr = self._use_dmr
             fuses = backend.fuses_update
 
-            def step(x, centroids, counts, inj=None):
+            def step(x: jax.Array, centroids: jax.Array,
+                     counts: jax.Array, inj: Any = None) -> tuple:
                 x = self._cast(x)
                 out = backend(x, self._cast(centroids), params=params,
                               inj=inj)
@@ -336,7 +344,8 @@ class KMeans:
             self._step_cache[key] = jax.jit(step, static_argnames=static)
         return self._step_cache[key]
 
-    def _chunk_fn(self, params, n_steps: int):
+    def _chunk_fn(self, params: Optional[ops.KernelParams],
+                  n_steps: int) -> Callable[..., Any]:
         """jit'd device-resident chunk of up to ``n_steps`` Lloyd iterations.
 
         The convergence test runs on device inside a ``lax.scan``: once the
@@ -355,12 +364,14 @@ class KMeans:
         takes_inj = backend.takes_injection
         takes_params = backend.takes_params
 
-        def chunk(plan, centroids, am0, det0, inertia0, key, it0, inj_stack):
-            def body(carry, xs):
+        def chunk(plan: Any, centroids: jax.Array, am0: jax.Array,
+                  det0: jax.Array, inertia0: jax.Array, key: jax.Array,
+                  it0: Any, inj_stack: Any) -> tuple:
+            def body(carry: tuple, xs: tuple) -> tuple:
                 centroids, am, inertia, done, det = carry
                 inj, t = xs
 
-                def live(_):
+                def live(_: None) -> tuple:
                     xa = plan if takes_params else plan.x
                     out = backend(xa, self._cast(centroids),
                                   params=params if takes_params else None,
@@ -374,7 +385,7 @@ class KMeans:
                     return (new_c, am_b, inertia_i, shift,
                             det + det_i.astype(jnp.int32))
 
-                def frozen(_):
+                def frozen(_: None) -> tuple:
                     return centroids, am, inertia, jnp.float32(0.0), det
 
                 new_c, am_n, inertia_n, shift, det_n = jax.lax.cond(
@@ -393,7 +404,7 @@ class KMeans:
         self._step_cache[cache_key] = fn
         return fn
 
-    def _campaign_rng(self, offset: int = 0):
+    def _campaign_rng(self, offset: int = 0) -> np.random.Generator:
         """Injection-schedule RNG: keyed by the campaign's own seed (so
         repeated campaigns vary independently of data sampling), mixed
         with random_state for distinct estimators. The leading tag keeps
@@ -403,7 +414,8 @@ class KMeans:
         return np.random.default_rng(
             [0x1427, camp_seed, self.random_state, offset])
 
-    def _draw_injection(self, rng, m: int, f: int, params):
+    def _draw_injection(self, rng: np.random.Generator, m: int, f: int,
+                        params: Optional[ops.KernelParams]) -> jax.Array:
         """Per-iteration campaign draw -> in-kernel injection descriptor
         (dual-slot for the one-pass FT kernel: distance GEMM + update
         epilogue are independently verified intervals)."""
@@ -540,19 +552,22 @@ class KMeans:
             centroids, am_b, counts, md, inertia, shift, det = step(
                 batch, centroids, inj=inj)
             total_det = total_det + det
+            # one funnel read per iteration covers both host consumers
+            inertia_h, shift_h = _host_read((inertia, shift))
             if on_iteration is not None:
-                on_iteration(it, centroids, float(inertia), float(shift))
-            if float(shift) < self.tol:
+                on_iteration(it, centroids, float(inertia_h),
+                             float(shift_h))
+            if float(shift_h) < self.tol:
                 break
 
         self.cluster_centers_ = centroids
         self.n_iter_ = it + 1
-        self.detected_errors_ = int(total_det)
+        self.detected_errors_ = int(_host_read(total_det))
         self._counts = None
         am, dist, det = self._predict_full(x)
-        self.detected_errors_ += int(det)
+        self.detected_errors_ += int(_host_read(det))
         self.labels_ = am
-        self.inertia_ = float(jnp.sum(dist))
+        self.inertia_ = float(_host_read(jnp.sum(dist)))
         return self
 
     def partial_fit(self, x: jax.Array) -> "KMeans":
@@ -581,12 +596,13 @@ class KMeans:
         self.cluster_centers_ = c
         self._counts = counts
         self.labels_ = am
-        self.inertia_ = float(inertia)
+        inertia_h, det_h = _host_read((inertia, det))
+        self.inertia_ = float(inertia_h)
         self.n_iter_ += 1
-        self.detected_errors_ += int(det)
+        self.detected_errors_ += int(det_h)
         return self
 
-    def _row_chunks(self, m: int):
+    def _row_chunks(self, m: int) -> list[slice]:
         """Row slices for one-shot inference: bounds the padded working set
         on large inputs (a full padded copy of X is never materialized).
         At most two distinct chunk shapes compile — the full chunk and the
@@ -594,7 +610,7 @@ class KMeans:
         chunk = self.predict_chunk_rows or _PREDICT_CHUNK_ROWS
         return [slice(s, min(s + chunk, m)) for s in range(0, m, chunk)]
 
-    def _predict_block(self, x: jax.Array):
+    def _predict_block(self, x: jax.Array) -> tuple:
         backend = self._predict_backend()
         params = self._resolve_params(x.shape[0], x.shape[1],
                                       backend=backend)
@@ -604,7 +620,7 @@ class KMeans:
             return fn(x, self.cluster_centers_, no_injection())
         return fn(x, self.cluster_centers_)
 
-    def _predict_full(self, x: jax.Array):
+    def _predict_full(self, x: jax.Array) -> tuple:
         chunks = self._row_chunks(x.shape[0])
         if len(chunks) <= 1:              # includes zero-row input
             return self._predict_block(x)
@@ -630,7 +646,7 @@ class KMeans:
         self._check_fitted()
         x = jnp.asarray(x)
 
-        def block(b):
+        def block(b: jax.Array) -> jax.Array:
             d = ref.distance_matrix(b, self.cluster_centers_)
             return jnp.sqrt(jnp.maximum(d, 0.0))
 

@@ -33,10 +33,13 @@ callers never name kernels.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
                                 get_backend)
+
+if TYPE_CHECKING:
+    from repro.core.fault import FaultConfig
 
 MODES = ("off", "detect", "correct")
 
@@ -100,7 +103,7 @@ class InjectionCampaign:
     seed: int = 0
     targets: str = "auto"
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.rate < 0:
             raise ValueError(f"InjectionCampaign.rate must be >= 0, "
                              f"got {self.rate}")
@@ -111,7 +114,7 @@ class InjectionCampaign:
     def enabled(self) -> bool:
         return self.rate > 0
 
-    def resolved_targets(self, backend) -> tuple[str, ...]:
+    def resolved_targets(self, backend: AssignmentBackend) -> tuple[str, ...]:
         """The concrete interval list for a resolved backend."""
         wants_update = self.targets in ("update", "both")
         one_pass_ft = backend.fuses_update and backend.takes_injection
@@ -131,7 +134,7 @@ class InjectionCampaign:
             return ("update",)
         return ("distance", "update") if one_pass_ft else ("distance",)
 
-    def to_fault_config(self):
+    def to_fault_config(self) -> "FaultConfig":
         """The low-level descriptor used by ft_gemm/checksum internals."""
         from repro.core.fault import FaultConfig
         return FaultConfig(rate=self.rate, bit_low=self.bit_low,
@@ -182,7 +185,7 @@ class FaultPolicy:
     update_dmr: Optional[bool] = None  # DMR on the two-pass update (auto)
     injection: Optional[InjectionCampaign] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(f"FaultPolicy.mode must be one of {MODES}, "
                              f"got {self.mode!r}")
@@ -214,7 +217,7 @@ class FaultPolicy:
     def protected(self) -> bool:
         return self.mode != "off"
 
-    def dmr_enabled(self, backend) -> bool:
+    def dmr_enabled(self, backend: AssignmentBackend) -> bool:
         """Effective DMR setting for a resolved backend: never on fused
         (one-pass) backends — their update runs in the kernel epilogue —
         and on by default (auto) for two-pass backends."""

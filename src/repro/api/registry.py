@@ -17,13 +17,19 @@ instead of failing silently inside a kernel.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 
 
 class BackendCapabilityError(TypeError):
     """A backend was asked for a capability it does not declare."""
+
+
+# Capability flags, in rendering order (also the machine-readable contract
+# vocabulary consumed by repro.analysis.contracts).
+_FLAG_COLUMNS = ("supports_ft", "takes_params", "takes_injection",
+                 "fuses_update", "supports_batch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,8 +88,30 @@ class AssignmentBackend:
             return 0
         return 2 if self.fuses_update else 1
 
+    @property
+    def expected_arity(self) -> int:
+        """Length of the uniform-call return tuple: ``(assign, min_dist,
+        detected)``, extended by ``(sums, counts)`` for one-pass backends.
+        The contract checker verifies this against an abstract evaluation
+        of the real callable."""
+        return 5 if self.fuses_update else 3
+
+    def contract(self) -> dict[str, Any]:
+        """Machine-readable contract metadata for this backend — the exact
+        surface ``repro.analysis.contracts`` verifies against the kernel
+        implementations (flags vs signature, descriptor slots, autotune
+        kind)."""
+        return {
+            "name": self.name,
+            "flags": {c: bool(getattr(self, c)) for c in _FLAG_COLUMNS},
+            "kernel_kind": self.kernel_kind,
+            "protected_intervals": self.protected_intervals,
+            "expected_arity": self.expected_arity,
+        }
+
     def __call__(self, x: jax.Array, c: jax.Array, *,
-                 params=None, inj: Optional[jax.Array] = None):
+                 params: Any = None,
+                 inj: Optional[jax.Array] = None) -> Any:
         if inj is not None and not self.takes_injection:
             raise BackendCapabilityError(
                 f"backend {self.name!r} does not take in-kernel injections "
@@ -102,7 +130,9 @@ class AssignmentBackend:
         return self.fn(x, c)
 
 
-_REGISTRY: dict[str, AssignmentBackend] = {}
+# The registry itself is the one sanctioned module-level mutable: an
+# append-only name->backend table populated at import time, not a cache.
+_REGISTRY: dict[str, AssignmentBackend] = {}  # analysis: allow=module-state
 
 
 def register_backend(backend: AssignmentBackend) -> AssignmentBackend:
@@ -138,9 +168,6 @@ def _ensure_builtin_backends() -> None:
 # generates docs/backends.md; CI re-renders and diffs so the committed file
 # cannot go stale (see tests/test_docs.py and the workflow doc-check step).
 # ---------------------------------------------------------------------------
-
-_FLAG_COLUMNS = ("supports_ft", "takes_params", "takes_injection",
-                 "fuses_update", "supports_batch")
 
 _MD_HEADER = """\
 # Backend capability matrix
@@ -191,16 +218,22 @@ def render_markdown() -> str:
     return "\n".join(lines)
 
 
-def main(argv=None) -> int:
-    """CLI: render (or freshness-check) the capability matrix."""
+def main(argv: Optional[list[str]] = None) -> int:
+    """CLI: render (or freshness-check) the capability matrix.
+
+    Exit codes are shared with ``python -m repro.analysis`` (see
+    ``repro.analysis.report``): 0 = clean, 1 = violations/stale file,
+    2 = usage error. ``--format=github`` emits workflow-command
+    annotations so CI failures point at the offending file.
+    """
     import argparse
-    import sys
 
     # ``python -m repro.api.registry`` executes this module as __main__ —
     # a *second* module instance with its own empty _REGISTRY, while the
     # builtin backends register into the canonical ``repro.api.registry``.
     # Always render through the canonical instance.
     from repro.api import registry as _canonical
+    from repro.analysis import report
     render = _canonical.render_markdown
 
     ap = argparse.ArgumentParser(
@@ -209,23 +242,28 @@ def main(argv=None) -> int:
     ap.add_argument("--markdown", nargs="?", const="-", metavar="PATH",
                     help="write the matrix to PATH (default: stdout)")
     ap.add_argument("--check", metavar="PATH",
-                    help="exit 1 if PATH differs from a fresh render "
-                         "(CI staleness gate)")
+                    help=f"exit {report.EXIT_VIOLATIONS} if PATH differs "
+                         f"from a fresh render (CI staleness gate)")
+    ap.add_argument("--format", choices=report.FORMATS, default="text",
+                    help="violation output style (github = workflow "
+                         "annotations)")
     args = ap.parse_args(argv)
     if args.check:
         rendered = render()
         try:
             with open(args.check, encoding="utf-8") as fh:
-                committed = fh.read()
+                committed: Optional[str] = fh.read()
         except FileNotFoundError:
             committed = None
         if committed != rendered:
-            print(f"{args.check} is stale; regenerate with\n"
-                  f"  python -m repro.api.registry --markdown {args.check}",
-                  file=sys.stderr)
-            return 1
+            stale = report.Violation(
+                pass_name="docs", rule="stale-matrix", file=args.check,
+                message=(f"{args.check} is stale; regenerate with "
+                         f"`python -m repro.api.registry --markdown "
+                         f"{args.check}`"))
+            return report.emit([stale], fmt=args.format)
         print(f"{args.check} is up to date")
-        return 0
+        return report.EXIT_OK
     out = render()
     if args.markdown in (None, "-"):
         print(out, end="")
@@ -233,7 +271,7 @@ def main(argv=None) -> int:
         with open(args.markdown, "w", encoding="utf-8") as fh:
             fh.write(out)
         print(f"wrote {args.markdown}")
-    return 0
+    return report.EXIT_OK
 
 
 if __name__ == "__main__":

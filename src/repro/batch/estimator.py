@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.cache import AutotuneCache, default_cache
+from repro.api.estimator import _host_read
 from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
                                 get_backend)
 from repro.kernels import ops
@@ -343,7 +344,7 @@ class BatchedKMeans:
             (centroids, am, inertia, done, det), live_hist = chunk(
                 plan, centroids, am, inertia, done, det, keys,
                 jnp.int32(it0))
-            done_h, live_h = jax.device_get((done, live_hist))
+            done_h, live_h = _host_read((done, live_hist))
             iters += live_h.sum(axis=0).astype(np.int64)
             it0 += n_steps
             if bool(done_h.all()):
@@ -351,9 +352,10 @@ class BatchedKMeans:
 
         self.cluster_centers_ = centroids
         self.labels_ = am
-        self.inertia_ = np.asarray(jax.device_get(inertia), np.float64)
+        inertia_h, det_h = _host_read((inertia, det))
+        self.inertia_ = np.asarray(inertia_h, np.float64)
         self.n_iter_ = np.maximum(iters, 1)
-        self.detected_errors_ = int(jax.device_get(det))
+        self.detected_errors_ = int(det_h)
         return self
 
     def fit_predict(self, x: jax.Array) -> jax.Array:
@@ -400,7 +402,7 @@ class BatchedKMeans:
         higher is better). Returns shape (B,)."""
         self._check_fitted()
         _, md = self._assign(jnp.asarray(x))
-        return -np.asarray(jax.device_get(jnp.sum(md, axis=1)), np.float64)
+        return -np.asarray(_host_read(jnp.sum(md, axis=1)), np.float64)
 
     # ------------------------------------------------------------------
     # serializable state

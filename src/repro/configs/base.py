@@ -9,7 +9,7 @@ assignment: audio/vision cells receive precomputed frame/patch embeddings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

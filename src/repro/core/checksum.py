@@ -21,7 +21,6 @@ All functions are jit-safe (fixed shapes, lax control flow).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -11,7 +11,7 @@ compiled program really computes twice, then compare.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -97,7 +97,7 @@ def planned_injections(rng, rate: float, cap: int) -> int:
         return 0
     if rate <= 1.0:
         return int(rng.uniform() < rate)
-    whole = int(rate)
+    whole = int(rate)  # analysis: allow=host-sync — rate is a host float
     n = whole + int(rng.uniform() < (rate - whole))
     return min(n, cap)
 

@@ -11,6 +11,7 @@ typed one.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Callable, NamedTuple, Optional
 
@@ -43,11 +44,17 @@ class KMeansResult(NamedTuple):
 # Initialization
 # ---------------------------------------------------------------------------
 
+# Both inits are jitted with K static: an eager fori_loop/choice retraces
+# its body on every call, which put one fresh XLA compile on every
+# ``fit`` — the recompile gate (repro.analysis.recompile) caught it on
+# the warm-refit path.
+@functools.partial(jax.jit, static_argnums=(2,))
 def init_random(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
     return x[idx]
 
 
+@functools.partial(jax.jit, static_argnums=(2,))
 def init_kmeanspp(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     """k-means++ seeding (D^2 sampling), jit-safe via fori_loop."""
     m = x.shape[0]
@@ -115,7 +122,6 @@ def reseed_empty(key: jax.Array, x: jax.Array, centroids: jax.Array,
                  counts: jax.Array, min_dist: jax.Array) -> jax.Array:
     """Move empty clusters onto the points farthest from their centroid —
     the standard cuML/sklearn policy, jit-safe."""
-    k = centroids.shape[0]
     order = jnp.argsort(-min_dist)            # farthest points first
     empty_rank = jnp.cumsum(counts == 0) - 1  # position among empties
     donor = order[jnp.clip(empty_rank, 0, x.shape[0] - 1)]

@@ -34,7 +34,6 @@ class TokenPipeline:
             0, self.vocab_size,
             size=(self.local_batch, self.seq_len + 1), dtype=np.int64)
         # Mix in structure so the loss actually decreases: repeat motifs.
-        period = 17 + (self.shard % 3)
         pos = np.arange(self.seq_len + 1)[None, :]
         motif = (pos * 31 + (step % 7)) % min(self.vocab_size, 997)
         mask = rng.uniform(size=toks.shape) < 0.7

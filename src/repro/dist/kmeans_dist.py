@@ -37,7 +37,13 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import data_axes
-from repro.kernels import ref
+
+
+def _host_read(value):
+    """The one sanctioned device->host sync of the distributed driver:
+    chunk-boundary convergence state and detection counters (same funnel
+    contract as ``repro.api.estimator._host_read``)."""
+    return jax.device_get(value)
 
 
 class DistributedKMeans:
@@ -226,9 +232,9 @@ class DistributedKMeans:
                     bsz // self._dp, n, f, n_steps)
             centroids, am, inertia, done, det, live = steps[n_steps](
                 xs, centroids, am, inertia, done, keys, jnp.int32(it0))
-            done_h, live_h = jax.device_get((done, live))
+            done_h, live_h, det_h = _host_read((done, live, det))
             iters += live_h.sum(axis=0).astype(np.int64)
-            total_det += int(jax.device_get(det))
+            total_det += int(det_h)
             it0 += n_steps
             saved = it0 % checkpoint_interval == 0
             if checkpointer is not None and saved:
@@ -299,7 +305,7 @@ class DistributedKMeans:
                 checkpointer.save(completed, {
                     "centroids": centroids,
                     "iteration": jnp.asarray(completed, jnp.int32)})
-            if float(shift) < est.tol:
+            if float(_host_read(shift)) < est.tol:
                 break
         if checkpointer is not None and not saved and \
                 completed > start_iteration:

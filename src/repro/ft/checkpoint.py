@@ -23,7 +23,6 @@ import time
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -56,7 +55,10 @@ class Checkpointer:
         flat, _ = _tree_flatten_with_paths(state)
         host_arrays = {}
         for key, leaf in flat.items():
-            arr = jax.device_get(self._addressable(leaf) if local_only else leaf)
+            # checkpointing IS the host boundary: serializing device state
+            # to disk is this function's whole job
+            arr = jax.device_get(  # analysis: allow=host-sync
+                self._addressable(leaf) if local_only else leaf)
             host_arrays[key] = np.asarray(arr)
         payload = (step, host_arrays)
         if self._async:

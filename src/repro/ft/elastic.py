@@ -20,7 +20,6 @@ device set is simulated, and tests drive the policy with fake topologies.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Sequence
 
 import jax

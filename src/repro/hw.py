@@ -6,19 +6,21 @@ re-exports this module). Keeping one copy means the two models cannot
 drift apart on what the hardware can do.
 """
 
-PEAK_FLOPS_BF16 = 197e12        # FLOP/s (MXU peak at 2-byte dtypes)
-PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2
-HBM_BW = 819e9                  # bytes/s
-ICI_LINK_BW = 50e9              # bytes/s per link
-ICI_LINKS = 4                   # v5e: 4 ICI links per chip (2D torus x2)
-HBM_BYTES = 16 * 2**30          # 16 GiB
-VMEM_BYTES = 128 * 2**20
+from typing import Any
+
+PEAK_FLOPS_BF16: float = 197e12  # FLOP/s (MXU peak at 2-byte dtypes)
+PEAK_FLOPS_F32: float = PEAK_FLOPS_BF16 / 2
+HBM_BW: float = 819e9           # bytes/s
+ICI_LINK_BW: float = 50e9       # bytes/s per link
+ICI_LINKS: int = 4              # v5e: 4 ICI links per chip (2D torus x2)
+HBM_BYTES: int = 16 * 2**30     # 16 GiB
+VMEM_BYTES: int = 128 * 2**20
 # Usable VMEM per core for kernel working sets: half of the physical
 # 128 MiB, leaving room for Mosaic's own double-buffering scratch.
-VMEM_BUDGET = 96 * 2**20
+VMEM_BUDGET: int = 96 * 2**20
 
 
-def peak_flops(dtype) -> float:
+def peak_flops(dtype: Any) -> float:
     """MXU peak for an input dtype. Only bf16 has a native full-rate MXU
     path on v5e; fp16 is upconverted by XLA and runs at ~f32 rate (it
     still halves the HBM/VMEM bytes, which the byte models account for

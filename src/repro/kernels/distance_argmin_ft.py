@@ -59,6 +59,9 @@ def threshold_factor(n: int, input_dtype) -> float:
 # Injection descriptor layout (SMEM scalars):
 # [enabled, m_tile, c_tile, f_tile, row_in_tile, col_in_tile] + delta (f32).
 INJ_LEN = 8
+# One protected interval: the distance GEMM (detect+locate+correct in
+# kernel). The registry's ``protected_intervals`` must agree with this.
+INJ_SLOTS = 1
 
 
 def _kernel(inj_ref, x_ref, c_ref, cn_ref,

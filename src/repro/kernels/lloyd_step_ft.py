@@ -69,6 +69,10 @@ META_LEN = 1
 #   update slot:   [7] enabled, [8] m_tile, [9] cluster_row,
 #                  [10] feature_col, [11] delta (f32 bits)
 INJ_LEN = 12
+# Two protected intervals: the distance GEMM and the update epilogue —
+# one descriptor slot each. The registry's ``protected_intervals`` must
+# agree with this.
+INJ_SLOTS = 2
 
 
 def no_injection() -> jax.Array:

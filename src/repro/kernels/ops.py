@@ -9,10 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.extend import core as jex_core
 
 from repro.kernels import distance_argmin as _da
 from repro.kernels import distance_argmin_ft as _daft
@@ -31,14 +32,14 @@ def on_tpu() -> bool:
 VARIANTS = ("generic", "smallk")
 
 
-def sublane_align(dtype) -> int:
+def sublane_align(dtype: Any) -> int:
     """Minimum second-to-last-dimension tile multiple for a dtype: TPU
     packs 2-byte dtypes two-per-sublane, so bf16/fp16 tiles need 16 rows
     where f32 needs 8."""
     return 16 if jnp.dtype(dtype).itemsize <= 2 else 8
 
 
-def _itemsize(dtype) -> int:
+def _itemsize(dtype: Any) -> int:
     return jnp.dtype(dtype).itemsize
 
 
@@ -51,7 +52,7 @@ class KernelParams:
     block_k: int = 128   # centroid tile (paper's Threadblock.N)
     block_f: int = 512   # contraction tile (paper's Threadblock.K)
 
-    def vmem_bytes(self, dtype=jnp.float32) -> int:
+    def vmem_bytes(self, dtype: Any = jnp.float32) -> int:
         """Working-set estimate: x + c tiles (double-buffered, input dtype)
         + f32 accumulator + f32 norm/checksum vectors."""
         b = _itemsize(dtype)
@@ -65,7 +66,7 @@ DEFAULT_PARAMS = KernelParams()
 
 
 def lloyd_vmem_bytes(params: KernelParams, k: int, f: int,
-                     dtype=jnp.float32) -> int:
+                     dtype: Any = jnp.float32) -> int:
     """Working-set estimate for the one-pass Lloyd kernel: the assignment
     kernel's tiles plus the stashed X row tile (input dtype) and the f32
     per-row-tile sums/counts output blocks (resident across the sweep)."""
@@ -77,7 +78,7 @@ def lloyd_vmem_bytes(params: KernelParams, k: int, f: int,
 
 
 def lloyd_ft_vmem_bytes(params: KernelParams, k: int, f: int,
-                        dtype=jnp.float32) -> int:
+                        dtype: Any = jnp.float32) -> int:
     """Working-set estimate for the one-pass FT kernel: the one-pass
     kernel's footprint (``KernelParams.vmem_bytes`` already budgets the
     e1/e2 checksum vectors) plus the resident expected-checksum output
@@ -87,7 +88,7 @@ def lloyd_ft_vmem_bytes(params: KernelParams, k: int, f: int,
 
 
 def lloyd_batched_vmem_bytes(params: KernelParams, k: int, f: int,
-                             dtype=jnp.float32) -> int:
+                             dtype: Any = jnp.float32) -> int:
     """Working-set estimate for the batched one-pass kernel: one problem's
     tiles are resident at a time (the problem axis is the outermost grid
     dimension), so the footprint is the smallk one-pass working set with
@@ -213,7 +214,8 @@ def plan_data_batched(x: jax.Array,
     return BatchPlan(x=x, xp=xp, xn=xn, b=b, n=n, f=f, params=params)
 
 
-def _pad_centroids_batched(c, k: int, kp: int, fp: int):
+def _pad_centroids_batched(c: jax.Array, k: int, kp: int,
+                           fp: int) -> tuple[jax.Array, jax.Array]:
     """Pad per-problem centroids to (B, kp, fp) and build +inf-masked
     squared norms (B, 1, kp) so padded slots never win any problem's
     argmin."""
@@ -224,7 +226,8 @@ def _pad_centroids_batched(c, k: int, kp: int, fp: int):
     return cpad, cn
 
 
-def _pad_centroids(c, k: int, kp: int, fp: int):
+def _pad_centroids(c: jax.Array, k: int, kp: int,
+                   fp: int) -> tuple[jax.Array, jax.Array]:
     """Pad centroids to (kp, fp) and build +inf-masked squared norms so
     padded centroid slots never win the argmin."""
     cpad = jnp.pad(c, ((0, kp - c.shape[0]), (0, fp - c.shape[1])))
@@ -235,10 +238,10 @@ def _pad_centroids(c, k: int, kp: int, fp: int):
 
 
 def clamp_params(m: int, k: int, f: int, params: KernelParams,
-                 dtype=jnp.float32) -> KernelParams:
+                 dtype: Any = jnp.float32) -> KernelParams:
     """Shrink blocks that exceed the (padded) problem so tiny shapes work.
     Alignment is dtype-aware: 2-byte dtypes keep 16-row sublane tiles."""
-    def shrink(block, dim, align):
+    def shrink(block: int, dim: int, align: int) -> int:
         while block > align and block > _round_up(dim, align):
             block //= 2
         return max(block, align)
@@ -249,7 +252,8 @@ def clamp_params(m: int, k: int, f: int, params: KernelParams,
     )
 
 
-def _resolve_padded(x, c, params: Optional[KernelParams], kind: str):
+def _resolve_padded(x: Any, c: jax.Array, params: Optional[KernelParams],
+                    kind: str) -> tuple:
     """Common front end: accept a raw X or a prebuilt :class:`DataPlan` and
     return (plan, padded centroids, masked centroid norms, params). The
     centroids are cast to the plan's dtype — the kernels' MXU product wants
@@ -348,7 +352,8 @@ def fused_lloyd(
     return am[:m, 0], mind[:m, 0] + plan.xn, sums, counts
 
 
-def _resolve_padded_batched(x, c, params: Optional[KernelParams]):
+def _resolve_padded_batched(x: Any, c: jax.Array,
+                            params: Optional[KernelParams]) -> tuple:
     """Batched front end: accept a raw (B, N, F) stack or a prebuilt
     :class:`BatchPlan` and return (plan, padded centroids, masked centroid
     norms, params). Centroids are cast to the plan's dtype like the
@@ -413,8 +418,10 @@ def fused_lloyd_batched(
     return am[:, :n, 0], mind[:, :n, 0] + plan.xn, sums, counts
 
 
-def _verify_update_partials(plan, am, sums_p, counts_p, ucheck, ccheck,
-                            params: KernelParams):
+def _verify_update_partials(plan: Any, am: jax.Array, sums_p: jax.Array,
+                            counts_p: jax.Array, ucheck: jax.Array,
+                            ccheck: jax.Array, params: KernelParams
+                            ) -> tuple:
     """Verification interval of the fused update epilogue (paper Fig. 6
     applied to the one-hot product). Compares the observed e1/e2 column
     checksums of each row tile's partial sums/counts against the expected
@@ -452,7 +459,7 @@ def _verify_update_partials(plan, am, sums_p, counts_p, ucheck, ccheck,
            | (cres2 > factor * jnp.maximum(jnp.abs(ccheck[:, 1]), 1.0)))
     n_bad = jnp.sum(bad.astype(jnp.int32))
 
-    def _recompute(operands):
+    def _recompute(operands: tuple) -> tuple:
         sums_p, counts_p = operands
         i = jnp.argmax(bad)
         x_tile = jax.lax.dynamic_slice(plan.xp, (i * bm, 0), (bm, fp))
@@ -576,3 +583,161 @@ def plan_injection_tile(m: int, k: int, f: int, params: KernelParams,
         row // params.block_m, col // params.block_k,
         f_step % max(f // params.block_f, 1),
         row % params.block_m, col % params.block_k, delta)
+
+
+# ---------------------------------------------------------------------------
+# Introspected kernel plans — the contract surface for repro.analysis.
+# ---------------------------------------------------------------------------
+
+# Kernel kinds with a Pallas plan; mirrors repro.core.autotune.KINDS.
+PLAN_KINDS: tuple[str, ...] = ("assign", "lloyd", "lloyd_ft", "batched")
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferPlan:
+    """One operand of a traced ``pallas_call``: per-grid-step block shape,
+    dtype and memory space, recovered from the kernel jaxpr itself rather
+    than re-derived from the BlockSpecs by hand — so the plan cannot drift
+    from what the kernel actually allocates."""
+
+    role: str                     # "input" | "output" | "scratch"
+    memory: str                   # "vmem" | "smem"
+    block_shape: tuple[int, ...]
+    dtype: str
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.block_shape:
+            n *= int(d)
+        return n * int(jnp.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Grid and operand blocks of the single ``pallas_call`` behind one
+    kernel entry point, obtained abstractly (``jax.make_jaxpr`` over
+    ``ShapeDtypeStruct``s — no compile, no TPU)."""
+
+    kind: str
+    variant: str
+    grid: tuple[int, ...]
+    inputs: tuple[BufferPlan, ...]
+    outputs: tuple[BufferPlan, ...]
+    scratch: tuple[BufferPlan, ...]
+
+    def vmem_bytes(self) -> int:
+        """Implied footprint under the byte-model convention: VMEM input
+        blocks are double-buffered, output and scratch blocks are resident
+        once, SMEM operands don't count against the VMEM budget."""
+        def tally(bufs: tuple[BufferPlan, ...], mult: int) -> int:
+            return sum(mult * b.nbytes for b in bufs if b.memory == "vmem")
+        return (tally(self.inputs, 2) + tally(self.outputs, 1)
+                + tally(self.scratch, 1))
+
+
+def _walk_pallas_eqns(jaxpr: jex_core.Jaxpr) -> Iterator[Any]:
+    """Yield every pallas_call equation, recursing through sub-jaxprs
+    (the kernel wrappers trace under a pjit equation)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            yield eqn
+        for v in eqn.params.values():
+            if isinstance(v, jex_core.ClosedJaxpr):
+                yield from _walk_pallas_eqns(v.jaxpr)
+            elif isinstance(v, jex_core.Jaxpr):
+                yield from _walk_pallas_eqns(v)
+
+
+def _plan_buffers(eqn: Any) -> tuple[tuple[BufferPlan, ...],
+                                     tuple[BufferPlan, ...],
+                                     tuple[BufferPlan, ...]]:
+    gm = eqn.params["grid_mapping"]
+
+    def buf(role: str, aval: Any, shape: Any) -> BufferPlan:
+        memory = "smem" if "smem" in str(aval).lower() else "vmem"
+        return BufferPlan(role=role, memory=memory,
+                          block_shape=tuple(int(d) for d in shape),
+                          dtype=jnp.dtype(aval.dtype).name)
+
+    maps = list(gm.block_mappings)
+    ins = tuple(buf("input", b.block_aval, b.block_shape)
+                for b in maps[:gm.num_inputs])
+    outs = tuple(buf("output", b.block_aval, b.block_shape)
+                 for b in maps[gm.num_inputs:gm.num_inputs + gm.num_outputs])
+    invars = eqn.params["jaxpr"].invars
+    n_scr = gm.num_scratch_operands
+    scr = tuple(buf("scratch", v.aval, v.aval.shape)
+                for v in (invars[len(invars) - n_scr:] if n_scr else []))
+    return ins, outs, scr
+
+
+def kernel_plan(kind: str, m: int, k: int, f: int,
+                params: Optional[KernelParams] = None, *,
+                dtype: Any = jnp.float32,
+                variant: Optional[str] = None,
+                batch: int = 1) -> KernelPlan:
+    """Abstractly trace the kernel entry point for (kind, shape, dtype,
+    variant) and return its pallas_call grid/block plan.
+
+    Shapes are padded and params clamped exactly as the real call path
+    does, so the returned plan is the plan the kernel would launch with.
+    ``repro.analysis.contracts`` checks the declared VMEM byte models
+    (``KernelParams.vmem_bytes`` and friends) against
+    :meth:`KernelPlan.vmem_bytes` — the footprint the BlockSpecs imply.
+    """
+    if kind not in PLAN_KINDS:
+        raise ValueError(f"kind must be one of {PLAN_KINDS}, got {kind!r}")
+    if params is None:
+        params = DEFAULT_PARAMS
+    dt = jnp.dtype(dtype)
+    p = clamp_params(m, k, f, params, dtype=dt)
+    fp = _round_up(f, p.block_f)
+    meta = jax.ShapeDtypeStruct((1,), jnp.int32)
+    fn: Any
+    args: tuple[Any, ...]
+    if kind == "batched":
+        np_ = _round_up(m, p.block_m)
+        kp = _round_up(k, 128)
+        xs = jax.ShapeDtypeStruct((batch, np_, fp), dt)
+        cs = jax.ShapeDtypeStruct((batch, kp, fp), dt)
+        cn = jax.ShapeDtypeStruct((batch, 1, kp), jnp.float32)
+        var = "smallk"   # the batched template is the smallk epilogue
+        fn = functools.partial(_ll.lloyd_step_batched, block_m=p.block_m,
+                               block_f=p.block_f, interpret=False)
+        args = (xs, cs, cn, meta)
+    else:
+        mp = _round_up(m, p.block_m)
+        kp = _round_up(k, p.block_k)
+        xs = jax.ShapeDtypeStruct((mp, fp), dt)
+        cs = jax.ShapeDtypeStruct((kp, fp), dt)
+        cn = jax.ShapeDtypeStruct((1, kp), jnp.float32)
+        if kind == "assign":
+            var = resolve_variant(k, p, variant)
+            fn = functools.partial(_da.distance_argmin, block_m=p.block_m,
+                                   block_k=p.block_k, block_f=p.block_f,
+                                   variant=var, interpret=False)
+            args = (xs, cs, cn)
+        elif kind == "lloyd":
+            var = resolve_variant(k, p, variant)
+            fn = functools.partial(_ll.lloyd_step, block_m=p.block_m,
+                                   block_k=p.block_k, block_f=p.block_f,
+                                   variant=var, interpret=False)
+            args = (xs, cs, cn, meta)
+        else:                     # lloyd_ft: FT template is always generic
+            var = "generic"
+            inj = jax.ShapeDtypeStruct((_llft.INJ_LEN,), jnp.float32)
+            fn = functools.partial(_llft.lloyd_step_ft, block_m=p.block_m,
+                                   block_k=p.block_k, block_f=p.block_f,
+                                   interpret=False)
+            args = (xs, cs, cn, meta, inj)
+    closed = jax.make_jaxpr(fn)(*args)
+    eqns = list(_walk_pallas_eqns(closed.jaxpr))
+    if len(eqns) != 1:
+        raise RuntimeError(
+            f"expected exactly one pallas_call behind kind={kind!r}, "
+            f"found {len(eqns)}")
+    ins, outs, scr = _plan_buffers(eqns[0])
+    grid = tuple(int(g) for g in eqns[0].params["grid_mapping"].grid)
+    return KernelPlan(kind=kind, variant=var, grid=grid,
+                      inputs=ins, outputs=outs, scratch=scr)

@@ -24,10 +24,8 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
-                           shape_applicable)
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.hlo import analyze_hlo, collective_bytes
 from repro.train.steps import build_serve_steps, build_train_step

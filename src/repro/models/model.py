@@ -14,9 +14,7 @@ hybrid, VLM early-fusion (M-RoPE), whisper-style encoder-decoder.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ config (DESIGN.md §5 memory budget).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

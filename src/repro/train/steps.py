@@ -11,7 +11,6 @@ head_dim — GQA caches with few KV heads still shard).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -20,7 +19,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.dist import sharding as shd
-from repro.models.attention import KVCache
 from repro.models.model import LM
 from repro.train import optimizer as opt_mod
 from repro.ft import abft_dense

@@ -1,14 +1,15 @@
 """Deterministic fallback for the ``hypothesis`` property-testing API.
 
-When hypothesis is installed (see requirements-dev.txt) the real library is
-used; otherwise this stub expands ``@given(...)`` into a seeded
+CI always installs the real library (pinned in requirements-dev.txt); this
+stub is the documented *offline escape hatch* for minimal environments.
+When hypothesis is absent, ``@given(...)`` expands into a seeded
 ``pytest.mark.parametrize`` sweep — fewer, deterministic examples, but the
 suite collects and the properties still get exercised.
 """
 from __future__ import annotations
 
-import functools
 import inspect
+from typing import Any, Callable, Iterable, Sequence, TypeVar
 
 import numpy as np
 import pytest
@@ -16,9 +17,11 @@ import pytest
 N_EXAMPLES = 10
 _SEED = 20240801
 
+_F = TypeVar("_F", bound=Callable[..., Any])
+
 
 class _Strategy:
-    def __init__(self, sample):
+    def __init__(self, sample: Callable[[np.random.Generator], Any]) -> None:
         self.sample = sample
 
 
@@ -32,7 +35,7 @@ class strategies:
         return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
 
     @staticmethod
-    def sampled_from(seq) -> _Strategy:
+    def sampled_from(seq: Iterable[Any]) -> _Strategy:
         seq = list(seq)
         return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
 
@@ -40,18 +43,18 @@ class strategies:
 st = strategies
 
 
-def settings(**_kw):
+def settings(**_kw: Any) -> Callable[[_F], _F]:
     """No-op decorator factory (max_examples etc. are fixed in the stub)."""
-    def deco(fn):
+    def deco(fn: _F) -> _F:
         return fn
     return deco
 
 
-def given(*strats: _Strategy):
+def given(*strats: _Strategy) -> Callable[[_F], Any]:
     """Expand into N_EXAMPLES deterministic cases via parametrize."""
-    def deco(fn):
-        names = [p for p in inspect.signature(fn).parameters
-                 if p != "self"][-len(strats):]
+    def deco(fn: _F) -> Any:
+        names: Sequence[str] = [p for p in inspect.signature(fn).parameters
+                                if p != "self"][-len(strats):]
         rng = np.random.default_rng(_SEED)
         cases = [tuple(s.sample(rng) for s in strats)
                  for _ in range(N_EXAMPLES)]

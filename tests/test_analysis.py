@@ -1,0 +1,367 @@
+"""The static-analysis gates: each pass fires on a deliberately broken
+fixture and stays quiet on the current tree.
+
+Fixture injection goes through each pass's public seams (``vmem_models=``,
+``backends=``, ``lint_source``, ``scenarios=``) — no global registry or
+module mutation, so these tests compose with the rest of the suite.
+"""
+import io
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import EXIT_OK, EXIT_VIOLATIONS, report
+from repro.analysis import contracts, lint, recompile
+from repro.analysis.__main__ import main as analysis_main
+from repro.api.registry import AssignmentBackend, main as registry_main
+from repro.kernels import ops
+
+SMALL_SHAPES = ((256, 16, 128),)
+ONE_DTYPE = ("float32",)
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# contracts — vmem models
+# ---------------------------------------------------------------------------
+
+class TestContractsVmem:
+    def test_current_models_pass(self):
+        assert contracts.check_vmem_models(SMALL_SHAPES, ONE_DTYPE) == []
+
+    def test_undercounting_model_is_caught(self):
+        """A model that forgets the double-buffered input tiles (a >=30%
+        undercount) must trip the vmem-model rule."""
+        models = contracts._default_vmem_models()
+        models["lloyd"] = lambda p, k, f, dt: 1024   # absurd undercount
+        found = contracts.check_vmem_models(SMALL_SHAPES, ONE_DTYPE,
+                                            vmem_models=models)
+        assert [v for v in found if v.rule == "vmem-model"]
+        assert all(v.pass_name == "contracts" for v in found)
+
+    def test_missing_model_is_caught(self):
+        models = contracts._default_vmem_models()
+        del models["batched"]
+        found = contracts.check_vmem_models(SMALL_SHAPES, ONE_DTYPE,
+                                            vmem_models=models)
+        assert any(v.rule == "vmem-model" and "batched" in v.message
+                   for v in found)
+
+    def test_budget_overflow_is_caught(self):
+        """A model declaring more than the per-core VMEM budget fires even
+        when the (lying) declared number matches nothing else."""
+        models = contracts._default_vmem_models()
+        models["assign"] = lambda p, k, f, dt: 10 * 2**30
+        found = contracts.check_vmem_models(SMALL_SHAPES, ONE_DTYPE,
+                                            vmem_models=models)
+        assert any("VMEM_BUDGET" in v.message for v in found)
+
+
+# ---------------------------------------------------------------------------
+# contracts — backend flags / intervals / dtypes
+# ---------------------------------------------------------------------------
+
+def _honest_fn(x, c, params=None):
+    am = jnp.zeros((x.shape[0],), jnp.int32)
+    md = jnp.zeros((x.shape[0],), jnp.float32)
+    return am, md, jnp.int32(0)
+
+
+class TestContractsBackends:
+    def test_current_registry_passes(self):
+        assert contracts.check_backend_contracts(dtypes=ONE_DTYPE) == []
+
+    def test_lying_takes_injection_flag_is_caught(self):
+        """Declared takes_injection with no ``inj`` parameter on the real
+        callable — the class of drift the PR-5 registry audit was for."""
+        liar = AssignmentBackend("liar", _honest_fn, takes_params=True,
+                                 takes_injection=True)
+        found = contracts.check_backend_contracts({"liar": liar},
+                                                  dtypes=ONE_DTYPE)
+        assert any(v.rule == "flags" and "inj" in v.message for v in found)
+
+    def test_wrong_arity_is_caught(self):
+        """fuses_update promises the extended 5-tuple; a 3-tuple callable
+        must trip the arity check."""
+        liar = AssignmentBackend("liar3", _honest_fn, takes_params=True,
+                                 fuses_update=True)
+        found = contracts.check_backend_contracts({"liar3": liar},
+                                                  dtypes=ONE_DTYPE)
+        assert any(v.rule == "flags" and "returns 3 values" in v.message
+                   for v in found)
+
+    def test_16bit_accumulator_dtype_is_caught(self):
+        """A kernel leaking bf16 distances under a 16-bit compute dtype
+        violates the f32-accumulate contract."""
+        def leaky(x, c, params=None):
+            am = jnp.zeros((x.shape[0],), jnp.int32)
+            md = jnp.zeros((x.shape[0],), x.dtype)   # <- input dtype leak
+            return am, md, jnp.int32(0)
+        b = AssignmentBackend("leaky", leaky, takes_params=True)
+        found = contracts.check_backend_contracts({"leaky": b},
+                                                  dtypes=("bfloat16",))
+        assert any(v.rule == "f32-accumulate" for v in found)
+
+    def test_wrong_interval_count_is_caught(self, monkeypatch):
+        """protected_intervals is derived from the flags; the checker
+        cross-checks it against the kernels' INJ_SLOTS. Shrinking the
+        slot table simulates a kernel that dropped an interval."""
+        def ft_fn(x, c, params=None, inj=None):
+            return _honest_fn(x, c, params)
+        b = AssignmentBackend("ftb", ft_fn, supports_ft=True,
+                              takes_params=True, takes_injection=True)
+        found = contracts.check_backend_contracts(
+            {"ftb": b}, descriptor_slots={"assign": 2}, dtypes=ONE_DTYPE)
+        assert any(v.rule == "intervals" for v in found)
+
+
+# ---------------------------------------------------------------------------
+# lint
+# ---------------------------------------------------------------------------
+
+class TestLint:
+    def test_current_tree_passes(self):
+        assert lint.run() == []
+
+    def _lint(self, body, relpath="src/repro/api/fixture.py"):
+        return lint.lint_source(textwrap.dedent(body), relpath)
+
+    def test_hidden_item_is_caught(self):
+        found = self._lint("""
+            def fit(x):
+                return x.sum().item()
+        """)
+        assert _rules(found) == {"host-sync"}
+
+    def test_item_inside_funnel_is_allowed(self):
+        found = self._lint("""
+            def _host_read(value):
+                return value.item()
+        """)
+        assert found == []
+
+    def test_device_get_outside_funnel_is_caught(self):
+        found = self._lint("""
+            import jax
+            def fit(x):
+                return jax.device_get(x)
+        """, relpath="src/repro/kernels/fixture.py")   # flagged everywhere
+        assert _rules(found) == {"host-sync"}
+
+    def test_float_on_bare_name_in_hot_path(self):
+        found = self._lint("""
+            def fit(shift):
+                if float(shift) < 1e-4:
+                    return True
+        """)
+        assert _rules(found) == {"host-sync"}
+
+    def test_funnel_suffix_naming_is_exempt(self):
+        found = self._lint("""
+            def fit(x):
+                shift_h = _host_read(x)
+                return float(shift_h)
+        """)
+        assert found == []
+
+    def test_scalar_rules_scoped_to_hot_paths(self):
+        """float() on a bare name outside the hot-path packages is fine
+        (benchmarks, launch tooling, roofline)."""
+        found = self._lint("""
+            def report(t):
+                return float(t)
+        """, relpath="src/repro/roofline/fixture.py")
+        assert found == []
+
+    def test_jit_in_loop_is_caught(self):
+        found = self._lint("""
+            import jax
+            def sweep(fns, x):
+                for fn in fns:
+                    jax.jit(fn)(x)
+        """)
+        assert _rules(found) == {"jit-in-loop"}
+
+    def test_module_state_is_caught(self):
+        found = self._lint("""
+            _cached_table = {}
+        """)
+        assert _rules(found) == {"module-state"}
+
+    def test_all_caps_constant_is_exempt(self):
+        found = self._lint("""
+            SHAPES = [(1, 2), (3, 4)]
+            _DTYPE_BYTES = {"float32": 4}
+        """)
+        assert found == []
+
+    def test_interpret_true_is_caught(self):
+        found = self._lint("""
+            def call(k):
+                return k(interpret=True)
+        """, relpath="src/repro/kernels/fixture.py")
+        assert _rules(found) == {"interpret-mode"}
+
+    def test_pragma_suppresses(self):
+        found = self._lint("""
+            _registry = {}  # analysis: allow=module-state
+        """)
+        assert found == []
+
+    def test_syntax_error_reports_parse_rule(self):
+        found = lint.lint_source("def broken(:\n", "src/repro/api/x.py")
+        assert _rules(found) == {"parse"}
+
+
+# ---------------------------------------------------------------------------
+# recompile
+# ---------------------------------------------------------------------------
+
+def _stable_scenario():
+    fn = jax.jit(lambda x: x * 2.0)
+    x = jnp.ones((8,), jnp.float32)
+
+    def step():
+        fn(x).block_until_ready()
+    return step
+
+
+def _retracing_scenario():
+    x = np.ones((8,), np.float32)
+    def step():
+        # a fresh jit wrapper per call: compiles on every pass
+        jax.jit(lambda v: v * 3.0)(x).block_until_ready()  # analysis: allow=jit-in-loop
+    return step
+
+
+class TestRecompileGate:
+    def test_cached_scenario_is_clean(self):
+        found = recompile.run(scenarios=[
+            recompile.Scenario("stable", _stable_scenario)])
+        assert found == []
+
+    def test_jit_per_call_is_caught(self):
+        found = recompile.run(scenarios=[
+            recompile.Scenario("retrace", _retracing_scenario,
+                               file="tests/test_analysis.py")])
+        assert len(found) == 1
+        v = found[0]
+        assert v.rule == "shape-stable-retrace"
+        assert "retrace" in v.message
+        assert v.file == "tests/test_analysis.py"
+
+    def test_warm_budget_is_honoured(self):
+        found = recompile.run(scenarios=[
+            recompile.Scenario("budgeted", _retracing_scenario,
+                               warm_budget=5)])
+        assert found == []
+
+    def test_counter_counts_real_compiles(self):
+        ctr = recompile.CompileCounter()
+        with ctr.counting() as c:
+            jax.jit(lambda v: v + jnp.float32(41.5))(
+                jnp.float32(0.5)).block_until_ready()
+        assert c.compiles >= 1
+        before = ctr.count
+        jax.jit(lambda v: v - jnp.float32(17.0))(
+            jnp.float32(1.0)).block_until_ready()   # counter disabled
+        assert ctr.count == before
+
+
+# ---------------------------------------------------------------------------
+# shared reporting / drivers
+# ---------------------------------------------------------------------------
+
+class TestReporting:
+    def test_render_text(self):
+        v = report.Violation("lint", "host-sync", file="src/a.py", line=3,
+                             message="boom")
+        assert v.render("text") == "[lint/host-sync] src/a.py:3: boom"
+
+    def test_render_github(self):
+        v = report.Violation("contracts", "vmem-model", file="src/b.py",
+                             message="off by 2x")
+        assert v.render("github") == \
+            "::error file=src/b.py,title=contracts/vmem-model::off by 2x"
+
+    def test_render_github_with_line(self):
+        v = report.Violation("lint", "host-sync", file="src/c.py", line=7,
+                             message="sync")
+        assert v.render("github") == \
+            "::error file=src/c.py,line=7,title=lint/host-sync::sync"
+
+    def test_emit_exit_codes(self):
+        buf = io.StringIO()
+        assert report.emit([], stream=buf) == EXIT_OK
+        v = report.Violation("lint", "r", message="m")
+        assert report.emit([v], stream=buf) == EXIT_VIOLATIONS
+        assert "[lint/r]" in buf.getvalue()
+
+    def test_driver_lint_pass_clean(self, capsys):
+        assert analysis_main(["--pass", "lint"]) == EXIT_OK
+        out = capsys.readouterr().out
+        assert "lint: no violation(s)" in out
+        assert "1 pass(es) clean" in out
+
+    def test_driver_rejects_unknown_pass(self):
+        with pytest.raises(SystemExit) as e:
+            analysis_main(["--pass", "nonsense"])
+        assert e.value.code == report.EXIT_USAGE
+
+    def test_registry_check_shares_exit_codes(self, tmp_path, capsys):
+        stale = tmp_path / "backends.md"
+        stale.write_text("out of date\n")
+        assert registry_main(["--check", str(stale)]) == EXIT_VIOLATIONS
+        err = capsys.readouterr().err
+        assert "[docs/stale-matrix]" in err
+
+    def test_registry_check_github_format(self, tmp_path, capsys):
+        stale = tmp_path / "backends.md"
+        stale.write_text("out of date\n")
+        assert registry_main(["--check", str(stale),
+                              "--format=github"]) == EXIT_VIOLATIONS
+        err = capsys.readouterr().err
+        assert err.startswith("::error file=")
+        assert "title=docs/stale-matrix" in err
+
+    def test_registry_check_fresh_is_clean(self, capsys):
+        assert registry_main(["--check", "docs/backends.md"]) == EXIT_OK
+        assert "up to date" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# kernel_plan — the introspection the contracts pass is built on
+# ---------------------------------------------------------------------------
+
+class TestKernelPlan:
+    def test_plan_shapes_assign(self):
+        p = ops.clamp_params(256, 16, 128, ops.DEFAULT_PARAMS)
+        plan = ops.kernel_plan("assign", 256, 16, 128, p)
+        assert plan.kind == "assign"
+        assert plan.grid
+        assert plan.inputs and plan.outputs
+        assert plan.vmem_bytes() > 0
+
+    def test_plan_matches_declared_model_exactly_for_assign(self):
+        p = ops.clamp_params(1024, 16, 256, ops.DEFAULT_PARAMS)
+        plan = ops.kernel_plan("assign", 1024, 16, 256, p)
+        assert plan.vmem_bytes() == p.vmem_bytes(jnp.float32)
+
+    def test_plan_rejects_unknown_kind(self):
+        with pytest.raises(ValueError):
+            ops.kernel_plan("nonsense", 256, 16, 128, ops.DEFAULT_PARAMS)
+
+    def test_smem_buffers_excluded_from_vmem(self):
+        p = ops.clamp_params(256, 16, 128, ops.DEFAULT_PARAMS)
+        plan = ops.kernel_plan("lloyd", 256, 16, 128, p)
+        smem = [b for b in plan.inputs if b.memory == "smem"]
+        assert smem, "lloyd kernel threads its meta scalar through SMEM"
+        assert plan.vmem_bytes() == sum(
+            2 * b.nbytes for b in plan.inputs if b.memory == "vmem") + sum(
+            b.nbytes for b in plan.outputs + plan.scratch)

@@ -1,6 +1,5 @@
 """repro.api surface: estimator round-trips, streaming partial_fit,
 FaultPolicy matrix, backend-registry capabilities, injectable autotune."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -111,7 +111,6 @@ class TestFtEinsum:
 
 class TestAbftModel:
     def test_abft_model_forward_matches_unprotected(self):
-        import dataclasses
         cfg = get_config("internlm2-1.8b", smoke=True)
         lm = LM(cfg)
         params, _ = lm.init(jax.random.PRNGKey(0))

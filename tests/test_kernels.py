@@ -11,10 +11,7 @@ except ImportError:       # deterministic fallback (see _hypothesis_stub)
 
 from repro.core.autotune import parameter_space, feasible
 from repro.kernels import ops, ref
-from repro.kernels.distance_argmin import distance_argmin
-from repro.kernels.distance_argmin_ft import (distance_argmin_ft,
-                                              make_injection, no_injection)
-from repro.kernels.matmul_abft import matmul_abft
+from repro.kernels.distance_argmin_ft import make_injection
 from repro.kernels.ops import KernelParams
 
 

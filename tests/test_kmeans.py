@@ -7,7 +7,7 @@ import pytest
 
 from repro.api import get_backend
 from repro.core import (KMeans, KMeansConfig, FaultConfig, baselines, dmr)
-from repro.core.kmeans import init_kmeanspp, reseed_empty
+from repro.core.kmeans import reseed_empty
 from repro.data.blobs import make_blobs
 from repro.kernels import ref
 

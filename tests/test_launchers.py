@@ -5,8 +5,6 @@ import subprocess
 import sys
 
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -59,7 +57,6 @@ class TestSchedules:
         assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
 
     def test_adamw_descends_quadratic(self):
-        import jax
         from repro.train.optimizer import (TrainConfig, adamw_update,
                                            init_opt_state)
         cfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=50,

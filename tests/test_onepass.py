@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (AutotuneCache, BackendCapabilityError, FaultPolicy,
-                       InjectionCampaign, KMeans, get_backend, list_backends)
+from repro.api import (AutotuneCache, FaultPolicy, InjectionCampaign,
+                       KMeans, get_backend, list_backends)
 from repro.core.autotune import (feasible, iteration_traffic, measure_score,
                                  select_params)
 from repro.data.blobs import make_blobs

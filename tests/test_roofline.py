@@ -25,7 +25,8 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
 
 
 SCAN_PROBE = """
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro.roofline.hlo import analyze_hlo
 
 def scanned(w, x):
