@@ -32,7 +32,8 @@ bench-check:     ## regen smoke artifact, gate vs committed baseline (>25% = fai
 	$(MAKE) bench-smoke
 	$(PY) -m benchmarks.check_regression /tmp/bench_stepwise_baseline.json \
 	    BENCH_stepwise.json --rung fig7_v5_onepass \
-	    --rung fig7_v7_ft_onepass --rung fig7_v8_batched --max-ratio 1.25
+	    --rung fig7_v7_ft_onepass --rung fig7_v8_batched \
+	    --rung fig7_v9_pruned --max-ratio 1.25
 
 bench-ft:        ## Fig. 15/16 FT overhead (incl. one-pass FT vs unprotected)
 	$(PY) -m benchmarks.bench_ft_overhead

@@ -6,8 +6,10 @@ loop, no GEMM) -> V1 GEMM + separate reduction -> V2/V3 fused reduction
 fused-update iteration, docs/kernels.md) -> V6 template family (bf16 compute
 path, small-K fast-path variant, irregular-shape rows; docs/autotune.md) ->
 V7 one-pass *with* fault tolerance (the Fig. 6 ABFT scheme composed with
-the fused-update iteration; docs/fault_tolerance.md) — through the
-``repro.api``
+the fused-update iteration; docs/fault_tolerance.md) -> V8 batched
+many-problem one-pass -> V9 bounds-carrying pruned one-pass (triangle-
+inequality tile skipping in the warmed refinement regime on clustered
+data; docs/kernels.md) — through the ``repro.api``
 registry, then times one full ``repro.api.KMeans`` iteration loop with and
 without a ``FaultPolicy`` to anchor the ladder in estimator terms.
 
@@ -32,7 +34,8 @@ import json
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import distance_flops, gflops, row, time_call
+from benchmarks.common import (clustered_blobs, distance_flops, gflops, row,
+                               time_call)
 from repro.api import FaultPolicy, KMeans, get_backend
 from repro.core.autotune import iteration_traffic, model_score, select_params
 from repro.core.kmeans import centroid_update, means_from_sums
@@ -120,6 +123,10 @@ def _collect(smoke: bool = False, model: bool = False
     c = jax.random.normal(jax.random.PRNGKey(1), (k, f), jnp.float32)
     fl = distance_flops(m, k, f)
     out = []
+    # Rungs timed in Pallas interpret mode: wall-time there is a
+    # Python-loop-bound smoke signal, never a perf figure. The payload
+    # names them so check_regression refuses to gate on them.
+    interpret_rungs = []
 
     base = None
     for label, name in LADDER:
@@ -214,6 +221,7 @@ def _collect(smoke: bool = False, model: bool = False
     out.append(row("fig7_v6_smallk", t_sk,
                    f"interpret=True;shape=({sm},{sk_},{sf});"
                    f"vs_generic=x{t_gen / t_sk:.2f}"))
+    interpret_rungs.append("fig7_v6_smallk")
 
     # --- V8: batched many-problem one-pass (B small problems, one launch
     # vs a Python loop of B single-problem one-pass iterations — the
@@ -242,6 +250,37 @@ def _collect(smoke: bool = False, model: bool = False
                    f"B={bb};shape=({bn},{bk2},{bf2});"
                    f"vs_loop_of_single=x{t_bloop / t_bat:.2f}"))
 
+    # --- V9: bounds-carrying pruned one-pass (lloyd_pruned_xla is the XLA
+    # analogue of kernels/lloyd_step_pruned.py). Timed in the warmed
+    # refinement regime — clustered cluster-contiguous data, centroid
+    # order aligned with row order, bounds seeded by a few real Lloyd
+    # steps — because that is where a long fit spends almost all its
+    # iterations and the only regime where tile pruning can engage at
+    # all (docs/kernels.md). The per-iteration prune-rate trace of the
+    # warmup steps is the derived column; no GFLOPS figure, since the
+    # whole point is that the skipped FLOPs never execute.
+    from repro.core.assignment import init_bounds_xla
+    pm, pk, pf2 = (4096, 64, 32) if smoke else (m, k, f)
+    xq, cq = clustered_blobs(pm, pf2, pk, seed=8)
+    pr_backend = get_backend("lloyd_pruned_xla")
+
+    def pruned_iter(x, c, bounds):
+        am, md, det, sums, counts, nb, frac = pr_backend(x, c, bounds=bounds)
+        return means_from_sums(sums, counts, c), am, nb, frac
+
+    pr_fn = jax.jit(pruned_iter)
+    bnds = init_bounds_xla(pm, pk, pf2)
+    c_cur, fracs = cq, []
+    for _ in range(6):
+        c_cur, _, bnds, fr = pr_fn(xq, c_cur, bnds)
+        fracs.append(float(fr))
+    t_v9 = time_call(pr_fn, xq, c_cur, bnds)
+    t_ref = time_call(one_fn, xq, c_cur)     # unpruned one-pass, same data
+    out.append(row("fig7_v9_pruned", t_v9,
+                   f"shape=({pm},{pk},{pf2});"
+                   f"vs_onepass_same_shape=x{t_ref / t_v9:.2f};"
+                   f"prune=" + "|".join(f"{v:.3f}" for v in fracs)))
+
     # --- irregular shapes: tall-skinny and wide-F (one-pass iteration) ---
     for label, im, ik, if_ in (SMOKE_IRREGULAR if smoke else IRREGULAR):
         xi = jax.random.normal(jax.random.PRNGKey(4), (im, if_), jnp.float32)
@@ -260,6 +299,7 @@ def _collect(smoke: bool = False, model: bool = False
             ops.fused_lloyd(x, c, KernelParams(256, 128, 128))), iters=2,
             warmup=1)
         out.append(row("fig7_v5_onepass_pallas_interp", t, "interpret=True"))
+        interpret_rungs.append("fig7_v5_onepass_pallas_interp")
 
     # estimator-level anchor: 4 Lloyd iterations, unprotected vs FT policy
     for label, policy in (("fig7_e2e_off", FaultPolicy.off()),
@@ -278,6 +318,7 @@ def _collect(smoke: bool = False, model: bool = False
     payload = {
         "shape": {"m": m, "k": k, "f": f},
         "smoke": smoke,
+        "interpret_rungs": interpret_rungs,
         "rows": [r.split(",", 2) for r in out],
         "traffic_model_bytes": traffic,
         "template_model": template,

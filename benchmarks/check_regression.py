@@ -9,12 +9,19 @@ Usage::
 
 ``--rung`` may repeat; default guards the one-pass rung, the one-pass FT
 rung (``fig7_v7_ft_onepass`` — the protected path must not quietly drift
-back toward two-pass cost) and the batched many-problem rung
+back toward two-pass cost), the batched many-problem rung
 (``fig7_v8_batched`` — one launch for B problems must not quietly decay
-toward loop-of-launches cost). A rung missing
+toward loop-of-launches cost) and the pruned rung (``fig7_v9_pruned`` —
+the bounds bookkeeping must not eat the skipped-GEMM win). A rung missing
 from the *baseline* is skipped (it was just added); a rung missing from the
 *new* artifact is an error (a ladder rung silently disappeared). Rows whose
 recorded time is 0 (model rows) are rejected as guards.
+
+Interpret-mode rungs are *refused* as guards: the artifact names them in
+``interpret_rungs`` (and marks each row's derived column with
+``interpret=True``), and asking this gate to guard one is an error —
+interpret wall-time is a Python-loop-bound smoke signal that must never
+enter the regression baseline, silently or otherwise.
 """
 from __future__ import annotations
 
@@ -22,19 +29,38 @@ import argparse
 import json
 import sys
 
-DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass", "fig7_v8_batched"]
+DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass", "fig7_v8_batched",
+                 "fig7_v9_pruned"]
 
 
 def _times(payload: dict) -> dict[str, float]:
     return {name: float(t) for name, t, _ in payload["rows"]}
 
 
+def _interpret_rungs(payload: dict) -> set[str]:
+    """Rungs the artifact marks as interpret-mode: the explicit
+    ``interpret_rungs`` list, plus any row whose derived column carries
+    the ``interpret=True`` marker (older artifacts have only the rows)."""
+    marked = set(payload.get("interpret_rungs", []))
+    for name, _, derived in payload["rows"]:
+        if "interpret=True" in str(derived):
+            marked.add(name)
+    return marked
+
+
 def check(baseline: dict, new: dict, rungs: list[str],
           max_ratio: float) -> list[str]:
     """Return a list of failure messages (empty = gate passes)."""
     base_t, new_t = _times(baseline), _times(new)
+    refused = _interpret_rungs(baseline) | _interpret_rungs(new)
     failures = []
     for rung in rungs:
+        if rung in refused:
+            failures.append(
+                f"{rung}: interpret-mode rung — its wall-time is a smoke "
+                f"signal, not a perf baseline; this gate refuses to guard "
+                f"it (drop it from --rung)")
+            continue
         if rung not in new_t:
             failures.append(f"{rung}: missing from the new artifact")
             continue

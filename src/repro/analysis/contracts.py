@@ -63,6 +63,7 @@ def _default_vmem_models() -> dict[str, VmemModel]:
         "lloyd": ops.lloyd_vmem_bytes,
         "lloyd_ft": ops.lloyd_ft_vmem_bytes,
         "batched": ops.lloyd_batched_vmem_bytes,
+        "pruned": ops.pruned_vmem_bytes,
     }
 
 
@@ -174,7 +175,8 @@ def check_backend_contracts(
         except (TypeError, ValueError):
             sig_params = {}
         for flag, pname in (("takes_params", "params"),
-                            ("takes_injection", "inj")):
+                            ("takes_injection", "inj"),
+                            ("supports_bounds", "bounds")):
             if contract["flags"][flag] != (pname in sig_params):
                 out.append(Violation(
                     "contracts", "flags", file=src,
@@ -232,7 +234,10 @@ def check_backend_contracts(
                             f"and detected-count (got {am.dtype}/"
                             f"{det.dtype})"))
             if b.takes_params and jnp.dtype(dtype).itemsize <= 2:
-                bad = [o for o in (md,) + tuple(outs[3:])
+                # outs[3:5] are the fused sums/counts; a bounds-carrying
+                # backend's trailing (BoundsState, prune_frac) pair is a
+                # pytree + scalar, not an accumulator stream
+                bad = [o for o in (md,) + tuple(outs[3:5])
                        if jnp.dtype(o.dtype) != jnp.float32]
                 if bad:
                     out.append(Violation(

@@ -1,6 +1,6 @@
 """Pass 2 — hot-path hygiene linter (custom AST checks over src/repro).
 
-Four rules, each targeting a bug class this repo has actually shipped or
+Five rules, each targeting a bug class this repo has actually shipped or
 explicitly designs against:
 
 ``host-sync``       device->host synchronization outside the designated
@@ -21,6 +21,13 @@ explicitly designs against:
 ``interpret-mode``  a hardcoded ``interpret=True`` in library code —
                     interpret mode is a per-call decision owned by
                     ``ops.on_tpu()``, never baked in.
+``pytree-state``    a module-level ``*State`` dataclass without a
+                    ``register_pytree_node`` registration in the same
+                    module. Iteration-carried state (the ``BoundsState``
+                    pattern) must flatten/unflatten to ride a
+                    ``lax.scan`` carry or a jit boundary; an unregistered
+                    state dataclass traces once, then fails (or silently
+                    constant-folds) the first time it crosses one.
 
 Suppression: append ``# analysis: allow=<rule>[,<rule>...]`` to the
 offending line. Every suppression is visible in the diff and greppable.
@@ -34,7 +41,8 @@ from typing import Iterator, Optional, Sequence
 
 from repro.analysis.report import Violation
 
-RULES = ("host-sync", "jit-in-loop", "module-state", "interpret-mode")
+RULES = ("host-sync", "jit-in-loop", "module-state", "interpret-mode",
+         "pytree-state")
 
 _PRAGMA = re.compile(r"#\s*analysis:\s*allow=([\w,-]+)")
 
@@ -169,7 +177,38 @@ class _Visitor(ast.NodeVisitor):
                            "ops.on_tpu()")
         self.generic_visit(node)
 
+    @staticmethod
+    def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+        for dec in cls.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _dotted(target).rsplit(".", 1)[-1] == "dataclass":
+                return True
+        return False
+
     def visit_Module(self, node: ast.Module) -> None:
+        # pytree-state: collect every register_pytree_node(SomeClass, ...)
+        # in the module, then flag module-level *State dataclasses that
+        # lack one. Scoped to the *State naming convention on purpose:
+        # plan/param dataclasses (KernelPlan, BufferPlan) are static
+        # launch descriptors that never ride a scan carry.
+        registered = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and _dotted(sub.func).rsplit(".", 1)[-1] \
+                    == "register_pytree_node" and sub.args \
+                    and isinstance(sub.args[0], ast.Name):
+                registered.add(sub.args[0].id)
+        for stmt in node.body:
+            if isinstance(stmt, ast.ClassDef) \
+                    and stmt.name.endswith("State") \
+                    and self._is_dataclass_decorated(stmt) \
+                    and stmt.name not in registered:
+                self._flag("pytree-state", stmt,
+                           f"dataclass {stmt.name!r} looks like iteration-"
+                           f"carried state but has no register_pytree_node"
+                           f"(...) in this module; unregistered state "
+                           f"cannot cross a lax.scan carry or jit "
+                           f"boundary (the BoundsState failure mode)")
         for stmt in node.body:
             targets: list[ast.expr] = []
             value: Optional[ast.expr] = None

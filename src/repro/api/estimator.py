@@ -118,6 +118,12 @@ class KMeans:
     detected_errors_ : int
         SDCs detected (and, under ``mode="correct"``, corrected) across
         the fit — nonzero only with a fault-tolerant backend.
+    prune_history_ : list of float
+        Per-iteration fraction of (row tile, centroid tile) cells skipped
+        by the triangle-inequality filter — populated only by full-batch
+        fits on a bounds-carrying backend (``supports_bounds``), empty
+        otherwise. Iteration zero is always 0.0 (the seed pass computes
+        every tile).
 
     See Also
     --------
@@ -205,6 +211,7 @@ class KMeans:
         self.inertia_: Optional[float] = None
         self.n_iter_: int = 0
         self.detected_errors_: int = 0
+        self.prune_history_: list = []
 
     # ------------------------------------------------------------------
     # internals
@@ -281,7 +288,9 @@ class KMeans:
         pass over X (optionally DMR-protected)."""
         from repro.core.kmeans import centroid_update, means_from_sums
         if self._backend.fuses_update:
-            am, md, det, sums, counts = out
+            # bounds-carrying backends extend the 5-tuple by
+            # (new_bounds, prune_frac); the update only needs the head
+            am, md, det, sums, counts = out[:5]
             new_c = means_from_sums(sums, counts, centroids)
         else:
             am, md, det = out
@@ -328,7 +337,9 @@ class KMeans:
                 out = backend(x, self._cast(centroids), params=params,
                               inj=inj)
                 if fuses:   # block sums/counts come out of the kernel
-                    am, md, det, sums, bcnt = out
+                    # bounds backends run unpruned here (bounds=None per
+                    # call — streaming blocks share no bounds lineage)
+                    am, md, det, sums, bcnt = out[:5]
                 else:
                     am, md, det = out
                     sums, bcnt = protected_sums(x, am, k, use_dmr=use_dmr)
@@ -363,6 +374,61 @@ class KMeans:
         backend = self._backend
         takes_inj = backend.takes_injection
         takes_params = backend.takes_params
+
+        if backend.supports_bounds:
+            # Bounds-carrying variant: the BoundsState rides in the scan
+            # carry (it is a registered pytree), so upper bounds and
+            # centroid drifts survive across iterations without ever
+            # touching the host. The history gains a prune-fraction
+            # column. Frozen (converged) steps pass the bounds through
+            # untouched — they would only decay further, and the fit is
+            # over anyway.
+            def chunk_bounded(plan: Any, centroids: jax.Array,
+                              am0: jax.Array, det0: jax.Array,
+                              inertia0: jax.Array, key: jax.Array,
+                              it0: Any, bounds0: Any) -> tuple:
+                def body(carry: tuple, t: jax.Array) -> tuple:
+                    centroids, am, inertia, done, det, bounds = carry
+
+                    def live(_: None) -> tuple:
+                        xa = plan if takes_params else plan.x
+                        out = backend(xa, self._cast(centroids),
+                                      params=params if takes_params
+                                      else None, bounds=bounds)
+                        am_b, md, det_i, new_c, counts = self._apply_update(
+                            out, plan.x, centroids)
+                        new_bounds, pfrac = out[5], out[6]
+                        inertia_i = jnp.sum(md)
+                        shift = jnp.sqrt(jnp.sum((new_c - centroids) ** 2))
+                        new_c = reseed_empty(
+                            jax.random.fold_in(key, it0 + t),
+                            plan.x, new_c, counts, md)
+                        return (new_c, am_b, inertia_i, shift,
+                                det + det_i.astype(jnp.int32),
+                                new_bounds, pfrac)
+
+                    def frozen(_: None) -> tuple:
+                        return (centroids, am, inertia, jnp.float32(0.0),
+                                det, bounds, jnp.float32(0.0))
+
+                    (new_c, am_n, inertia_n, shift, det_n, bounds_n,
+                     pfrac) = jax.lax.cond(done, frozen, live, None)
+                    active = jnp.logical_not(done)
+                    done_n = jnp.logical_or(done, shift < tol)
+                    return ((new_c, am_n, inertia_n, done_n, det_n,
+                             bounds_n),
+                            (new_c, inertia_n, shift, active, pfrac))
+
+                init = (centroids, am0, inertia0, jnp.bool_(False), det0,
+                        bounds0)
+                (centroids, am, inertia, done, det, bounds), hist = \
+                    jax.lax.scan(body, init, jnp.arange(n_steps),
+                                 length=n_steps)
+                return centroids, am, inertia, det, done, hist, bounds
+
+            fn = jax.jit(chunk_bounded)
+            self._step_cache[cache_key] = fn
+            return fn
 
         def chunk(plan: Any, centroids: jax.Array, am0: jax.Array,
                   det0: jax.Array, inertia0: jax.Array, key: jax.Array,
@@ -477,6 +543,14 @@ class KMeans:
         # bf16/fp16 fit is zero casts of X — only the (K, F) centroids are
         # cast per step.
         plan = ops.plan_data(self._cast(x), params)
+        # bounds-carrying backends start every fit from a fresh (all-
+        # compute) state: a warm start / from_state restore never inherits
+        # bounds, so a centroid hot-swap can't leave stale Hamerly bounds
+        supports_bounds = self._backend.supports_bounds
+        bounds = self._backend.bounds_init(
+            m, self.n_clusters, f, params, dtype=self.compute_dtype) \
+            if supports_bounds else None
+        self.prune_history_ = []
 
         am = jnp.zeros((m,), jnp.int32)
         det = jnp.zeros((), jnp.int32)
@@ -487,32 +561,42 @@ class KMeans:
         while it0 < self.max_iter:
             n_steps = min(self.sync_every, self.max_iter - it0)
             chunk = self._chunk_fn(params, n_steps)
-            if takes_inj:
-                # pre-draw the chunk's campaign schedule: same host RNG
-                # consumption order as the per-iteration loop had
-                inj_stack = jnp.stack([
-                    self._draw_injection(inj_rng, m, f, params)
-                    for _ in range(n_steps)])
+            if supports_bounds:
+                centroids, am, inertia, det, done_d, hist, bounds = chunk(
+                    plan, centroids, am, det, inertia, key,
+                    jnp.int32(it0), bounds)
             else:
-                inj_stack = jnp.zeros((n_steps, 1), jnp.int32)
-            centroids, am, inertia, det, done_d, hist = chunk(
-                plan, centroids, am, det, inertia, key,
-                jnp.int32(it0), inj_stack)
+                if takes_inj:
+                    # pre-draw the chunk's campaign schedule: same host
+                    # RNG consumption order as the per-iteration loop had
+                    inj_stack = jnp.stack([
+                        self._draw_injection(inj_rng, m, f, params)
+                        for _ in range(n_steps)])
+                else:
+                    inj_stack = jnp.zeros((n_steps, 1), jnp.int32)
+                centroids, am, inertia, det, done_d, hist = chunk(
+                    plan, centroids, am, det, inertia, key,
+                    jnp.int32(it0), inj_stack)
             # the chunk boundary: the only device->host sync of the window.
             # The (n_steps, K, F) centroid history crosses only when a
             # callback will actually read it.
-            cs_d, in_d, sh_d, act_d = hist
+            cs_d, in_d, sh_d, act_d = hist[:4]
+            pf_d = hist[4] if supports_bounds else None
             if on_iteration is None:
-                done, in_h, sh_h, act_h = _host_read(
-                    (done_d, in_d, sh_d, act_d))
+                done, in_h, sh_h, act_h, pf_h = _host_read(
+                    (done_d, in_d, sh_d, act_d, pf_d))
             else:
-                done, cs_h, in_h, sh_h, act_h = _host_read((done_d, *hist))
+                done, cs_h, in_h, sh_h, act_h, pf_h = _host_read(
+                    (done_d, cs_d, in_d, sh_d, act_d, pf_d))
             self._n_host_syncs += 1
             executed = int(act_h.sum())
             if on_iteration is not None:
                 for t in range(executed):
                     on_iteration(it0 + t, cs_h[t], float(in_h[t]),
                                  float(sh_h[t]))
+            if pf_h is not None:
+                self.prune_history_.extend(
+                    float(v_h) for v_h in pf_h[:executed])
             if executed:
                 inertia_host = float(in_h[executed - 1])
             it0 += executed
@@ -535,6 +619,7 @@ class KMeans:
         rng = np.random.default_rng(self.random_state + 1)
         inj_rng = self._campaign_rng()
         takes_inj = self._backend.takes_injection
+        self.prune_history_ = []   # mini-batch steps run unpruned
 
         total_det = jnp.zeros((), jnp.int32)
         inertia = jnp.asarray(jnp.inf)

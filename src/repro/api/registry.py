@@ -29,7 +29,7 @@ class BackendCapabilityError(TypeError):
 # Capability flags, in rendering order (also the machine-readable contract
 # vocabulary consumed by repro.analysis.contracts).
 _FLAG_COLUMNS = ("supports_ft", "takes_params", "takes_injection",
-                 "fuses_update", "supports_batch")
+                 "fuses_update", "supports_batch", "supports_bounds")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +53,19 @@ class AssignmentBackend:
                      output gains the leading problem axis. Single-problem
                      drivers must not route (M, F) data here and batched
                      drivers (``repro.batch``) require the flag.
+    supports_bounds: stateful pruned backend — accepts an iteration-carried
+                     ``bounds`` state (:class:`~repro.kernels.ops.
+                     BoundsState` or the backend's own shape) and returns
+                     the extended 7-tuple ``(assign, min_dist, detected,
+                     sums, counts, new_bounds, prune_frac)``. ``bounds=None``
+                     (or a fresh state from ``bounds_init``) computes every
+                     tile and seeds the bounds; anything that moves
+                     centroids outside the backend's own update must pass a
+                     fresh state.
+    bounds_init:     for ``supports_bounds`` backends, a callable
+                     ``(m, k, f, params=None, *, dtype=...) -> state``
+                     building the fresh (all-invalid) bounds state the
+                     driver threads into iteration zero.
     """
 
     name: str
@@ -62,6 +75,8 @@ class AssignmentBackend:
     takes_injection: bool = False
     fuses_update: bool = False
     supports_batch: bool = False
+    supports_bounds: bool = False
+    bounds_init: Optional[Callable] = None
     doc: str = ""
 
     @property
@@ -74,6 +89,8 @@ class AssignmentBackend:
         from the capability flags either way."""
         if self.supports_batch:
             return "batched"
+        if self.supports_bounds:
+            return "pruned"
         if self.fuses_update:
             return "lloyd_ft" if self.supports_ft else "lloyd"
         return "assign"
@@ -91,9 +108,12 @@ class AssignmentBackend:
     @property
     def expected_arity(self) -> int:
         """Length of the uniform-call return tuple: ``(assign, min_dist,
-        detected)``, extended by ``(sums, counts)`` for one-pass backends.
-        The contract checker verifies this against an abstract evaluation
-        of the real callable."""
+        detected)``, extended by ``(sums, counts)`` for one-pass backends
+        and further by ``(new_bounds, prune_frac)`` for bounds-carrying
+        pruned backends. The contract checker verifies this against an
+        abstract evaluation of the real callable."""
+        if self.supports_bounds:
+            return 7
         return 5 if self.fuses_update else 3
 
     def contract(self) -> dict[str, Any]:
@@ -111,7 +131,8 @@ class AssignmentBackend:
 
     def __call__(self, x: jax.Array, c: jax.Array, *,
                  params: Any = None,
-                 inj: Optional[jax.Array] = None) -> Any:
+                 inj: Optional[jax.Array] = None,
+                 bounds: Any = None) -> Any:
         if inj is not None and not self.takes_injection:
             raise BackendCapabilityError(
                 f"backend {self.name!r} does not take in-kernel injections "
@@ -121,6 +142,15 @@ class AssignmentBackend:
             raise BackendCapabilityError(
                 f"backend {self.name!r} does not take kernel parameters "
                 f"(takes_params=False)")
+        if bounds is not None and not self.supports_bounds:
+            raise BackendCapabilityError(
+                f"backend {self.name!r} does not carry pruning bounds "
+                f"(supports_bounds=False); use a pruned backend or drop "
+                f"the bounds state")
+        if self.supports_bounds:
+            if self.takes_params:
+                return self.fn(x, c, params, bounds=bounds)
+            return self.fn(x, c, bounds=bounds)
         if self.takes_injection:
             if self.takes_params:
                 return self.fn(x, c, params, inj=inj)
@@ -191,7 +221,7 @@ def render_markdown() -> str:
     backends = list_backends()
     short = {"supports_ft": "ft", "takes_params": "params",
              "takes_injection": "inject", "fuses_update": "one-pass",
-             "supports_batch": "batch"}
+             "supports_batch": "batch", "supports_bounds": "pruned"}
     lines = [_MD_HEADER]
     lines.append("| backend | " + " | ".join(short[c] for c in _FLAG_COLUMNS)
                  + " | kernel kind | protected intervals | description |")
@@ -210,7 +240,10 @@ def render_markdown() -> str:
                  "(`takes_injection`); **one-pass** = returns the extended "
                  "`(assign, min_dist, detected, sums, counts)` tuple "
                  "(`fuses_update`); **batch** = operates on (B, N, F) "
-                 "problem stacks (`supports_batch`). *Kernel kind* is the "
+                 "problem stacks (`supports_batch`); **pruned** = carries "
+                 "triangle-inequality bounds between iterations and "
+                 "returns the 7-tuple extended by `(new_bounds, "
+                 "prune_frac)` (`supports_bounds`). *Kernel kind* is the "
                  "autotune table the backend's tiles come from; *protected "
                  "intervals* counts the independently verified SEU "
                  "intervals one step exposes to an injection campaign.")

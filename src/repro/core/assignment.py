@@ -35,6 +35,16 @@ Each implementation maps (x (M, F), c (K, F)) ->
                every output gains a leading B axis).
   lloyd_batched_xla XLA analogue of the batched kernel (batched
                contractions; non-TPU fast path).
+  lloyd_pruned one-pass Lloyd with tile-granular triangle-inequality
+               pruning: Hamerly bounds carried between iterations skip
+               whole centroid tiles that provably cannot change any
+               assignment (``supports_bounds=True``; extended 7-tuple with
+               the new bounds state and the pruned-tile fraction).
+               Bit-identical to ``lloyd`` by construction.
+  lloyd_pruned_xla XLA analogue at finer granularity (row chunks x
+               16-centroid groups, ``lax.cond`` per cell so skipped groups
+               cost nothing off-TPU) — the non-TPU fast path and the
+               pruned benchmark rung.
 
 Every implementation is published through the ``repro.api`` backend
 registry as an :class:`~repro.api.registry.AssignmentBackend` declaring its
@@ -216,6 +226,141 @@ def assign_lloyd_ft_xla(x: jax.Array, c: jax.Array):
             sums, counts)
 
 
+def assign_lloyd_pruned(x, c: jax.Array, params=None, *, bounds=None):
+    # Pruned one-pass Lloyd: the Pallas kernel skips whole (row tile,
+    # centroid tile) cells whose decayed group lower bound cannot beat the
+    # row tile's upper bound. Extended 7-tuple contract — the new bounds
+    # state threads into the next iteration, the prune fraction into the
+    # fit history.
+    am, md, sums, counts, new_bounds, frac = ops.fused_lloyd_pruned(
+        x, c, params, bounds=bounds)
+    return am, md, _zero(), sums, counts, new_bounds, frac
+
+
+# Granularity of the XLA pruned analogue: row chunks x centroid groups.
+# Groups are much finer than a 128-wide MXU tile because XLA's skip
+# mechanism (lax.cond) pays no lane-alignment cost — finer groups prune
+# more, which is the whole point off-TPU.
+_PRUNE_ROWS = 2048
+_PRUNE_GROUP = 16
+
+
+def _pruned_xla_grid(m: int, k: int) -> tuple[int, int, int, int]:
+    """(row tile, num row tiles, group size, num groups) for (m, k)."""
+    rt = min(_PRUNE_ROWS, m)
+    g = min(_PRUNE_GROUP, k)
+    return rt, -(-m // rt), g, -(-k // g)
+
+
+def init_bounds_xla(m: int, k: int, f: int, params=None, *,
+                    dtype=jnp.float32) -> ops.BoundsState:
+    """Fresh bounds state shaped for the XLA pruned analogue's grid
+    (``params`` and ``dtype`` are accepted for signature uniformity with
+    :func:`ops.init_bounds` but the XLA grid does not depend on them)."""
+    del params, dtype
+    rt, nmt, g, kg = _pruned_xla_grid(m, k)
+    return ops.BoundsState(
+        ub=jnp.zeros((m,), jnp.float32),
+        assign=jnp.zeros((m,), jnp.int32),
+        tmin=jnp.zeros((nmt, kg), jnp.float32),
+        c_prev=jnp.zeros((kg * g, f), jnp.float32),
+        fresh=jnp.ones((), bool),
+    )
+
+
+@jax.jit
+def assign_lloyd_pruned_xla(x: jax.Array, c: jax.Array, *, bounds=None):
+    # XLA analogue of the pruned one-pass kernel: the distance work runs
+    # per (row chunk, centroid group) cell under a lax.cond, so a skipped
+    # cell costs nothing on CPU/GPU. The min fold over groups is exact
+    # (strict compare, earlier group wins ties — the same first-index
+    # tie-break as a whole-matrix argmin) and the one-hot update is the
+    # verbatim assign_lloyd_xla update, so a run with pruning disabled is
+    # bit-identical to this backend with bounds reset every call.
+    m, f = x.shape
+    k = c.shape[0]
+    rt, nmt, g, kg = _pruned_xla_grid(m, k)
+    mp, kp = nmt * rt, kg * g
+    if bounds is None:
+        bounds = init_bounds_xla(m, k, f)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    cp = jnp.pad(c, ((0, kp - k), (0, 0)))
+    xf = xp.astype(jnp.float32)
+    cf = cp.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=1, keepdims=True)                 # (mp, 1)
+    cn = jnp.where(jnp.arange(kp) < k,
+                   jnp.sum(cf * cf, axis=1), jnp.inf)            # (kp,)
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, jnp.float32)
+    # Skip decision — the same decayed-bound test as ops.fused_lloyd_pruned
+    drift = jnp.sqrt(jnp.sum((cf - bounds.c_prev) ** 2, axis=1))   # (kp,)
+    gdrift = jnp.max(drift.reshape(kg, g), axis=1)                 # (kg,)
+    ub_adj = bounds.ub + drift[bounds.assign]
+    maxub = jnp.max(
+        jnp.pad(ub_adj, (0, mp - m), constant_values=-jnp.inf)
+        .reshape(nmt, rt), axis=1)                                 # (nmt,)
+    tlb = bounds.tmin - gdrift[None, :]                            # (nmt, kg)
+    if kg == 1:
+        skip = jnp.zeros((nmt, kg), bool)
+    else:
+        can = tlb > maxub[:, None] * (1.0 + ops.PRUNE_SLACK) + ops.PRUNE_SLACK
+        skip = jnp.logical_and(can, jnp.logical_not(bounds.fresh))
+    ams, mds, tmins = [], [], []
+    for i in range(nmt):
+        xt = xp[i * rt:(i + 1) * rt]
+        xnt = xn[i * rt:(i + 1) * rt]
+        valid = (jnp.arange(rt) + i * rt) < m
+        md_t = jnp.full((rt,), big, jnp.float32)
+        am_t = jnp.zeros((rt,), jnp.int32)
+        tmin_t = []
+        for j in range(kg):
+            cg = cp[j * g:(j + 1) * g]
+            cng = cn[j * g:(j + 1) * g]
+
+            def _compute(op, cg=cg, cng=cng, xt=xt, xnt=xnt, valid=valid,
+                         base=j * g):
+                md_t, am_t = op
+                cross = jnp.matmul(xt, cg.T,
+                                   precision=jax.lax.Precision.HIGHEST,
+                                   preferred_element_type=jnp.float32)
+                dcell = xnt + cng[None, :] - 2.0 * cross         # (rt, g)
+                gmin = jnp.min(dcell, axis=1)
+                garg = jnp.argmin(dcell, axis=1).astype(jnp.int32) + base
+                take = gmin < md_t
+                tmin_ij = jnp.min(jnp.where(
+                    valid, jnp.sqrt(jnp.maximum(gmin, 0.0)), big))
+                return (jnp.where(take, gmin, md_t),
+                        jnp.where(take, garg, am_t), tmin_ij)
+
+            def _skipped(op):
+                md_t, am_t = op
+                return md_t, am_t, big
+
+            md_t, am_t, tmin_ij = jax.lax.cond(
+                skip[i, j], _skipped, _compute, (md_t, am_t))
+            tmin_t.append(tmin_ij)
+        ams.append(am_t)
+        mds.append(md_t)
+        tmins.append(jnp.stack(tmin_t))
+    am = jnp.concatenate(ams)[:m]
+    md = jnp.concatenate(mds)[:m]
+    tmin_k = jnp.stack(tmins)                                    # (nmt, kg)
+    # the verbatim assign_lloyd_xla one-hot update (same accumulation
+    # order, so final centroids cannot drift from the unpruned backend)
+    onehot = jax.nn.one_hot(am, k, dtype=x.dtype)
+    sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=0)
+    new_bounds = ops.BoundsState(
+        ub=jnp.sqrt(jnp.maximum(md, 0.0)),
+        assign=am,
+        tmin=jnp.where(skip, tlb, tmin_k),
+        c_prev=cf,
+        fresh=jnp.zeros((), bool),
+    )
+    frac = jnp.mean(skip.astype(jnp.float32))
+    return am, md, _zero(), sums, counts, new_bounds, frac
+
+
 def assign_lloyd_batched(x, c: jax.Array, params=None):
     # Batched one-pass Lloyd: B independent problems through one kernel
     # launch, the problem axis mapped to the outermost grid dimension
@@ -312,3 +457,14 @@ register_backend(AssignmentBackend(
     supports_batch=True,
     doc="XLA analogue of the batched one-pass kernel (batched contractions "
         "over the problem stack; non-TPU fast path)"))
+register_backend(AssignmentBackend(
+    "lloyd_pruned", assign_lloyd_pruned, takes_params=True,
+    fuses_update=True, supports_bounds=True, bounds_init=ops.init_bounds,
+    doc="pruned one-pass Lloyd Pallas kernel: Hamerly bounds skip whole "
+        "centroid tiles that provably lose (bit-identical to lloyd; "
+        "extended 7-tuple with bounds state + prune fraction)"))
+register_backend(AssignmentBackend(
+    "lloyd_pruned_xla", assign_lloyd_pruned_xla, fuses_update=True,
+    supports_bounds=True, bounds_init=init_bounds_xla,
+    doc="XLA analogue of the pruned one-pass backend (row-chunk x "
+        "16-centroid-group cells under lax.cond; non-TPU fast path)"))

@@ -47,9 +47,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import hw as _hw
-from repro.kernels.ops import (VARIANTS, KernelParams, clamp_params,  # noqa: F401 — VARIANTS re-exported as selection vocabulary
+from repro.kernels.ops import (PLAN_KINDS, VARIANTS, KernelParams, clamp_params,  # noqa: F401 — VARIANTS re-exported as selection vocabulary
                                lloyd_batched_vmem_bytes, lloyd_ft_vmem_bytes,
-                               lloyd_vmem_bytes, sublane_align, _round_up)
+                               lloyd_vmem_bytes, pruned_vmem_bytes,
+                               sublane_align, _round_up)
 
 # TPU v5e constants — hoisted to repro.hw (shared with roofline/hw.py so the
 # two models can't drift); the old names stay importable from here.
@@ -67,10 +68,18 @@ VMEM_BUDGET = _hw.VMEM_BUDGET     # bytes usable per core
 # tile (so block_k is not a search axis and winners are additionally keyed
 # by the B bucket — a B=4 launch and a B=1024 launch amortize dispatch and
 # pipeline ramp-up very differently at the same per-problem shape).
-KINDS = ("assign", "lloyd", "lloyd_ft", "batched")
+# "pruned" is the bounds-carrying one-pass kernel: surviving tiles pay the
+# one-pass cost, skipped tiles pay nothing, so its model takes an assumed
+# prune rate and its measure mode runs on *clustered* data (uniform data
+# never prunes, which would rank every candidate on full-compute time).
+#
+# The vocabulary itself lives in ``ops.PLAN_KINDS`` (the dispatch table of
+# ``ops.kernel_plan``) so the cache-schema kinds, the contract checker and
+# the selection pipeline extend from a single point of change.
+KINDS = PLAN_KINDS
 
 # Kinds that run the one-pass (fused-update) kernel family.
-_LLOYD_KINDS = ("lloyd", "lloyd_ft")
+_LLOYD_KINDS = ("lloyd", "lloyd_ft", "pruned")
 
 
 def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
@@ -129,8 +138,8 @@ def feasible(p: KernelParams, dtype=jnp.float32, *, kind: str = "assign",
             return False
     if kind in _LLOYD_KINDS and shape is not None:
         _, k, f = shape
-        vmem = (lloyd_ft_vmem_bytes if kind == "lloyd_ft"
-                else lloyd_vmem_bytes)
+        vmem = {"lloyd_ft": lloyd_ft_vmem_bytes,
+                "pruned": pruned_vmem_bytes}.get(kind, lloyd_vmem_bytes)
         return vmem(p, k, f, dtype) <= VMEM_BUDGET
     return p.vmem_bytes(dtype) <= VMEM_BUDGET
 
@@ -193,7 +202,8 @@ def iteration_traffic(m: int, k: int, f: int, p: KernelParams, *,
 
 def model_score(m: int, k: int, f: int, p: KernelParams,
                 dtype=jnp.float32, kind: str = "assign",
-                variant: str = "generic", batch: int = 1) -> float:
+                variant: str = "generic", batch: int = 1,
+                prune_rate: float = 0.5) -> float:
     """Analytical time estimate (seconds) for one fused-kernel launch.
 
     HBM traffic: X is re-read once per centroid tile, C once per sample
@@ -215,6 +225,16 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
     the launch is its B-fold — dispatch amortization is exactly what the
     model cannot see, which is why batched winners are *measured* on real
     hardware and the B bucket is part of the cache key.
+
+    The ``pruned`` kind discounts the distance GEMM (MACs and the
+    per-centroid-tile X re-reads) by ``prune_rate`` — the assumed fraction
+    of (row tile, centroid tile) cells the triangle-inequality filter
+    skips in steady state; the fused update epilogue, the partial-sum
+    round trip and the output streams are unconditional and stay at full
+    cost. The default 0.5 is deliberately conservative (late iterations on
+    clustered data reach far higher); the real rate is data- and
+    alignment-dependent, which is why pruned winners prefer measure mode
+    on clustered inputs.
     """
     if kind == "batched":
         return batch * model_score(m, k, f, p, dtype=dtype, kind="lloyd",
@@ -234,6 +254,16 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
         partials = (mp // p.block_m) * (kp * fp + kp) * 4
         hbm_bytes += 2 * partials
         macs += mp * kp * fp          # one-hot scatter GEMM in the epilogue
+    if kind == "pruned":
+        # skipped cells pay neither the distance MACs nor the per-centroid-
+        # tile X re-read; everything else (update epilogue, partials,
+        # output streams) is unconditional. Bounds traffic: ub+assign rows
+        # in/out, drift-sized centroid snapshot, per-cell tmin/skip words.
+        skipped = min(max(prune_rate, 0.0), 1.0)
+        hbm_bytes -= skipped * x_reads * bytes_per
+        macs -= skipped * mp * kp * fp
+        hbm_bytes += 2 * mp * 8 + kp * fp * 4 \
+            + 3 * (mp // p.block_m) * (kp // p.block_k) * 4
     if kind == "lloyd_ft":
         # dual-checksum encodings fused into the tile loop: ~2*(bm+bk)*bf
         # MACs per (m, k, f) grid step -> 2*M*K*F*(1/bm + 1/bk) overall
@@ -277,13 +307,24 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
     are ranked on real kernel time, not dispatch pipelining. The
     ``batched`` kind times one B-problem launch of the batched kernel —
     the whole point of its measure mode, since dispatch amortization is
-    invisible to the analytical model."""
+    invisible to the analytical model.
+
+    The ``pruned`` kind runs two iterations on *clustered* synthetic data
+    (cluster-contiguous rows, centroid order aligned with row order): the
+    first call seeds the bounds state (unpruned by construction), the
+    timed calls run warmed — the steady state a long fit spends almost all
+    its iterations in. Uniform data never prunes, so measuring on it would
+    rank every candidate on full-compute time and the pruned kind would
+    never beat the plain one-pass winner."""
     from repro.kernels.ops import (fused_assign, fused_lloyd,
-                                   fused_lloyd_batched, fused_lloyd_ft)
+                                   fused_lloyd_batched, fused_lloyd_ft,
+                                   fused_lloyd_pruned, init_bounds)
     kx, kc = jax.random.split(jax.random.PRNGKey(0))
     if kind == "batched":
         x = jax.random.normal(kx, (batch, m, f), dtype)
         c = jax.random.normal(kc, (batch, k, f), dtype)
+    elif kind == "pruned":
+        x, c = _clustered_data(m, k, f, dtype)
     else:
         x = jax.random.normal(kx, (m, f), dtype)
         c = jax.random.normal(kc, (k, f), dtype)
@@ -292,6 +333,12 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
         fn = jax.jit(functools.partial(fused_lloyd_batched, params=p))
     elif kind == "lloyd_ft":   # generic-grid template: no variant axis
         fn = jax.jit(functools.partial(fused_lloyd_ft, params=p))
+    elif kind == "pruned":
+        step_p = jax.jit(functools.partial(fused_lloyd_pruned, params=p,
+                                           variant=variant))
+        seeded = step_p(x, c, bounds=init_bounds(m, k, f, p, dtype=dtype))
+        bounds = seeded[4]   # iteration 1 of 2: the unpruned seeding pass
+        fn = functools.partial(step_p, bounds=bounds)
     else:
         step = fused_lloyd if kind == "lloyd" else fused_assign
         fn = jax.jit(functools.partial(step, params=p, variant=variant))
@@ -303,6 +350,20 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def _clustered_data(m: int, k: int, f: int, dtype) -> tuple:
+    """Seeded well-separated Gaussian blobs for the pruned kind's measure
+    mode: cluster-contiguous rows assigned round-robin-free (rows of
+    cluster j are the contiguous slice j*m/k..(j+1)*m/k) and centroids in
+    cluster order, so row tiles and centroid tiles align — the regime tile
+    pruning is built for. ``benchmarks/common.clustered_blobs`` is the
+    user-facing twin (src must not import from benchmarks/)."""
+    kx, kc = jax.random.split(jax.random.PRNGKey(7))
+    centers = jax.random.normal(kc, (k, f), jnp.float32) * 8.0
+    labels = (jnp.arange(m) * k) // m
+    x = centers[labels] + jax.random.normal(kx, (m, f), jnp.float32)
+    return x.astype(dtype), centers.astype(dtype)
 
 
 def select_params(m: int, k: int, f: int, *, mode: str = "model",

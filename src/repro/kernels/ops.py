@@ -19,6 +19,7 @@ from repro.kernels import distance_argmin as _da
 from repro.kernels import distance_argmin_ft as _daft
 from repro.kernels import lloyd_step as _ll
 from repro.kernels import lloyd_step_ft as _llft
+from repro.kernels import lloyd_step_pruned as _llp
 from repro.kernels import matmul_abft as _mma
 
 
@@ -102,6 +103,16 @@ def lloyd_batched_vmem_bytes(params: KernelParams, k: int, f: int,
     out_blocks = (kp * fp + kp) * 4
     sums = 2 * (params.block_m + kp) * 4
     return 2 * tile + acc + xbuf + out_blocks + sums
+
+
+def pruned_vmem_bytes(params: KernelParams, k: int, f: int,
+                      dtype: Any = jnp.float32) -> int:
+    """Working-set estimate for the pruned one-pass kernel: the one-pass
+    footprint plus the double-buffered (bm, 1) f32 row-norm input block
+    and the scalar skip/tmin blocks (a (1, 1) i32 input and a (1, 1) f32
+    output per grid cell)."""
+    return (lloyd_vmem_bytes(params, k, f, dtype)
+            + 2 * params.block_m * 4 + 3 * 4)
 
 
 def resolve_variant(k: int, params: KernelParams,
@@ -352,6 +363,159 @@ def fused_lloyd(
     return am[:m, 0], mind[:m, 0] + plan.xn, sums, counts
 
 
+# Relative + absolute fp-safety slack on the tile skip test. The bounds
+# are f32 and derived from rounded kernel outputs, so the raw comparison
+# is not rigorously conservative at the last ulp; the slack makes a wrong
+# skip require a bound error several orders of magnitude above f32
+# rounding noise, while separated clusters keep margins far above it.
+PRUNE_SLACK = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundsState:
+    """Iteration-carried Hamerly bounds for the pruned one-pass kernel.
+
+    Registered as a pytree (all fields are leaves) so it threads through
+    ``jax.lax.scan`` carries and jit boundaries like any array. The state
+    is only meaningful for the (params, k, f, backend) it was built for;
+    anything that moves centroids outside the kernel's own update —
+    ``partial_fit`` resumption, ``from_state`` rehydration, a served
+    centroid hot-swap — must replace it with a fresh state
+    (:func:`init_bounds`), whose ``fresh`` flag forces the next call to
+    compute every tile and reseed real bounds.
+
+    ub     : (m,)       f32 upper bound on each row's Euclidean distance
+                        to its assigned centroid
+    assign : (m,)       i32 assignment the upper bounds pair with
+    tmin   : (nmt, nkt) f32 per-(row tile, centroid tile) Euclidean group
+                        lower bound
+    c_prev : (kp, fp)   f32 copy of the padded centroids the bounds were
+                        computed against (the drift reference; stored in
+                        f32 *after* the compute-dtype cast so drift is
+                        measured in the space the kernel sees)
+    fresh  : ()         bool — True = placeholder state; the next call
+                        skips nothing and seeds real bounds
+    """
+
+    ub: jax.Array
+    assign: jax.Array
+    tmin: jax.Array
+    c_prev: jax.Array
+    fresh: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    BoundsState,
+    lambda s: ((s.ub, s.assign, s.tmin, s.c_prev, s.fresh), ()),
+    lambda aux, kids: BoundsState(*kids))
+
+
+def init_bounds(m: int, k: int, f: int,
+                params: Optional[KernelParams] = None, *,
+                dtype: Any = jnp.float32) -> BoundsState:
+    """Fresh (all-invalid) :class:`BoundsState` for a pruned fit: shaped
+    for the clamped tile grid of (m, k, f) so it is a valid scan carry
+    from iteration zero, with ``fresh=True`` so the first call computes
+    every tile."""
+    if params is None:
+        from repro.api.cache import default_cache
+        _, params = default_cache().lookup(m, k, f, kind="pruned",
+                                           dtype=dtype)
+    params = clamp_params(m, k, f, params, dtype=dtype)
+    mp = _round_up(m, params.block_m)
+    kp = _round_up(k, params.block_k)
+    fp = _round_up(f, params.block_f)
+    return BoundsState(
+        ub=jnp.zeros((m,), jnp.float32),
+        assign=jnp.zeros((m,), jnp.int32),
+        tmin=jnp.zeros((mp // params.block_m, kp // params.block_k),
+                       jnp.float32),
+        c_prev=jnp.zeros((kp, fp), jnp.float32),
+        fresh=jnp.ones((), bool),
+    )
+
+
+def fused_lloyd_pruned(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    bounds: Optional[BoundsState] = None,
+    variant: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, BoundsState,
+           jax.Array]:
+    """One-pass Lloyd step with tile-granular triangle-inequality pruning.
+
+    Same contract as :func:`fused_lloyd` plus an iteration-carried
+    :class:`BoundsState`: each (row tile, centroid tile) cell is skipped
+    when its decayed Euclidean group lower bound cannot beat the row
+    tile's worst-case upper bound (``tlb > maxub`` with
+    :data:`PRUNE_SLACK` safety margin). Skipping only omits folds that
+    provably lose strictly, so assignments, distances, sums and counts
+    are bit-identical to :func:`fused_lloyd` at the same tiles.
+
+    ``bounds=None`` (or a ``fresh`` state) computes every tile and seeds
+    the bounds — the unpruned first iteration. Single-tile shapes
+    (``smallk``, or K inside one ``block_k``) can never skip.
+
+    Returns (assign (M,) int32, true squared distance (M,) f32, sums
+    (K, F) f32, counts (K,) f32, new bounds, pruned tile fraction
+    (scalar f32)).
+    """
+    plan, cp, cn, params = _resolve_padded(x, c, params, "pruned")
+    variant = resolve_variant(c.shape[0], params, variant)
+    if interpret is None:
+        interpret = not on_tpu()
+    k, m = c.shape[0], plan.m
+    mp = plan.xp.shape[0]
+    kp = cp.shape[0]
+    nmt = mp // params.block_m
+    nkt = kp // params.block_k
+    if bounds is None:
+        bounds = init_bounds(m, k, plan.f, params, dtype=plan.xp.dtype)
+    meta = jnp.array([m], jnp.int32)
+    xnp = jnp.pad(plan.xn, (0, mp - m))[:, None]
+    cpf = cp.astype(jnp.float32)
+    # Decay the recorded group bounds by each tile's worst centroid drift
+    # and compare against the row tile's worst adjusted upper bound. The
+    # tile holding a row's assigned centroid always satisfies
+    # tlb <= ub_adj <= maxub, so at least that tile survives per row and
+    # the argmin stays grounded.
+    drift = jnp.sqrt(jnp.sum((cpf - bounds.c_prev) ** 2, axis=1))   # (kp,)
+    maxdrift = jnp.max(drift.reshape(nkt, params.block_k), axis=1)  # (nkt,)
+    ub_adj = bounds.ub + drift[bounds.assign]                       # (m,)
+    maxub = jnp.max(
+        jnp.pad(ub_adj, (0, mp - m), constant_values=-jnp.inf)
+        .reshape(nmt, params.block_m), axis=1)                      # (nmt,)
+    tlb = bounds.tmin - maxdrift[None, :]                           # (nmt, nkt)
+    if nkt == 1:
+        # A single centroid tile contains every assigned centroid and can
+        # never be skipped; forcing the mask statically keeps the smallk
+        # kernel skip-free.
+        skip = jnp.zeros((nmt, nkt), jnp.int32)
+    else:
+        can_skip = tlb > maxub[:, None] * (1.0 + PRUNE_SLACK) + PRUNE_SLACK
+        skip = jnp.where(bounds.fresh, 0, can_skip.astype(jnp.int32))
+    mind, am, sums, counts, tmin_k = _llp.lloyd_step_pruned(
+        plan.xp, cp, cn, xnp, meta, skip, block_m=params.block_m,
+        block_k=params.block_k, block_f=params.block_f, variant=variant,
+        interpret=interpret)
+    md = mind[:m, 0] + plan.xn
+    sums_k = _tree_sum(sums)[:k, :plan.f]
+    counts_k = _tree_sum(counts)[:k]
+    new_bounds = BoundsState(
+        ub=jnp.sqrt(jnp.maximum(md, 0.0)),
+        assign=am[:m, 0],
+        # skipped cells keep the decayed bound; computed cells refresh
+        tmin=jnp.where(skip == 1, tlb, tmin_k),
+        c_prev=cpf,
+        fresh=jnp.zeros((), bool),
+    )
+    prune_frac = jnp.mean(skip.astype(jnp.float32))
+    return am[:m, 0], md, sums_k, counts_k, new_bounds, prune_frac
+
+
 def _resolve_padded_batched(x: Any, c: jax.Array,
                             params: Optional[KernelParams]) -> tuple:
     """Batched front end: accept a raw (B, N, F) stack or a prebuilt
@@ -589,8 +753,11 @@ def plan_injection_tile(m: int, k: int, f: int, params: KernelParams,
 # Introspected kernel plans — the contract surface for repro.analysis.
 # ---------------------------------------------------------------------------
 
-# Kernel kinds with a Pallas plan; mirrors repro.core.autotune.KINDS.
-PLAN_KINDS: tuple[str, ...] = ("assign", "lloyd", "lloyd_ft", "batched")
+# Kernel kinds with a Pallas plan. This is the canonical kind vocabulary:
+# repro.core.autotune.KINDS re-exports it, so extending the family (and
+# the autotune cache schema with it) is a single-point change here.
+PLAN_KINDS: tuple[str, ...] = ("assign", "lloyd", "lloyd_ft", "batched",
+                               "pruned")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -718,6 +885,15 @@ def kernel_plan(kind: str, m: int, k: int, f: int,
                                    block_k=p.block_k, block_f=p.block_f,
                                    variant=var, interpret=False)
             args = (xs, cs, cn)
+        elif kind == "pruned":
+            var = resolve_variant(k, p, variant)
+            xn = jax.ShapeDtypeStruct((mp, 1), jnp.float32)
+            skip = jax.ShapeDtypeStruct(
+                (mp // p.block_m, kp // p.block_k), jnp.int32)
+            fn = functools.partial(_llp.lloyd_step_pruned, block_m=p.block_m,
+                                   block_k=p.block_k, block_f=p.block_f,
+                                   variant=var, interpret=False)
+            args = (xs, cs, cn, xn, meta, skip)
         elif kind == "lloyd":
             var = resolve_variant(k, p, variant)
             fn = functools.partial(_ll.lloyd_step, block_m=p.block_m,

@@ -214,6 +214,54 @@ class TestLint:
         """)
         assert found == []
 
+    def test_unregistered_state_dataclass_is_caught(self):
+        found = self._lint("""
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class BoundsState:
+                ub: object
+        """, relpath="src/repro/kernels/fixture.py")
+        assert _rules(found) == {"pytree-state"}
+
+    def test_registered_state_dataclass_passes(self):
+        found = self._lint("""
+            import dataclasses
+            import jax
+
+            @dataclasses.dataclass(frozen=True)
+            class BoundsState:
+                ub: object
+
+            jax.tree_util.register_pytree_node(
+                BoundsState, lambda b: ((b.ub,), None),
+                lambda _, ch: BoundsState(*ch))
+        """, relpath="src/repro/kernels/fixture.py")
+        assert found == []
+
+    def test_non_state_dataclass_is_exempt(self):
+        """Static descriptors (KernelPlan, BufferPlan) never cross a jit
+        boundary — only the ``*State`` naming convention is held to the
+        registration requirement."""
+        found = self._lint("""
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class BufferPlan:
+                nbytes: int
+        """, relpath="src/repro/kernels/fixture.py")
+        assert found == []
+
+    def test_pytree_state_pragma_suppresses(self):
+        found = self._lint("""
+            import dataclasses
+
+            @dataclasses.dataclass
+            class HostOnlyState:  # analysis: allow=pytree-state
+                log: list
+        """, relpath="src/repro/kernels/fixture.py")
+        assert found == []
+
     def test_syntax_error_reports_parse_rule(self):
         found = lint.lint_source("def broken(:\n", "src/repro/api/x.py")
         assert _rules(found) == {"parse"}

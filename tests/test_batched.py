@@ -266,15 +266,15 @@ class TestBatchedAutotune:
         _, r = cache.lookup(256, 8, 32, kind="lloyd")
         assert (r.block_m, r.block_k, r.block_f) != (512, 128, 256)
 
-    def test_v4_roundtrip_with_batch_bucket(self, tmp_path):
-        path = str(tmp_path / "v4.json")
+    def test_current_schema_roundtrip_with_batch_bucket(self, tmp_path):
+        path = str(tmp_path / "current.json")
         cache = AutotuneCache(path)
         cache.put(256, 8, 32, KernelParams(256, 128, 128), kind="batched",
                   variant="batched", batch=64)
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] == SCHEMA_VERSION == 4
+        assert on_disk["schema"] == SCHEMA_VERSION == 5
         assert batch_bucket(64) == "b6"
         assert on_disk["kinds"]["batched/float32/b6"][
             shape_bucket(256, 8, 32)] == ["batched", 256, 128, 128]
@@ -282,10 +282,10 @@ class TestBatchedAutotune:
                                           batch=64)
         assert v == "batched" and p.block_m == 256
 
-    def test_v3_file_upgrades_to_v4(self, tmp_path):
+    def test_v3_file_upgrades_to_current(self, tmp_path):
         """v3 (kind/dtype keys, no batch axis) -> load -> lookup -> save ->
-        v4 round trip: every v3 winner lands in bucket b0 of its
-        kind/dtype and keeps serving single-problem lookups."""
+        current-schema round trip: every v3 winner lands in bucket b0 of
+        its kind/dtype and keeps serving single-problem lookups."""
         path = str(tmp_path / "v3.json")
         bucket = shape_bucket(4096, 100, 128)
         with open(path, "w") as fh:
@@ -304,7 +304,7 @@ class TestBatchedAutotune:
         cache.save()
         with open(path) as fh:
             upgraded = json.load(fh)
-        assert upgraded["schema"] == 4
+        assert upgraded["schema"] == SCHEMA_VERSION
         assert upgraded["kinds"]["lloyd/bfloat16/b0"][bucket] == \
             ["smallk", 512, 128, 128]
 

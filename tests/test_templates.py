@@ -205,16 +205,16 @@ class TestVariantAwareSelection:
         assert tbf["total"] < t32["total"]
 
 
-class TestCacheSchemaV4:
-    def test_v4_roundtrip_with_variant_and_dtype(self, tmp_path):
-        path = str(tmp_path / "v3.json")
+class TestCacheSchema:
+    def test_current_roundtrip_with_variant_and_dtype(self, tmp_path):
+        path = str(tmp_path / "current.json")
         cache = AutotuneCache(path)
         cache.put(4096, 100, 128, KernelParams(512, 128, 128),
                   kind="lloyd", dtype=jnp.bfloat16, variant="smallk")
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] == SCHEMA_VERSION == 4
+        assert on_disk["schema"] == SCHEMA_VERSION == 5
         assert on_disk["kinds"]["lloyd/bfloat16/b0"][
             shape_bucket(4096, 100, 128)] == ["smallk", 512, 128, 128]
         fresh = AutotuneCache(path)
@@ -236,15 +236,16 @@ class TestCacheSchemaV4:
         # the bf16 template never inherits the f32 winner
         _, q = cache.lookup(2048, 64, 64, kind="lloyd", dtype=jnp.bfloat16)
         assert (q.block_m, q.block_k, q.block_f) != (128, 128, 256)
-        # and upgrading on save produces a v3 file that round-trips
+        # and upgrading on save produces a current-schema file that
+        # round-trips
         cache.save()
         with open(path) as fh:
             upgraded = json.load(fh)
-        assert upgraded["schema"] == 4
+        assert upgraded["schema"] == SCHEMA_VERSION
         assert upgraded["kinds"]["lloyd/float32/b0"][bucket] \
             == ["generic", 128, 128, 256]
 
-    def test_v1_chain_upgrades_to_v4(self, tmp_path):
+    def test_v1_chain_upgrades_to_current(self, tmp_path):
         """v1 -> load -> save -> v3 -> load: the winner survives the whole
         schema chain under (assign, generic, float32)."""
         path = str(tmp_path / "v1.json")
