@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-smoke bench-check bench-ft bench-batched \
-        quickstart docs docs-check lint typecheck analysis static
+        bench-init quickstart docs docs-check lint typecheck analysis static
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -27,13 +27,21 @@ bench:           ## all paper-figure benchmark modules
 bench-smoke:     ## Fig. 7 ladder at tiny shapes (interpret-mode Pallas rung)
 	$(PY) -m benchmarks.bench_stepwise --smoke --model --json BENCH_stepwise.json
 
-bench-check:     ## regen smoke artifact, gate vs committed baseline (>25% = fail)
+bench-check:     ## regen smoke artifacts, gate vs committed baselines (>25% = fail)
 	git show HEAD:BENCH_stepwise.json > /tmp/bench_stepwise_baseline.json
+	git show HEAD:BENCH_init.json > /tmp/bench_init_baseline.json
 	$(MAKE) bench-smoke
+	$(MAKE) bench-init
 	$(PY) -m benchmarks.check_regression /tmp/bench_stepwise_baseline.json \
 	    BENCH_stepwise.json --rung fig7_v5_onepass \
 	    --rung fig7_v7_ft_onepass --rung fig7_v8_batched \
-	    --rung fig7_v9_pruned --max-ratio 1.25
+	    --rung fig7_v9_pruned --rung fig7_v6_smallk \
+	    --rung fig7_v10_int8 --rung fig7_v11_dbuf --max-ratio 1.25
+	$(PY) -m benchmarks.check_regression /tmp/bench_init_baseline.json \
+	    BENCH_init.json --rung init_fused_vs_vmapped --max-ratio 1.25
+
+bench-init:      ## fused k-means++ seeding vs vmapped baseline (B=64 small problems)
+	$(PY) -m benchmarks.bench_init --json BENCH_init.json
 
 bench-ft:        ## Fig. 15/16 FT overhead (incl. one-pass FT vs unprotected)
 	$(PY) -m benchmarks.bench_ft_overhead

@@ -1,0 +1,110 @@
+"""Fused k-means++ D² seeding vs the vmapped per-problem path.
+
+The batched estimator's ``init="kmeans++"`` runs ``jax.vmap(init_kmeanspp)``
+— per round and per problem a full elementwise distance recompute plus a
+``jax.random.choice`` categorical draw whose cumulative distribution is
+re-materialized over all N weights every round.  ``init="kmeans++-fused"``
+(kernels/kmeanspp_init.py) replaces the round with one fused distance +
+tile-partial-sum pass and finishes the draw with a two-level inverse CDF in
+O(B·(T + block_n)) instead of O(B·N).
+
+Both paths are timed exactly as ``BatchedKMeans.init_centroids`` invokes
+them during a fit — an eager top-level call per fit (the vmapped baseline
+pays its eager vmap-of-jit dispatch, the fused path its cached-jit
+dispatch), because the per-fit init cost in the many-small-problems regime
+is the thing the fused kernel exists to cut.
+
+Rung: ``init_fused_vs_vmapped`` at B=64 small problems. Off-TPU the round
+runs through the tile-mirrored XLA twin (same selection protocol, same
+chosen indices as the Pallas kernel — tests/test_seeding.py pins that), so
+the rung is a compiled perf point and ``check_regression`` may guard it
+against the committed ``BENCH_init.json``.
+
+CLI:
+  --smoke        tinier batch (CI wiring)
+  --json PATH    write rows + shapes to PATH (CI artifact)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core.kmeans import init_kmeanspp
+from repro.kernels.kmeanspp_init import init_kmeanspp_fused
+
+# B=64 small problems (the acceptance regime): seeding dominated by the
+# per-round categorical machinery, not the distance GEMM.
+B, N, F, K = 64, 384, 16, 16
+SMOKE_B, SMOKE_N, SMOKE_F, SMOKE_K = 8, 256, 16, 8
+
+# a second, larger point so scaling of the win is visible in the artifact
+B2, N2, F2, K2 = 64, 2048, 32, 16
+
+
+def _keys(b: int) -> jax.Array:
+    return jax.vmap(jax.random.PRNGKey)(jnp.arange(b, dtype=jnp.uint32))
+
+
+def _pair(b: int, n: int, f: int, k: int, *, iters: int) -> tuple[float, float]:
+    """(vmapped, fused) seconds per init call, production invocation."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, n, f), jnp.float32)
+    keys = _keys(b)
+    t_vm = time_call(
+        lambda: jax.vmap(init_kmeanspp, in_axes=(0, 0, None))(keys, x, k),
+        iters=iters, warmup=2)
+    t_fu = time_call(lambda: init_kmeanspp_fused(keys, x, k),
+                     iters=iters, warmup=2)
+    return t_vm, t_fu
+
+
+def run(smoke: bool = False) -> list[str]:
+    """run.py contract: the printable CSV rows."""
+    return _collect(smoke=smoke)[0]
+
+
+def _collect(smoke: bool = False) -> tuple[list[str], dict]:
+    b, n, f, k = (SMOKE_B, SMOKE_N, SMOKE_F, SMOKE_K) if smoke \
+        else (B, N, F, K)
+    iters = 5 if smoke else 15
+    out = []
+    t_vm, t_fu = _pair(b, n, f, k, iters=iters)
+    out.append(row("init_fused_vs_vmapped", t_fu,
+                   f"B={b};shape=({n},{f});K={k};"
+                   f"vmapped_us={t_vm * 1e6:.1f};"
+                   f"speedup=x{t_vm / t_fu:.2f}"))
+    shapes = {"small": [b, n, f, k]}
+    if not smoke:
+        t_vm2, t_fu2 = _pair(B2, N2, F2, K2, iters=7)
+        out.append(row("init_fused_vs_vmapped_large", t_fu2,
+                       f"B={B2};shape=({N2},{F2});K={K2};"
+                       f"vmapped_us={t_vm2 * 1e6:.1f};"
+                       f"speedup=x{t_vm2 / t_fu2:.2f}"))
+        shapes["large"] = [B2, N2, F2, K2]
+    payload = {
+        "shapes": shapes,
+        "smoke": smoke,
+        "interpret_rungs": [],      # both paths run compiled XLA off-TPU
+        "rows": [r.split(",", 2) for r in out],
+    }
+    return out, payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny batch (CI)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + shapes to PATH (CI artifact)")
+    args = ap.parse_args(argv)
+    rows, payload = _collect(smoke=args.smoke)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,16 @@ Usage::
 rung (``fig7_v7_ft_onepass`` — the protected path must not quietly drift
 back toward two-pass cost), the batched many-problem rung
 (``fig7_v8_batched`` — one launch for B problems must not quietly decay
-toward loop-of-launches cost) and the pruned rung (``fig7_v9_pruned`` —
-the bounds bookkeeping must not eat the skipped-GEMM win). A rung missing
+toward loop-of-launches cost), the pruned rung (``fig7_v9_pruned`` —
+the bounds bookkeeping must not eat the skipped-GEMM win), the compiled
+small-K rung (``fig7_v6_smallk``), the int8 template rung
+(``fig7_v10_int8`` — the quantize/scale-correct epilogue must not eat the
+low-precision win) and the double-buffered one-pass rung
+(``fig7_v11_dbuf`` — the stash pipelining rework must not change the
+analogue's cost). The fused-seeding rung (``init_fused_vs_vmapped``)
+lives in ``BENCH_init.json`` and is guarded by a second invocation
+against that artifact (see the Makefile ``bench-check`` target). A rung
+missing
 from the *baseline* is skipped (it was just added); a rung missing from the
 *new* artifact is an error (a ladder rung silently disappeared). Rows whose
 recorded time is 0 (model rows) are rejected as guards.
@@ -30,7 +38,8 @@ import json
 import sys
 
 DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass", "fig7_v8_batched",
-                 "fig7_v9_pruned"]
+                 "fig7_v9_pruned", "fig7_v6_smallk", "fig7_v10_int8",
+                 "fig7_v11_dbuf"]
 
 
 def _times(payload: dict) -> dict[str, float]:

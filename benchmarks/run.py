@@ -13,6 +13,7 @@ import traceback
 MODULES = [
     "benchmarks.bench_stepwise",       # Fig 7
     "benchmarks.bench_batched",        # batched many-problem path (ISSUE 5)
+    "benchmarks.bench_init",           # fused k-means++ seeding (ISSUE 8)
     "benchmarks.bench_shapes",         # Fig 8-11 / 19-20
     "benchmarks.bench_speedup_grid",   # Fig 12
     "benchmarks.bench_params",         # Fig 13/14 + Table I

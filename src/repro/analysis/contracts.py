@@ -14,7 +14,9 @@ kernels implement. Each is checked here statically:
 ``tile-align``      autotune winners respect ``sublane_align(dtype)``
                     and the 128-lane tile rule
 ``f32-accumulate``  16-bit inputs yield f32 distance/sums/counts and
-                    i32 assignment outputs (via ``jax.eval_shape``)
+                    i32 assignment outputs (via ``jax.eval_shape``); the
+                    int8 template's traced plan carries an int32
+                    accumulator and emits only f32/i32
 ``flags``           capability flags vs ``inspect.signature`` and the
                     abstract-eval output arity/batch axis
 ``intervals``       ``protected_intervals``/``kernel_kind`` vs the FT
@@ -64,6 +66,8 @@ def _default_vmem_models() -> dict[str, VmemModel]:
         "lloyd_ft": ops.lloyd_ft_vmem_bytes,
         "batched": ops.lloyd_batched_vmem_bytes,
         "pruned": ops.pruned_vmem_bytes,
+        "int8": lambda p, k, f, dt: ops.int8_vmem_bytes(p),
+        "init": lambda p, k, f, dt: ops.init_vmem_bytes(p, f),
     }
 
 
@@ -94,7 +98,13 @@ def check_vmem_models(
                 "contracts", "vmem-model", file=src,
                 message=f"kernel kind {kind!r} has no declared VMEM model"))
             continue
-        for dtype in dtypes:
+        # Per-kind dtype set: the f32 template family is checked at every
+        # requested dtype; a fixed-dtype kind (int8 tiles are int8 by
+        # construction) falls back to its own dtypes when the requested
+        # ones don't apply, so passing ("float32",) still covers it.
+        allowed = ops.PLAN_KIND_DTYPES.get(kind, tuple(dtypes))
+        kind_dtypes = [d for d in dtypes if d in allowed] or list(allowed)
+        for dtype in kind_dtypes:
             dt = jnp.dtype(dtype)
             for (m, k, f) in shapes:
                 batch = 8 if kind == "batched" else 1
@@ -114,6 +124,26 @@ def check_vmem_models(
                 declared = int(model(p, k, f, dt))
                 plan = plan_fn(kind, m, k, f, p, dtype=dt, batch=batch)
                 implied = plan.vmem_bytes()
+                if kind == "int8":
+                    # i32-accumulate mirror of the f32-under-16-bit rule:
+                    # i8 x i8 tile products overflow anything narrower, so
+                    # the traced plan must carry an int32 VMEM accumulator
+                    # and emit only f32/i32 outputs.
+                    if not any(b.dtype == "int32" for b in plan.scratch):
+                        out.append(Violation(
+                            "contracts", "f32-accumulate", file=src,
+                            message=f"int8 template must accumulate in an "
+                                    f"int32 VMEM scratch; traced scratch "
+                                    f"dtypes "
+                                    f"{[b.dtype for b in plan.scratch]}: "
+                                    f"{cell}"))
+                    bad = [b.dtype for b in plan.outputs
+                           if b.dtype not in ("float32", "int32")]
+                    if bad:
+                        out.append(Violation(
+                            "contracts", "f32-accumulate", file=src,
+                            message=f"int8 template must emit f32/i32 "
+                                    f"outputs, got {bad}: {cell}"))
                 tol = max(VMEM_ATOL, int(VMEM_RTOL * implied))
                 if abs(declared - implied) > tol:
                     out.append(Violation(

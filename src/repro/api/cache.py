@@ -10,20 +10,24 @@ and is passed per-estimator (``KMeans(..., autotune=cache)``), so two
 estimators can run with different tables in one process and tests get a
 fresh cache per case.
 
-Schema v5: entries are keyed by *kernel kind, compute dtype and batch
+Schema v6: entries are keyed by *kernel kind, compute dtype and batch
 bucket* as well as shape bucket, and each winner records its *template
 variant* alongside the tiles::
 
-    {"schema": 5,
+    {"schema": 6,
      "kinds": {"assign/float32/b0":  {"14-7-7": ["smallk", 256, 128, 128]},
                "lloyd/bfloat16/b0":  {...},
                "pruned/float32/b0":  {"14-7-7": ["generic", 256, 128, 128]},
+               "int8/int8/b0":       {"14-7-7": ["generic", 256, 128, 512]},
                "batched/float32/b6": {"8-3-5": ["batched", 256, 128, 128]}}}
 
-v5 extends v4's *kind vocabulary* (``ops.PLAN_KINDS`` gains ``pruned``,
-the bounds-carrying one-pass kernel) without changing the entry format, so
-v4 files load unchanged; the version bump marks that a v5 table may hold
-``pruned/...`` keys an older runtime would reject at ``select_params``.
+v6, like v5 before it, extends the *kind vocabulary* without changing the
+entry format: ``ops.PLAN_KINDS`` gains ``int8`` (the quantized distance
+template, always keyed under dtype ``int8``) and ``init`` (the fused
+k-means++ seeding kernel). v5 extended v4 the same way with ``pruned``.
+v4/v5 files load unchanged; the version bump marks that a v6 table may
+hold ``int8/...`` or ``init/...`` keys an older runtime would reject at
+``select_params``.
 
 The assignment-only kernel, the one-pass Lloyd kernel and the one-pass FT
 kernel (``lloyd_ft``: one-pass footprint plus checksum scratch and the
@@ -40,7 +44,7 @@ Older files still load: v4 files pass through untouched (same entry
 format), v3 files (kind/dtype keys, no batch axis) map to bucket ``b0``
 of their kind/dtype, v2 files (kind-keyed, pre-dtype) are interpreted as
 f32 winners of the ``generic`` template, and v1 files (flat bucket ->
-blocks) as f32 ``assign``-kind generic winners; all upgrade to v5 on
+blocks) as f32 ``assign``-kind generic winners; all upgrade to v6 on
 ``save()``.
 """
 from __future__ import annotations
@@ -59,7 +63,7 @@ _DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "core", "autotune_table.json")
 _PATH_ENV = "REPRO_AUTOTUNE_TABLE"   # still honoured, but only here
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 _DEFAULT_DTYPE = "float32"
 _LEGACY_VARIANT = "generic"
 
@@ -113,8 +117,9 @@ class AutotuneCache:
 
     @staticmethod
     def _upgrade(raw: Any) -> dict[str, dict[str, list]]:
-        """Any on-disk schema -> the current in-memory shape (v4 and v5
-        share the entry format; v5 only widens the kind vocabulary)."""
+        """Any on-disk schema -> the current in-memory shape (v4, v5 and
+        v6 share the entry format; v5/v6 only widen the kind
+        vocabulary)."""
         if isinstance(raw, dict) and raw.get("schema", 1) >= 4:
             return {k: dict(v) for k, v in raw["kinds"].items()}
         if isinstance(raw, dict) and raw.get("schema", 1) == 3:

@@ -28,7 +28,7 @@ from repro.api.registry import AssignmentBackend
 from repro.kernels import ops, ref
 
 _INITS = ("kmeans++", "random")
-_COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
+_COMPUTE_DTYPES = ("float32", "bfloat16", "float16", "int8")
 
 # Row-chunk size for one-shot inference (predict/transform/score): bounds
 # the padded working set on large inputs instead of materializing a full
@@ -92,11 +92,19 @@ class KMeans:
         Full-batch ``fit`` runs the Lloyd loop device-resident in chunks
         of this many iterations; the host observes progress — and replays
         ``on_iteration`` — only at chunk boundaries.
-    compute_dtype : {"float32", "bfloat16", "float16"}, default="float32"
-        Kernel compute dtype. X and the centroids are cast to this dtype
-        at the kernel boundary (paper §III-B's dtype-templated kernels);
-        accumulators, distances, counts and the stored
-        ``cluster_centers_`` stay f32.
+    compute_dtype : {"float32", "bfloat16", "float16", "int8"}, \
+            default="float32"
+        Kernel compute dtype. For the float dtypes, X and the centroids
+        are cast at the kernel boundary (paper §III-B's dtype-templated
+        kernels); accumulators, distances, counts and the stored
+        ``cluster_centers_`` stay f32. ``"int8"`` selects the quantized
+        distance template instead: X is per-row symmetrically quantized
+        once per fit (centroids per iteration, since they move), the
+        distance GEMM runs on int8 operands, and the scale correction,
+        norms, argmin and the centroid update all stay f32 — so no data
+        is ever ``astype``'d to int8. int8 needs an unprotected policy
+        (``FaultPolicy.off()``): the quantized template has no FT
+        variant.
     predict_chunk_rows : int, optional
         Row-chunk size for one-shot inference (predict/transform/score);
         ``None`` = module default (65 536). Bounds the padded working set
@@ -181,7 +189,21 @@ class KMeans:
         self.predict_chunk_rows = predict_chunk_rows
         self.random_state = random_state
 
+        is_int8 = self.compute_dtype == jnp.int8
+        if is_int8 and backend is None:
+            # the quantized template is assignment-only: Pallas kernel on
+            # TPU, its bit-compatible XLA analogue elsewhere. The policy
+            # still validates the pick (int8 has no FT variant, so a
+            # protected policy is rejected there).
+            backend = "int8" if ops.on_tpu() else "int8_xla"
         self._backend: AssignmentBackend = self.fault.resolve_backend(backend)
+        if is_int8 != self._backend.supports_int8:
+            raise ValueError(
+                f"backend {self._backend.name!r} "
+                + ("does not consume int8-quantized operands; pick a "
+                   "supports_int8 backend or drop compute_dtype='int8'"
+                   if is_int8 else
+                   "is an int8 template and needs compute_dtype='int8'"))
         self._use_dmr = self.fault.dmr_enabled(self._backend)
         if self.fault.update_dmr and self._backend.fuses_update:
             # DMR was the two-pass pipeline's update protection; one-pass
@@ -224,7 +246,13 @@ class KMeans:
                 "partial_fit() first")
 
     def _cast(self, a: jax.Array) -> jax.Array:
-        """Cast to the compute dtype at the kernel boundary (no-op f32)."""
+        """Cast to the compute dtype at the kernel boundary (no-op f32).
+
+        ``int8`` is quantization, not a cast: the backend quantizes per
+        row itself (``astype(int8)`` would truncate the data), so the
+        int8 kernel boundary keeps X and the centroids f32."""
+        if self.compute_dtype == jnp.int8:
+            return a if a.dtype == jnp.float32 else a.astype(jnp.float32)
         return a if a.dtype == self.compute_dtype else \
             a.astype(self.compute_dtype)
 
@@ -374,6 +402,10 @@ class KMeans:
         backend = self._backend
         takes_inj = backend.takes_injection
         takes_params = backend.takes_params
+        # int8 backends consume the QuantPlan itself even when they take
+        # no tile params (the XLA analogue reuses the per-fit row
+        # quantization instead of re-quantizing X every iteration)
+        takes_plan = takes_params or backend.supports_int8
 
         if backend.supports_bounds:
             # Bounds-carrying variant: the BoundsState rides in the scan
@@ -391,7 +423,7 @@ class KMeans:
                     centroids, am, inertia, done, det, bounds = carry
 
                     def live(_: None) -> tuple:
-                        xa = plan if takes_params else plan.x
+                        xa = plan if takes_plan else plan.x
                         out = backend(xa, self._cast(centroids),
                                       params=params if takes_params
                                       else None, bounds=bounds)
@@ -438,7 +470,7 @@ class KMeans:
                 inj, t = xs
 
                 def live(_: None) -> tuple:
-                    xa = plan if takes_params else plan.x
+                    xa = plan if takes_plan else plan.x
                     out = backend(xa, self._cast(centroids),
                                   params=params if takes_params else None,
                                   inj=inj if takes_inj else None)
@@ -542,7 +574,13 @@ class KMeans:
         # plan is built in the compute dtype so the per-iteration cost of a
         # bf16/fp16 fit is zero casts of X — only the (K, F) centroids are
         # cast per step.
-        plan = ops.plan_data(self._cast(x), params)
+        if self._backend.supports_int8:
+            # quantize + pad once per fit; QuantPlan.x keeps the original
+            # samples, so the two-pass centroid update and empty-cluster
+            # reseeding stay full precision
+            plan: Any = ops.plan_data_int8(self._cast(x), params)
+        else:
+            plan = ops.plan_data(self._cast(x), params)
         # bounds-carrying backends start every fit from a fresh (all-
         # compute) state: a warm start / from_state restore never inherits
         # bounds, so a centroid hot-swap can't leave stale Hamerly bounds

@@ -29,7 +29,8 @@ class BackendCapabilityError(TypeError):
 # Capability flags, in rendering order (also the machine-readable contract
 # vocabulary consumed by repro.analysis.contracts).
 _FLAG_COLUMNS = ("supports_ft", "takes_params", "takes_injection",
-                 "fuses_update", "supports_batch", "supports_bounds")
+                 "fuses_update", "supports_batch", "supports_bounds",
+                 "supports_int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +63,13 @@ class AssignmentBackend:
                      tile and seeds the bounds; anything that moves
                      centroids outside the backend's own update must pass a
                      fresh state.
+    supports_int8:   quantized-distance backend — the distance GEMM runs
+                     on per-row int8-quantized operands (the int8 kernel
+                     template or its f32-carrier XLA analogue); ``x`` may
+                     be a prebuilt :class:`~repro.kernels.ops.QuantPlan`.
+                     The argmin is bit-exact vs the f32 backends on
+                     quantization-safe data and error-bounded on floats;
+                     tiles come from the ``int8`` autotune table.
     bounds_init:     for ``supports_bounds`` backends, a callable
                      ``(m, k, f, params=None, *, dtype=...) -> state``
                      building the fresh (all-invalid) bounds state the
@@ -76,6 +84,7 @@ class AssignmentBackend:
     fuses_update: bool = False
     supports_batch: bool = False
     supports_bounds: bool = False
+    supports_int8: bool = False
     bounds_init: Optional[Callable] = None
     doc: str = ""
 
@@ -87,6 +96,8 @@ class AssignmentBackend:
         VMEM footprints and traffic profiles differ, so winners must not
         cross. Only meaningful when ``takes_params`` is True, but derived
         from the capability flags either way."""
+        if self.supports_int8:
+            return "int8"
         if self.supports_batch:
             return "batched"
         if self.supports_bounds:
@@ -221,7 +232,8 @@ def render_markdown() -> str:
     backends = list_backends()
     short = {"supports_ft": "ft", "takes_params": "params",
              "takes_injection": "inject", "fuses_update": "one-pass",
-             "supports_batch": "batch", "supports_bounds": "pruned"}
+             "supports_batch": "batch", "supports_bounds": "pruned",
+             "supports_int8": "int8"}
     lines = [_MD_HEADER]
     lines.append("| backend | " + " | ".join(short[c] for c in _FLAG_COLUMNS)
                  + " | kernel kind | protected intervals | description |")
@@ -243,7 +255,10 @@ def render_markdown() -> str:
                  "problem stacks (`supports_batch`); **pruned** = carries "
                  "triangle-inequality bounds between iterations and "
                  "returns the 7-tuple extended by `(new_bounds, "
-                 "prune_frac)` (`supports_bounds`). *Kernel kind* is the "
+                 "prune_frac)` (`supports_bounds`); **int8** = runs the "
+                 "distance GEMM on per-row int8-quantized operands and "
+                 "accepts `QuantPlan` inputs (`supports_int8`). "
+                 "*Kernel kind* is the "
                  "autotune table the backend's tiles come from; *protected "
                  "intervals* counts the independently verified SEU "
                  "intervals one step exposes to an injection campaign.")

@@ -29,7 +29,7 @@ from repro.api.registry import (AssignmentBackend, BackendCapabilityError,
                                 get_backend)
 from repro.kernels import ops
 
-_INITS = ("kmeans++", "random")
+_INITS = ("kmeans++", "random", "kmeans++-fused")
 _COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
 
 
@@ -113,9 +113,14 @@ class BatchedKMeans:
         freezes once ``||C_b' - C_b||_F < tol``. Frozen problems stop
         updating (their carry passes through the scan unchanged) but the
         batch keeps stepping until every problem froze or ``max_iter``.
-    init : {"kmeans++", "random"}, default="kmeans++"
+    init : {"kmeans++", "random", "kmeans++-fused"}, default="kmeans++"
         Per-problem seeding; problem ``b`` draws from its own key (see
-        ``random_state``).
+        ``random_state``). ``"kmeans++-fused"`` runs D² sampling through
+        the fused round kernel (one launch per round for the whole batch,
+        tiled inverse-CDF selection) instead of B vmapped categorical
+        draws — same distribution, different stream consumption, so its
+        seeds are reproducible against itself but not against
+        ``"kmeans++"``.
     backend : str, optional
         Pin a registered backend by name; it must declare
         ``supports_batch=True``. Default: the batched Pallas kernel
@@ -278,6 +283,9 @@ class BatchedKMeans:
         from repro.core.kmeans import init_kmeanspp, init_random
         if keys is None:
             keys = self._problem_keys(x.shape[0])
+        if self.init == "kmeans++-fused":
+            from repro.kernels.kmeanspp_init import init_kmeanspp_fused
+            return init_kmeanspp_fused(keys, x, self.n_clusters)
         fn = init_kmeanspp if self.init == "kmeans++" else init_random
         return jax.vmap(fn, in_axes=(0, 0, None))(keys, x, self.n_clusters)
 

@@ -11,6 +11,14 @@ Each implementation maps (x (M, F), c (K, F)) ->
   gemm_fused   paper V2/V3 analogue on XLA: one jit so XLA fuses the GEMM
                epilogue with the reduction (cuML-analogue baseline).
   fused        paper V4/V5: the Pallas fused kernel (MXU + in-VMEM argmin).
+  int8         quantized distance template, one dtype notch past the
+               paper's fp16 floor: per-row symmetric int8 quantization of
+               X and C, i8 x i8 -> i32 MXU tiles, f32 scale correction +
+               exact norm terms in the epilogue. Bit-exact argmin vs the
+               f32 backends on quantization-safe data, error-bounded on
+               floats; accepts a per-fit ``ops.QuantPlan``.
+  int8_xla     XLA analogue of the int8 template (f32-carrier GEMM over
+               the same quantized integers; non-TPU fast path).
   fused_ft     §IV: fused kernel + dual-checksum ABFT online correction.
   abft_offline Wu-et-al-style baseline: checksummed GEMM *without* fusion —
                detection happens on the materialized product (the scheme the
@@ -99,8 +107,10 @@ def assign_gemm_fused(x: jax.Array, c: jax.Array):
 def _row_norms(x) -> jax.Array:
     """True-distance correction term; reuses the DataPlan's precomputed
     norms instead of re-norming X every iteration. Always f32, like the
-    plan's norms — bf16/fp16 X must not degrade the distance offsets."""
-    if isinstance(x, ops.DataPlan):
+    plan's norms — bf16/fp16 X must not degrade the distance offsets. The
+    QuantPlan's norms are the *unquantized* rows' (exact), matching the
+    int8 template's exact-norm contract."""
+    if isinstance(x, (ops.DataPlan, ops.QuantPlan)):
         return x.xn
     xf = x.astype(jnp.float32)
     return jnp.sum(xf * xf, axis=1)
@@ -115,6 +125,46 @@ def assign_fused_ft(x, c: jax.Array, params=None,
                     inj: Optional[jax.Array] = None):
     am, md, det = ops.fused_assign_ft(x, c, params, inj=inj)
     return am, md + _row_norms(x), det
+
+
+def assign_int8(x, c: jax.Array, params=None):
+    # int8 distance template (one dtype notch past the paper's fp16
+    # floor): per-row symmetric quantization of X and C, i8 x i8 -> i32
+    # tile products, f32 scale correction + exact norm terms in the
+    # epilogue. x may be a raw array or a prebuilt ops.QuantPlan (the
+    # per-fit quantization); centroids are quantized per call (they move
+    # every iteration).
+    am, md = ops.fused_assign_int8(x, c, params)
+    return am, md + _row_norms(x), _zero()
+
+
+@jax.jit
+def assign_int8_xla(x, c: jax.Array):
+    # XLA analogue of the int8 template (non-TPU fast path): the same
+    # per-row quantization and scale-corrected epilogue, with the i8 x i8
+    # product carried in f32 — XLA's CPU int8 GEMM is several times slower
+    # than f32, and the f32 carrier holds the identical integers for any
+    # F <= 1040 (F * 127^2 < 2^24), so numerics match the kernel's int32
+    # accumulator bit-for-bit on quantization-safe data.
+    from repro.dist.compression import quantize_rows
+    if isinstance(x, ops.QuantPlan):
+        qx = x.xq[:x.m, :x.f].astype(jnp.float32)
+        sx = x.sx[:x.m]
+        xn = x.xn
+    else:
+        xf = x.astype(jnp.float32)
+        q, sx = quantize_rows(xf)
+        qx = q.astype(jnp.float32)
+        xn = jnp.sum(xf * xf, axis=1)
+    cf = c.astype(jnp.float32)
+    qc, sc = quantize_rows(cf)
+    cn = jnp.sum(cf * cf, axis=1)
+    cross = jnp.matmul(qx, qc.astype(jnp.float32).T,
+                       precision=jax.lax.Precision.HIGHEST,
+                       preferred_element_type=jnp.float32)
+    d = cn[None, :] - 2.0 * (sx * cross * sc.T)
+    am = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return am, jnp.min(d, axis=1) + xn, _zero()
 
 
 def assign_lloyd(x, c: jax.Array, params=None):
@@ -429,6 +479,16 @@ register_backend(AssignmentBackend(
 register_backend(AssignmentBackend(
     "abft_offline", assign_abft_offline, supports_ft=True,
     doc="Wu-et-al-style baseline: checksummed GEMM, offline verification"))
+register_backend(AssignmentBackend(
+    "int8", assign_int8, takes_params=True, supports_int8=True,
+    doc="int8 distance template: per-row quantized X/C, i8xi8->i32 MXU "
+        "tiles, f32 scale-corrected epilogue with exact norm terms "
+        "(bit-exact argmin on quantization-safe data)"))
+register_backend(AssignmentBackend(
+    "int8_xla", assign_int8_xla, supports_int8=True,
+    doc="XLA analogue of the int8 template: same quantization and "
+        "epilogue, f32-carrier GEMM over the quantized integers (non-TPU "
+        "fast path)"))
 register_backend(AssignmentBackend(
     "lloyd", assign_lloyd, takes_params=True, fuses_update=True,
     doc="one-pass Lloyd Pallas kernel: fused assignment + in-epilogue "

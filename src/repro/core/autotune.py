@@ -48,9 +48,10 @@ import jax.numpy as jnp
 
 from repro import hw as _hw
 from repro.kernels.ops import (PLAN_KINDS, VARIANTS, KernelParams, clamp_params,  # noqa: F401 — VARIANTS re-exported as selection vocabulary
-                               lloyd_batched_vmem_bytes, lloyd_ft_vmem_bytes,
-                               lloyd_vmem_bytes, pruned_vmem_bytes,
-                               sublane_align, _round_up)
+                               init_vmem_bytes, int8_vmem_bytes,
+                               lloyd_batched_vmem_bytes,
+                               lloyd_ft_vmem_bytes, lloyd_vmem_bytes,
+                               pruned_vmem_bytes, sublane_align, _round_up)
 
 # TPU v5e constants — hoisted to repro.hw (shared with roofline/hw.py so the
 # two models can't drift); the old names stay importable from here.
@@ -141,6 +142,18 @@ def feasible(p: KernelParams, dtype=jnp.float32, *, kind: str = "assign",
         vmem = {"lloyd_ft": lloyd_ft_vmem_bytes,
                 "pruned": pruned_vmem_bytes}.get(kind, lloyd_vmem_bytes)
         return vmem(p, k, f, dtype) <= VMEM_BUDGET
+    if kind == "int8":
+        # fixed-dtype template: 1-byte tiles, f32 scale/norm vectors and
+        # the int32 accumulator — its own exact byte model
+        return int8_vmem_bytes(p) <= VMEM_BUDGET
+    if kind == "init":
+        # fused k-means++ round: the d² and tile-sum blocks put block_m
+        # on a lane-tiled axis, so it needs the 128 alignment; features
+        # are fully resident, so feasibility depends on F
+        if shape is None or p.block_m % 128:
+            return False
+        _, _, f = shape
+        return init_vmem_bytes(p, f) <= VMEM_BUDGET
     return p.vmem_bytes(dtype) <= VMEM_BUDGET
 
 
@@ -235,10 +248,29 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
     clustered data reach far higher); the real rate is data- and
     alignment-dependent, which is why pruned winners prefer measure mode
     on clustered inputs.
+
+    The ``int8`` kind scores like ``assign`` with 1-byte x/c streams and
+    the int8 MXU peak (``hw.PEAK_FLOPS_INT8``): callers pass
+    ``dtype=jnp.int8`` and the itemsize/peak lookups do the rest. The f32
+    scale vectors and centroid norms are O(M + K) streams — noise next to
+    the O(M F) tiles — and are not charged.
     """
     if kind == "batched":
         return batch * model_score(m, k, f, p, dtype=dtype, kind="lloyd",
                                    variant="smallk")
+    if kind == "init":
+        # one fused k-means++ D² round is memory-bound: X streams once
+        # against a single centroid row (F MACs per row — VPU work,
+        # nowhere near the MXU), while the norm/d² vectors round-trip.
+        # Tile size matters only through row padding, which is exactly
+        # what this captures; K is not an axis of the round at all.
+        bn = max(128, clamp_params(m, k, f, p, dtype).block_m)
+        mp = _round_up(m, bn)
+        fp = _round_up(f, 128)
+        hbm_bytes = (mp * fp + 4 * mp) * 4     # x tile + xn/d2-in/out/ts
+        # per-grid-step issue cost breaks the tie between tile sizes that
+        # pad M equally — bigger tiles amortize it, like real hardware
+        return float(batch * (hbm_bytes / HBM_BW + (mp // bn) * 1e-7))
     p = clamp_params(m, k, f, p, dtype)
     bytes_per = jnp.dtype(dtype).itemsize
     mp = -(-m // p.block_m) * p.block_m
@@ -297,8 +329,16 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
 
 def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
                   dtype=jnp.float32, kind: str = "assign",
-                  variant: Optional[str] = None, batch: int = 1) -> float:
+                  variant: Optional[str] = None, batch: int = 1,
+                  interpret: Optional[bool] = None) -> float:
     """Median wall-time of the real kernel on the current backend (seconds).
+
+    ``interpret=None`` resolves to the real compiled kernel whenever a TPU
+    backend is present; the Pallas interpreter is only an *explicit*
+    fallback for kernel-path smoke timing off-device (it measures the
+    interpreter, not the kernel — a number that must never be presented as
+    hardware performance, which is why ``benchmarks/check_regression``
+    refuses interpret-mode rungs as guards).
 
     Inputs are seeded-random (all-ones invited constant folding), the
     candidate pipeline is compiled exactly once up front (naively repeating
@@ -315,33 +355,75 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
     timed calls run warmed — the steady state a long fit spends almost all
     its iterations in. Uniform data never prunes, so measuring on it would
     rank every candidate on full-compute time and the pruned kind would
-    never beat the plain one-pass winner."""
-    from repro.kernels.ops import (fused_assign, fused_lloyd,
-                                   fused_lloyd_batched, fused_lloyd_ft,
-                                   fused_lloyd_pruned, init_bounds)
+    never beat the plain one-pass winner.
+
+    The ``int8`` kind feeds float data through the full quantize +
+    int8-template path (``fused_assign_int8``), so the timed number
+    includes the per-call centroid quantization the real iteration pays."""
+    from repro.kernels.ops import (fused_assign, fused_assign_int8,
+                                   fused_lloyd, fused_lloyd_batched,
+                                   fused_lloyd_ft, fused_lloyd_pruned,
+                                   init_bounds, on_tpu)
+    if interpret is None:
+        interpret = not on_tpu()
+    if kind == "init":
+        # time one fused D² round at the candidate's row tile: the round
+        # dominates the seeding loop (selection is O(T + bn) glue), and
+        # batch enters as the B problems of one launch
+        from repro.kernels.kmeanspp_init import (clamp_init_block,
+                                                 kmeanspp_round)
+        bn = clamp_init_block(m, clamp_params(m, k, f, p, dtype).block_m)
+        np_ = _round_up(m, bn)
+        fp_ = _round_up(f, 128)
+        kx, kc = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(kx, (batch, np_, fp_), jnp.float32)
+        xn = jnp.sum(x * x, axis=2)
+        c = jax.random.normal(kc, (batch, 1, fp_), jnp.float32)
+        d2 = xn + 1.0
+        fn_i = jax.jit(functools.partial(kmeanspp_round, block_n=bn,
+                                         interpret=interpret))
+        jax.block_until_ready(fn_i(x, xn, c, d2))
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn_i(x, xn, c, d2))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2]
     kx, kc = jax.random.split(jax.random.PRNGKey(0))
     if kind == "batched":
         x = jax.random.normal(kx, (batch, m, f), dtype)
         c = jax.random.normal(kc, (batch, k, f), dtype)
     elif kind == "pruned":
         x, c = _clustered_data(m, k, f, dtype)
+    elif kind == "int8":
+        # the template quantizes internally; feed it float data
+        x = jax.random.normal(kx, (m, f), jnp.float32)
+        c = jax.random.normal(kc, (k, f), jnp.float32)
     else:
         x = jax.random.normal(kx, (m, f), dtype)
         c = jax.random.normal(kc, (k, f), dtype)
-    p = clamp_params(m, k, f, p, dtype)
+    p = clamp_params(m, k, f, p, jnp.int8 if kind == "int8" else dtype)
     if kind == "batched":    # smallk-style grid: no variant/block_k axis
-        fn = jax.jit(functools.partial(fused_lloyd_batched, params=p))
+        fn = jax.jit(functools.partial(fused_lloyd_batched, params=p,
+                                       interpret=interpret))
     elif kind == "lloyd_ft":   # generic-grid template: no variant axis
-        fn = jax.jit(functools.partial(fused_lloyd_ft, params=p))
+        fn = jax.jit(functools.partial(fused_lloyd_ft, params=p,
+                                       interpret=interpret))
+    elif kind == "int8":
+        fn = jax.jit(functools.partial(fused_assign_int8, params=p,
+                                       variant=variant, interpret=interpret))
     elif kind == "pruned":
         step_p = jax.jit(functools.partial(fused_lloyd_pruned, params=p,
-                                           variant=variant))
+                                           variant=variant,
+                                           interpret=interpret))
         seeded = step_p(x, c, bounds=init_bounds(m, k, f, p, dtype=dtype))
         bounds = seeded[4]   # iteration 1 of 2: the unpruned seeding pass
         fn = functools.partial(step_p, bounds=bounds)
     else:
         step = fused_lloyd if kind == "lloyd" else fused_assign
-        fn = jax.jit(functools.partial(step, params=p, variant=variant))
+        fn = jax.jit(functools.partial(step, params=p, variant=variant,
+                                       interpret=interpret))
     jax.block_until_ready(fn(x, c))          # compile outside the timing
     times = []
     for _ in range(iters):
@@ -384,6 +466,31 @@ def select_params(m: int, k: int, f: int, *, mode: str = "model",
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
     best, best_s = None, float("inf")
+    if kind == "init":
+        # the fused k-means++ round kernel has one tile axis: block_m.
+        # K never enters the round and F is fully resident, so block_k /
+        # block_f are not searched (mirroring how 'batched' drops block_k)
+        seen = set()
+        for p in (space or parameter_space(dtype)):
+            if p.block_m in seen:
+                continue
+            seen.add(p.block_m)
+            if not feasible(p, dtype, kind=kind, shape=(m, k, f)):
+                continue
+            s = (model_score(m, k, f, p, dtype=dtype, kind=kind,
+                             batch=batch)
+                 if mode == "model"
+                 else measure_score(m, k, f, p, dtype=dtype, kind=kind,
+                                    batch=batch))
+            if s < best_s:
+                best, best_s = ("generic", p), s
+        if best is None:
+            raise ValueError(
+                f"no feasible 'init' kernel parameters for shape "
+                f"{(m, k, f)}: every candidate's resident (block_m, F) "
+                f"sample tile exceeds VMEM (the round kernel keeps all of "
+                f"F resident; reduce F or use the vmapped seeding path)")
+        return best
     if kind == "batched":
         seen = set()
         for p in (space or parameter_space(dtype)):

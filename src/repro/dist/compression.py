@@ -33,6 +33,20 @@ def quantize(x: jax.Array, block: int = BLOCK):
     return q, scale
 
 
+def quantize_rows(x: jax.Array):
+    """Per-row symmetric int8: the blockwise scheme above with the whole
+    last axis as the block (no padding/reshape — one scale per row).
+    Returns (q int8, shape of x; scale f32, last axis collapsed to 1).
+    Rows of integer values in [-127, 127] that pin a +-127 entry get scale
+    exactly 1.0, making the quantization an identity — the property the
+    int8 kernel template's bit-exactness contract rests on."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def dequantize(q: jax.Array, scale: jax.Array, n: int | None = None):
     x = (q.astype(jnp.float32) * scale).reshape(q.shape[:-2] + (-1,))
     return x if n is None else x[..., :n]

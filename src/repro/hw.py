@@ -10,6 +10,9 @@ from typing import Any
 
 PEAK_FLOPS_BF16: float = 197e12  # FLOP/s (MXU peak at 2-byte dtypes)
 PEAK_FLOPS_F32: float = PEAK_FLOPS_BF16 / 2
+# int8 MXU path: double the bf16 MAC rate (the systolic array packs two
+# 1-byte operands per bf16 lane), accumulating in int32.
+PEAK_FLOPS_INT8: float = PEAK_FLOPS_BF16 * 2
 HBM_BW: float = 819e9           # bytes/s
 ICI_LINK_BW: float = 50e9       # bytes/s per link
 ICI_LINKS: int = 4              # v5e: 4 ICI links per chip (2D torus x2)
@@ -24,7 +27,10 @@ def peak_flops(dtype: Any) -> float:
     """MXU peak for an input dtype. Only bf16 has a native full-rate MXU
     path on v5e; fp16 is upconverted by XLA and runs at ~f32 rate (it
     still halves the HBM/VMEM bytes, which the byte models account for
-    separately), and f32 is half rate."""
+    separately), f32 is half rate, and int8 doubles the bf16 rate (int32
+    accumulation)."""
     import numpy as np
     name = np.dtype(dtype).name
+    if name == "int8":
+        return PEAK_FLOPS_INT8
     return PEAK_FLOPS_BF16 if name == "bfloat16" else PEAK_FLOPS_F32

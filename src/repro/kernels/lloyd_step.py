@@ -62,10 +62,43 @@ from repro.kernels.distance_argmin import MIN_INIT, fold_min, tile_min_argmin
 # contribute to sums/counts.
 META_LEN = 1
 
+# Stash DMA slots: the X-tile stash is issued as an async VMEM copy so the
+# current feature step's MXU product overlaps the previous chunk's store
+# (the emit-pipeline idiom). Two semaphore slots, used round-robin.
+STASH_SLOTS = 2
+
+
+def _stash_dma_start(x_ref, xbuf_ref, sem_ref, f_idx, bf):
+    """Issue this feature chunk's stash as an async copy.
+
+    The previous chunk's copy is drained first — at most one stash is in
+    flight, so the copy issued here overlaps this grid step's MXU product
+    and is waited at the *next* stash (or by ``_stash_dma_wait_last``
+    before the update epilogue reads the buffer). Draining f-1 before
+    issuing f also keeps the revolving input block of f-1 safe to recycle
+    before the pipeline lands chunk f+1 in it.
+    """
+    @pl.when(f_idx >= 1)
+    def _drain_prev():
+        pltpu.make_async_copy(
+            x_ref, xbuf_ref.at[:, pl.ds((f_idx - 1) * bf, bf)],
+            sem_ref.at[(f_idx - 1) % STASH_SLOTS]).wait()
+
+    pltpu.make_async_copy(
+        x_ref, xbuf_ref.at[:, pl.ds(f_idx * bf, bf)],
+        sem_ref.at[f_idx % STASH_SLOTS]).start()
+
+
+def _stash_dma_wait_last(x_ref, xbuf_ref, sem_ref, nf, bf):
+    """Drain the final in-flight stash before an epilogue reads xbuf."""
+    pltpu.make_async_copy(
+        x_ref, xbuf_ref.at[:, pl.ds((nf - 1) * bf, bf)],
+        sem_ref.at[(nf - 1) % STASH_SLOTS]).wait()
+
 
 def _kernel(meta_ref, x_ref, c_ref, cn_ref,
             mind_ref, argmin_ref, sums_ref, counts_ref,
-            acc_ref, xbuf_ref):
+            acc_ref, xbuf_ref, sem_ref):
     """One (bm, bk) distance tile + the fused update epilogue.
 
     meta_ref  : (1,)        SMEM — [true_m]
@@ -78,6 +111,7 @@ def _kernel(meta_ref, x_ref, c_ref, cn_ref,
     counts_ref: (1, kp)     per-row-tile partial cluster counts (output)
     acc_ref   : (bm, bk)    VMEM scratch accumulator for X C^T
     xbuf_ref  : (bm, fp)    VMEM stash of the row tile's feature chunks
+    sem_ref   : (2,)        DMA semaphores for the double-buffered stash
     """
     m_idx = pl.program_id(0)
     c_idx = pl.program_id(1)
@@ -97,10 +131,12 @@ def _kernel(meta_ref, x_ref, c_ref, cn_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # Stash the streamed X tile on its first visit: the update epilogue
-    # reuses it from VMEM instead of a second HBM read.
+    # reuses it from VMEM instead of a second HBM read. The stash is an
+    # async copy overlapping this step's MXU product; it is drained at the
+    # next stash / before the update epilogue reads the buffer.
     @pl.when(c_idx == 0)
     def _stash_x():
-        xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+        _stash_dma_start(x_ref, xbuf_ref, sem_ref, f_idx, bf)
 
     # MXU tile product, f32 accumulation.
     acc_ref[...] += jax.lax.dot_general(
@@ -118,6 +154,7 @@ def _kernel(meta_ref, x_ref, c_ref, cn_ref,
     # product, masking padded sample rows.
     @pl.when(jnp.logical_and(c_idx == nk - 1, f_idx == nf - 1))
     def _update_epilogue():
+        _stash_dma_wait_last(x_ref, xbuf_ref, sem_ref, nf, bf)
         _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
                      m_idx, bm)
 
@@ -141,7 +178,7 @@ def _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
 
 def _kernel_smallk(meta_ref, x_ref, c_ref, cn_ref,
                    mind_ref, argmin_ref, sums_ref, counts_ref,
-                   acc_ref, xbuf_ref):
+                   acc_ref, xbuf_ref, sem_ref):
     """Small-K fast path: padded K is one centroid tile, grid (M/bm, F/bf).
 
     Every row tile is visited exactly once, so there is no revisited
@@ -158,8 +195,9 @@ def _kernel_smallk(meta_ref, x_ref, c_ref, cn_ref,
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Single centroid-tile sweep: every feature step is a first visit.
-    xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+    # Single centroid-tile sweep: every feature step is a first visit, so
+    # every step issues its async stash (overlapping its own MXU product).
+    _stash_dma_start(x_ref, xbuf_ref, sem_ref, f_idx, bf)
 
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
@@ -170,13 +208,14 @@ def _kernel_smallk(meta_ref, x_ref, c_ref, cn_ref,
         local_min, local_arg = tile_min_argmin(acc_ref[...], cn_ref[...], 0)
         mind_ref[...] = local_min       # single visit: direct write
         argmin_ref[...] = local_arg
+        _stash_dma_wait_last(x_ref, xbuf_ref, sem_ref, nf, bf)
         _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
                      m_idx, bm)
 
 
 def _kernel_batched(meta_ref, x_ref, c_ref, cn_ref,
                     mind_ref, argmin_ref, sums_ref, counts_ref,
-                    acc_ref, xbuf_ref):
+                    acc_ref, xbuf_ref, sem_ref):
     """One problem's (bm, kp) tile of the batched grid (B, M/bm, F/bf).
 
     The problem index is the outermost grid dimension: every block spec
@@ -195,6 +234,7 @@ def _kernel_batched(meta_ref, x_ref, c_ref, cn_ref,
     counts_ref: (1, 1, kp)        per-row-tile partial cluster counts
     acc_ref   : (bm, kp)          per-problem VMEM scratch accumulator
     xbuf_ref  : (bm, fp)          VMEM stash of the row tile's chunks
+    sem_ref   : (2,)              DMA semaphores for the async stash
     """
     m_idx = pl.program_id(1)
     f_idx = pl.program_id(2)
@@ -207,8 +247,9 @@ def _kernel_batched(meta_ref, x_ref, c_ref, cn_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # Single centroid-tile sweep per problem: every feature step is a
-    # first visit, so stash unconditionally (smallk rule).
-    xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[0]
+    # first visit, so stash unconditionally (smallk rule) — async, so the
+    # copy overlaps this step's MXU product.
+    _stash_dma_start(x_ref.at[0], xbuf_ref, sem_ref, f_idx, bf)
 
     acc_ref[...] += jax.lax.dot_general(
         x_ref[0], c_ref[0], (((1,), (1,)), ((), ())),
@@ -219,6 +260,7 @@ def _kernel_batched(meta_ref, x_ref, c_ref, cn_ref,
         local_min, local_arg = tile_min_argmin(acc_ref[...], cn_ref[0], 0)
         mind_ref[0] = local_min      # single visit: direct write
         argmin_ref[0] = local_arg
+        _stash_dma_wait_last(x_ref.at[0], xbuf_ref, sem_ref, nf, bf)
         kp = counts_ref.shape[-1]
         rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + m_idx * bm
         valid = (rows < meta_ref[0]).astype(jnp.float32)
@@ -271,6 +313,7 @@ def lloyd_step_batched(
     scratch = [
         pltpu.VMEM((block_m, k), jnp.float32),
         pltpu.VMEM((block_m, f), x.dtype),   # stash in the input dtype
+        pltpu.SemaphoreType.DMA((STASH_SLOTS,)),
     ]
     kernel = pl.pallas_call(
         _kernel_batched,
@@ -335,6 +378,7 @@ def lloyd_step(
     scratch = [
         pltpu.VMEM((block_m, block_k), jnp.float32),
         pltpu.VMEM((block_m, f), x.dtype),   # stash in the input dtype
+        pltpu.SemaphoreType.DMA((STASH_SLOTS,)),
     ]
 
     if variant == "smallk":

@@ -57,7 +57,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import CompilerParams as _CompilerParams
 from repro.kernels.distance_argmin import MIN_INIT, fold_min, tile_min_argmin
 from repro.kernels.distance_argmin_ft import threshold_factor
-from repro.kernels.lloyd_step import _emit_update
+from repro.kernels.lloyd_step import (STASH_SLOTS, _emit_update,
+                                      _stash_dma_start, _stash_dma_wait_last)
 
 # SMEM metadata layout: [true_m] — rows >= true_m are padding and must not
 # contribute to sums/counts.
@@ -104,7 +105,8 @@ def make_injection(*, distance: Optional[tuple] = None,
 def _kernel(meta_ref, inj_ref, x_ref, c_ref, cn_ref,
             mind_ref, argmin_ref, det_ref, sums_ref, counts_ref,
             ucheck_ref, ccheck_ref,
-            acc_ref, col1_ref, col2_ref, row1_ref, row2_ref, xbuf_ref):
+            acc_ref, col1_ref, col2_ref, row1_ref, row2_ref, xbuf_ref,
+            sem_ref):
     """One (bm, bk) distance tile with fused ABFT + the protected update
     epilogue.
 
@@ -122,6 +124,7 @@ def _kernel(meta_ref, inj_ref, x_ref, c_ref, cn_ref,
     ccheck_ref: (1, 2)      expected e1/e2 checksums of the counts
     acc/colN/rowN          : ABFT scratch as in ``distance_argmin_ft``
     xbuf_ref  : (bm, fp)    VMEM stash of the row tile's feature chunks
+    sem_ref   : (2,)        DMA semaphores for the double-buffered stash
     """
     m_idx = pl.program_id(0)
     c_idx = pl.program_id(1)
@@ -146,10 +149,12 @@ def _kernel(meta_ref, inj_ref, x_ref, c_ref, cn_ref,
         row2_ref[...] = jnp.zeros_like(row2_ref)
 
     # Stash the streamed X tile on its first visit: the update epilogue
-    # reuses it from VMEM instead of a second HBM read.
+    # reuses it from VMEM instead of a second HBM read. Async, so the copy
+    # overlaps this step's MXU + checksum products (the double-buffered
+    # stash shared with the unprotected kernel).
     @pl.when(c_idx == 0)
     def _stash_x():
-        xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+        _stash_dma_start(x_ref, xbuf_ref, sem_ref, f_idx, bf)
 
     x = x_ref[...]
     c = c_ref[...]
@@ -248,6 +253,7 @@ def _kernel(meta_ref, inj_ref, x_ref, c_ref, cn_ref,
     def _update_epilogue():
         kp = counts_ref.shape[1]
         fp = xbuf_ref.shape[1]
+        _stash_dma_wait_last(x_ref, xbuf_ref, sem_ref, nf, bf)
         # the one-hot product itself is the unprotected kernel's epilogue,
         # shared verbatim — the bit-identity contract between this kernel,
         # the plain lloyd kernel and the recompute in
@@ -346,6 +352,7 @@ def lloyd_step_ft(
             pltpu.VMEM((block_m, 1), jnp.float32),
             pltpu.VMEM((block_m, 1), jnp.float32),
             pltpu.VMEM((block_m, f), x.dtype),   # stash in the input dtype
+            pltpu.SemaphoreType.DMA((STASH_SLOTS,)),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),

@@ -59,7 +59,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
 from repro.kernels.distance_argmin import MIN_INIT, fold_min, tile_min_argmin
-from repro.kernels.lloyd_step import _emit_update
+from repro.kernels.lloyd_step import (STASH_SLOTS, _emit_update,
+                                      _stash_dma_start, _stash_dma_wait_last)
 
 
 def _tile_bound(meta_ref, xn_ref, local_min, m_idx, bm):
@@ -75,7 +76,7 @@ def _tile_bound(meta_ref, xn_ref, local_min, m_idx, bm):
 
 def _kernel_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
                    mind_ref, argmin_ref, sums_ref, counts_ref, tmin_ref,
-                   acc_ref, xbuf_ref):
+                   acc_ref, xbuf_ref, sem_ref):
     """One (bm, bk) tile of the pruned one-pass iteration.
 
     meta_ref  : (1,)        SMEM — [true_m]
@@ -92,6 +93,7 @@ def _kernel_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
     tmin_ref  : (1, 1)      refreshed Euclidean group bound (output)
     acc_ref   : (bm, bk)    VMEM scratch accumulator for X C^T
     xbuf_ref  : (bm, fp)    VMEM stash of the row tile's feature chunks
+    sem_ref   : (2,)        DMA semaphores for the double-buffered stash
     """
     m_idx = pl.program_id(0)
     c_idx = pl.program_id(1)
@@ -115,10 +117,12 @@ def _kernel_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
         tmin_ref[...] = jnp.full_like(tmin_ref, MIN_INIT)
 
     # The stash is unconditional: the fused update epilogue needs every
-    # feature chunk regardless of which centroid tiles were pruned.
+    # feature chunk regardless of which centroid tiles were pruned. Async,
+    # overlapping whatever this step computes (even a fully pruned step
+    # still pays the stash — it is the update's data, not the GEMM's).
     @pl.when(c_idx == 0)
     def _stash_x():
-        xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+        _stash_dma_start(x_ref, xbuf_ref, sem_ref, f_idx, bf)
 
     # The entire point: no MXU product for pruned tiles.
     @pl.when(live)
@@ -138,13 +142,14 @@ def _kernel_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
     # finalizes the row tile's argmin (skipping only omits losing folds).
     @pl.when(jnp.logical_and(c_idx == nk - 1, f_idx == nf - 1))
     def _update_epilogue():
+        _stash_dma_wait_last(x_ref, xbuf_ref, sem_ref, nf, bf)
         _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
                      m_idx, bm)
 
 
 def _kernel_smallk_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
                           mind_ref, argmin_ref, sums_ref, counts_ref,
-                          tmin_ref, acc_ref, xbuf_ref):
+                          tmin_ref, acc_ref, xbuf_ref, sem_ref):
     """Small-K pruned path: padded K is one centroid tile, grid (M/bm,
     F/bf). A single tile always contains every row's assigned centroid,
     so it can never be skipped — the wrapper forces ``skip`` to zero and
@@ -161,7 +166,7 @@ def _kernel_smallk_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xbuf_ref[:, pl.ds(f_idx * bf, bf)] = x_ref[...]
+    _stash_dma_start(x_ref, xbuf_ref, sem_ref, f_idx, bf)
 
     acc_ref[...] += jax.lax.dot_general(
         x_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
@@ -173,6 +178,7 @@ def _kernel_smallk_pruned(meta_ref, x_ref, c_ref, cn_ref, xn_ref, skip_ref,
         mind_ref[...] = local_min       # single visit: direct write
         argmin_ref[...] = local_arg
         tmin_ref[...] = _tile_bound(meta_ref, xn_ref, local_min, m_idx, bm)
+        _stash_dma_wait_last(x_ref, xbuf_ref, sem_ref, nf, bf)
         _emit_update(meta_ref, argmin_ref, sums_ref, counts_ref, xbuf_ref,
                      m_idx, bm)
 
@@ -222,6 +228,7 @@ def lloyd_step_pruned(
     scratch = [
         pltpu.VMEM((block_m, block_k), jnp.float32),
         pltpu.VMEM((block_m, f), x.dtype),   # stash in the input dtype
+        pltpu.SemaphoreType.DMA((STASH_SLOTS,)),
     ]
 
     if variant == "smallk":

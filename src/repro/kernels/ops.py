@@ -15,8 +15,11 @@ import jax
 import jax.numpy as jnp
 from jax.extend import core as jex_core
 
+from repro.dist.compression import quantize_rows as _quantize_rows
 from repro.kernels import distance_argmin as _da
 from repro.kernels import distance_argmin_ft as _daft
+from repro.kernels import distance_argmin_int8 as _dai
+from repro.kernels import kmeanspp_init as _kpi
 from repro.kernels import lloyd_step as _ll
 from repro.kernels import lloyd_step_ft as _llft
 from repro.kernels import lloyd_step_pruned as _llp
@@ -35,9 +38,12 @@ VARIANTS = ("generic", "smallk")
 
 def sublane_align(dtype: Any) -> int:
     """Minimum second-to-last-dimension tile multiple for a dtype: TPU
-    packs 2-byte dtypes two-per-sublane, so bf16/fp16 tiles need 16 rows
-    where f32 needs 8."""
-    return 16 if jnp.dtype(dtype).itemsize <= 2 else 8
+    packs 2-byte dtypes two-per-sublane (bf16/fp16 tiles need 16 rows where
+    f32 needs 8) and 1-byte dtypes four-per-sublane (int8 needs 32)."""
+    size = jnp.dtype(dtype).itemsize
+    if size == 1:
+        return 32
+    return 16 if size == 2 else 8
 
 
 def _itemsize(dtype: Any) -> int:
@@ -115,6 +121,33 @@ def pruned_vmem_bytes(params: KernelParams, k: int, f: int,
             + 2 * params.block_m * 4 + 3 * 4)
 
 
+def int8_vmem_bytes(params: KernelParams) -> int:
+    """Working-set estimate for the int8 distance template: 1-byte x/c
+    tiles plus the f32 scale vectors and centroid norms (double-buffered
+    inputs), the f32/i32 min/argmin output blocks and the int32 accumulator
+    scratch. Input dtype is fixed (int8 tiles, f32 epilogue operands), so
+    unlike the f32 family this model takes no dtype."""
+    bm, bk, bf = params.block_m, params.block_k, params.block_f
+    ins = bm * bf + bk * bf + 4 * bm + 8 * bk   # x, c int8; sx, sc, cn f32
+    outs = 8 * bm                               # mind f32 + argmin i32
+    scr = 4 * bm * bk                           # int32 accumulator
+    return 2 * ins + outs + scr
+
+
+def init_vmem_bytes(params: KernelParams, f: int) -> int:
+    """Working-set estimate for the fused k-means++ round kernel: one
+    (bn, fp) f32 sample tile with its norms and d² vectors plus the single
+    resident centroid row (double-buffered inputs), and the updated d² and
+    tile-sum output blocks. Features are lane-padded and fully resident
+    (F is not a grid axis), so the model depends on ``f``; ``block_k`` and
+    ``block_f`` are not axes of this kernel at all."""
+    bn = max(128, params.block_m)
+    fp = _round_up(f, 128)
+    ins = 4 * (bn * fp + bn + fp + bn)          # x tile, xn, c row, d2
+    outs = 4 * (bn + 1)                         # updated d2 + tile sum
+    return 2 * ins + outs
+
+
 def resolve_variant(k: int, params: KernelParams,
                     variant: Optional[str] = None) -> str:
     """Template dispatch rule shared with the autotuner: the small-K fast
@@ -175,6 +208,71 @@ def plan_data(x: jax.Array, params: Optional[KernelParams] = None) -> DataPlan:
     fp = _round_up(f, params.block_f)
     xp = jnp.pad(x, ((0, mp - m), (0, fp - f)))
     return DataPlan(x=x, xp=xp, xn=xn, m=m, f=f, params=params)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """Per-fit data plan for the int8 distance template: X quantized per
+    row (scale = max|row|/127, the :mod:`repro.dist.compression` scheme),
+    padded to the block grid, with exact f32 row norms of the *unquantized*
+    samples — quantization, like padding, happens once per fit.
+
+    The quantized values are stored in a *carrier* dtype: int8 on TPU
+    (feeds the MXU int8 path directly), float32 off TPU where XLA's int8
+    matmul is several times slower than f32 — the f32 carrier holds the
+    same integers, and int8 dot products are bit-exact in f32 for any
+    F <= 1040 (F * 127^2 < 2^24).
+
+    x      : (m, f)   the original samples (update pass / reseeding)
+    xq     : (mp, fp) quantized X in the carrier dtype, zero padded
+    sx     : (mp, 1)  f32 per-row scales (1.0 in padded rows)
+    xn     : (m,)     exact row squared norms of the unquantized x, f32
+    m, f   : true (unpadded) dimensions
+    params : the KernelParams the padding was laid out for (None = no
+             Pallas backend in play; xq/sx are unpadded, for the XLA
+             analogue)
+    """
+
+    x: jax.Array
+    xq: jax.Array
+    sx: jax.Array
+    xn: jax.Array
+    m: int
+    f: int
+    params: Optional[KernelParams]
+
+
+jax.tree_util.register_pytree_node(
+    QuantPlan,
+    lambda p: ((p.x, p.xq, p.sx, p.xn), (p.m, p.f, p.params)),
+    lambda aux, kids: QuantPlan(kids[0], kids[1], kids[2], kids[3], *aux))
+
+
+def plan_data_int8(x: jax.Array, params: Optional[KernelParams] = None, *,
+                   carrier: Any = None) -> QuantPlan:
+    """Build the per-fit :class:`QuantPlan` (quantize + pad + norms, once).
+
+    ``carrier=None`` picks the natural carrier for the backend: int8 on
+    TPU, float32 elsewhere (see :class:`QuantPlan`). Tests pin
+    ``carrier=jnp.int8`` to exercise the Pallas template in interpret mode.
+    ``params=None`` skips padding (the XLA-analogue backend consumes the
+    quantized rows unpadded); the resulting plan cannot feed the Pallas
+    template.
+    """
+    if carrier is None:
+        carrier = jnp.int8 if on_tpu() else jnp.float32
+    m, f = x.shape
+    xf = x.astype(jnp.float32)
+    xn = jnp.sum(xf ** 2, axis=1)
+    q, sx = _quantize_rows(xf)
+    if params is None:
+        return QuantPlan(x=x, xq=q.astype(carrier), sx=sx, xn=xn,
+                         m=m, f=f, params=None)
+    mp = _round_up(m, params.block_m)
+    fp = _round_up(f, params.block_f)
+    xq = jnp.pad(q.astype(carrier), ((0, mp - m), (0, fp - f)))
+    sxp = jnp.pad(sx, ((0, mp - m), (0, 0)), constant_values=1.0)
+    return QuantPlan(x=x, xq=xq, sx=sxp, xn=xn, m=m, f=f, params=params)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,6 +415,86 @@ def fused_assign(
     mind, am = _da.distance_argmin(
         plan.xp, cp, cn, block_m=params.block_m, block_k=params.block_k,
         block_f=params.block_f, variant=variant, interpret=interpret)
+    m = plan.m
+    return am[:m, 0], mind[:m, 0]
+
+
+def _resolve_padded_int8(x: Any, c: jax.Array,
+                         params: Optional[KernelParams]) -> tuple:
+    """int8 front end: accept a raw X or a prebuilt :class:`QuantPlan` and
+    return (plan, quantized padded centroids, padded centroid scales,
+    masked centroid norms, params). Centroids are quantized per row here —
+    they move every iteration, so unlike X their quantization is per-call —
+    and their squared norms come from the *unquantized* values (the
+    template's norm term is exact; only the cross term is quantized)."""
+    k = c.shape[0]
+    if isinstance(x, QuantPlan):
+        plan = x
+        if plan.params is None:
+            raise ValueError(
+                "QuantPlan was built without KernelParams (the unpadded "
+                "XLA-analogue layout); the Pallas int8 template needs a "
+                "block-padded plan — build it with plan_data_int8(x, "
+                "params)")
+        params = plan.params
+    else:
+        if params is None:
+            from repro.api.cache import default_cache
+            _, params = default_cache().lookup(x.shape[0], k, x.shape[1],
+                                               kind="int8", dtype=jnp.int8)
+        params = clamp_params(x.shape[0], k, x.shape[1], params,
+                              dtype=jnp.int8)
+        plan = plan_data_int8(x, params)
+    cf = c.astype(jnp.float32)
+    kp = _round_up(k, params.block_k)
+    fp = plan.xq.shape[1]
+    cpad = jnp.pad(cf, ((0, kp - k), (0, fp - cf.shape[1])))
+    cn = jnp.sum(cpad ** 2, axis=1)
+    cn = jnp.where(jnp.arange(kp) < k, cn, jnp.inf)[None, :]
+    cq, sc = _quantize_rows(cf)
+    cqp = jnp.pad(cq.astype(plan.xq.dtype),
+                  ((0, kp - k), (0, fp - cf.shape[1])))
+    scp = jnp.pad(sc, ((0, kp - k), (0, 0)), constant_values=1.0).T  # (1,kp)
+    return plan, cqp, scp, cn, params
+
+
+def fused_assign_int8(
+    x: jax.Array,
+    c: jax.Array,
+    params: Optional[KernelParams] = None,
+    *,
+    variant: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid assignment via the int8 distance template.
+
+    ``x`` may be a raw (M, F) array (quantized here, per row) or a prebuilt
+    :class:`QuantPlan` (then ``params`` comes from the plan and the per-fit
+    quantization is reused). ``c`` is the *unquantized* (K, F) centroid
+    array — centroid quantization is per-call because centroids move every
+    iteration. ``variant=None`` auto-selects the small-K fast path exactly
+    like :func:`fused_assign`. Returns (assign (M,) int32, partial min
+    distance (M,) f32); add ``sum(x**2, -1)`` for true squared distances.
+
+    On quantization-safe data (integer entries in [-127, 127] with a
+    +-127 entry per row) the argmin is bit-exact against
+    :func:`fused_assign`; on float data the distance error is bounded by
+    the ~1/127-per-operand quantization step (see
+    :mod:`repro.kernels.distance_argmin_int8`).
+    """
+    plan, cqp, scp, cn, params = _resolve_padded_int8(x, c, params)
+    variant = resolve_variant(c.shape[0], params, variant)
+    if interpret is None:
+        interpret = not on_tpu()
+    # The Pallas template wants int8 tiles. A plan built with the f32
+    # carrier (the off-TPU default, consumed by the XLA analogue backend)
+    # holds int8-valued floats, so the cast back is exact.
+    xq = plan.xq.astype(jnp.int8)
+    cq = cqp.astype(jnp.int8)
+    mind, am = _dai.distance_argmin_int8(
+        xq, cq, plan.sx, scp, cn, block_m=params.block_m,
+        block_k=params.block_k, block_f=params.block_f, variant=variant,
+        interpret=interpret)
     m = plan.m
     return am[:m, 0], mind[:m, 0]
 
@@ -757,7 +935,24 @@ def plan_injection_tile(m: int, k: int, f: int, params: KernelParams,
 # repro.core.autotune.KINDS re-exports it, so extending the family (and
 # the autotune cache schema with it) is a single-point change here.
 PLAN_KINDS: tuple[str, ...] = ("assign", "lloyd", "lloyd_ft", "batched",
-                               "pruned")
+                               "pruned", "int8", "init")
+
+# Per-kind compute dtypes: the f32 template family lowers at every
+# supported width; the int8 template is its own dtype notch (x/c tiles are
+# int8 by construction, the epilogue is f32), and the fused k-means++
+# round kernel runs its D² state in f32 only (seeding precision is the
+# fit's floor — a half-precision CDF would bias every later iteration).
+# Contract checks and the autotuner iterate this mapping instead of
+# assuming one dtype set fits every kind.
+PLAN_KIND_DTYPES: dict[str, tuple[str, ...]] = {
+    "assign": ("float32", "bfloat16", "float16"),
+    "lloyd": ("float32", "bfloat16", "float16"),
+    "lloyd_ft": ("float32", "bfloat16", "float16"),
+    "batched": ("float32", "bfloat16", "float16"),
+    "pruned": ("float32", "bfloat16", "float16"),
+    "int8": ("int8",),
+    "init": ("float32",),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -834,8 +1029,18 @@ def _plan_buffers(eqn: Any) -> tuple[tuple[BufferPlan, ...],
                  for b in maps[gm.num_inputs:gm.num_inputs + gm.num_outputs])
     invars = eqn.params["jaxpr"].invars
     n_scr = gm.num_scratch_operands
+    # DMA-semaphore scratch (the double-buffered stash handshake) has no
+    # numpy dtype and occupies no VMEM bytes — it is not a buffer and is
+    # excluded from the plan rather than shoehorned into one.
+    def _is_sem(aval: Any) -> bool:
+        try:
+            jnp.dtype(aval.dtype)
+        except TypeError:
+            return True
+        return False
     scr = tuple(buf("scratch", v.aval, v.aval.shape)
-                for v in (invars[len(invars) - n_scr:] if n_scr else []))
+                for v in (invars[len(invars) - n_scr:] if n_scr else [])
+                if not _is_sem(v.aval))
     return ins, outs, scr
 
 
@@ -873,6 +1078,20 @@ def kernel_plan(kind: str, m: int, k: int, f: int,
         fn = functools.partial(_ll.lloyd_step_batched, block_m=p.block_m,
                                block_f=p.block_f, interpret=False)
         args = (xs, cs, cn, meta)
+    elif kind == "init":
+        # fused k-means++ round: (B, Np/bn) grid, full-F blocks; K and
+        # block_k/block_f are not axes of this kernel
+        bn = _kpi.clamp_init_block(m, p.block_m)
+        np_ = _round_up(m, bn)
+        fpl = _round_up(f, 128)
+        xs = jax.ShapeDtypeStruct((batch, np_, fpl), jnp.float32)
+        xn = jax.ShapeDtypeStruct((batch, np_), jnp.float32)
+        cs = jax.ShapeDtypeStruct((batch, 1, fpl), jnp.float32)
+        d2 = jax.ShapeDtypeStruct((batch, np_), jnp.float32)
+        var = "generic"
+        fn = functools.partial(_kpi.kmeanspp_round, block_n=bn,
+                               interpret=False)
+        args = (xs, xn, cs, d2)
     else:
         mp = _round_up(m, p.block_m)
         kp = _round_up(k, p.block_k)
@@ -885,6 +1104,17 @@ def kernel_plan(kind: str, m: int, k: int, f: int,
                                    block_k=p.block_k, block_f=p.block_f,
                                    variant=var, interpret=False)
             args = (xs, cs, cn)
+        elif kind == "int8":
+            var = resolve_variant(k, p, variant)
+            xs = jax.ShapeDtypeStruct((mp, fp), jnp.int8)
+            cs = jax.ShapeDtypeStruct((kp, fp), jnp.int8)
+            sx = jax.ShapeDtypeStruct((mp, 1), jnp.float32)
+            sc = jax.ShapeDtypeStruct((1, kp), jnp.float32)
+            fn = functools.partial(_dai.distance_argmin_int8,
+                                   block_m=p.block_m, block_k=p.block_k,
+                                   block_f=p.block_f, variant=var,
+                                   interpret=False)
+            args = (xs, cs, sx, sc, cn)
         elif kind == "pruned":
             var = resolve_variant(k, p, variant)
             xn = jax.ShapeDtypeStruct((mp, 1), jnp.float32)

@@ -1,0 +1,218 @@
+"""int8 distance template: quantized GEMM + f32 scale-correction epilogue.
+
+The exactness claims under test (see repro.kernels.distance_argmin_int8):
+
+* on *quantization-safe* data — integer entries in [-127, 127] with a
+  +-127 entry pinned per row, so every per-row scale is exactly 1.0 and
+  quantization is the identity — the argmin is bit-exact against the f32
+  kernel, for the Pallas template (int8 carrier, interpret mode) and the
+  XLA analogue alike;
+* on arbitrary float data the distance error is bounded by the ~1/127
+  per-operand quantization step;
+* int8 dot products are bit-exact in the f32 carrier for F <= 1040
+  (F * 127^2 < 2^24), which is why the off-TPU carrier is f32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FaultPolicy, KMeans
+from repro.api.cache import AutotuneCache
+from repro.core import assignment
+from repro.kernels import ops, ref
+from repro.kernels.ops import KernelParams
+
+
+def _safe_data(m, k, f, seed=0):
+    """Quantization-safe (X, C): integers in [-127, 127], a +-127 entry
+    pinned in every row so quantize_rows yields scale exactly 1.0 and
+    q == x — the int8 path then computes the same cross terms as f32."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-127, 128, size=(m, f)).astype(np.float32)
+    c = rng.integers(-127, 128, size=(k, f)).astype(np.float32)
+    x[np.arange(m), rng.integers(0, f, m)] = 127.0
+    c[np.arange(k), rng.integers(0, f, k)] = 127.0
+    return jnp.asarray(x), jnp.asarray(c)
+
+
+def _float_data(m, k, f, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (m, f), jnp.float32),
+            jax.random.normal(kc, (k, f), jnp.float32))
+
+
+class TestInt8Kernel:
+    @pytest.mark.parametrize("m,k,f", [
+        (256, 128, 512),          # exactly one tile
+        (512, 256, 256),          # multi-tile M and K
+        (300, 77, 130),           # ragged: exercises padding
+        (256, 16, 128),           # small-K fast path
+    ])
+    def test_bitexact_argmin_on_safe_data(self, m, k, f):
+        x, c = _safe_data(m, k, f)
+        am_f32, _ = ops.fused_assign(x, c, KernelParams(128, 128, 128))
+        for carrier in (jnp.int8, jnp.float32):
+            plan = ops.plan_data_int8(x, KernelParams(128, 128, 128),
+                                      carrier=carrier)
+            am, md = ops.fused_assign_int8(plan, c)
+            assert bool(jnp.all(am == am_f32)), f"carrier={carrier}"
+            # scale 1.0 everywhere -> distances agree exactly too
+            _, md_f32 = ops.fused_assign(x, c, KernelParams(128, 128, 128))
+            np.testing.assert_array_equal(np.asarray(md),
+                                          np.asarray(md_f32))
+
+    def test_bitexact_vs_xla_analogue_on_safe_data(self):
+        x, c = _safe_data(384, 64, 256, seed=1)
+        am_p, _ = ops.fused_assign_int8(x, c, KernelParams(128, 128, 128))
+        am_x, _, _ = assignment.assign_int8_xla(x, c)
+        am_f, _ = ops.fused_assign(x, c, KernelParams(128, 128, 128))
+        np.testing.assert_array_equal(np.asarray(am_p), np.asarray(am_f))
+        np.testing.assert_array_equal(np.asarray(am_x), np.asarray(am_f))
+
+    def test_bounded_error_on_float_data(self):
+        x, c = _float_data(512, 64, 128, seed=2)
+        _, md8 = ops.fused_assign_int8(x, c, KernelParams(128, 128, 128))
+        _, md = ops.fused_assign(x, c, KernelParams(128, 128, 128))
+        xn = jnp.sum(x * x, axis=1)
+        d8, d = md8 + xn, md + xn   # true squared distances
+        # per-operand quantization step is scale ~ max|row|/127; the
+        # relative distance error stays well inside 2/127 per operand
+        rel = float(jnp.max(jnp.abs(d8 - d) / jnp.maximum(d, 1e-3)))
+        assert rel < 4.0 / 127.0, rel
+        # and the argmin disagreement is rare (ties within quant noise)
+        am8, _ = ops.fused_assign_int8(x, c, KernelParams(128, 128, 128))
+        am, _ = ops.fused_assign(x, c, KernelParams(128, 128, 128))
+        assert float(jnp.mean((am8 == am).astype(jnp.float32))) > 0.7
+
+    def test_variant_parity(self):
+        x, c = _safe_data(256, 16, 128, seed=3)
+        p = KernelParams(128, 128, 128)
+        am_g, md_g = ops.fused_assign_int8(x, c, p, variant="generic")
+        am_s, md_s = ops.fused_assign_int8(x, c, p, variant="smallk")
+        np.testing.assert_array_equal(np.asarray(am_g), np.asarray(am_s))
+        np.testing.assert_array_equal(np.asarray(md_g), np.asarray(md_s))
+
+    def test_quantplan_reuse_matches_fresh(self):
+        x, c = _float_data(256, 32, 128, seed=4)
+        p = KernelParams(128, 128, 128)
+        plan = ops.plan_data_int8(x, p)
+        am_plan, md_plan = ops.fused_assign_int8(plan, c)
+        am_raw, md_raw = ops.fused_assign_int8(x, c, p)
+        np.testing.assert_array_equal(np.asarray(am_plan),
+                                      np.asarray(am_raw))
+        np.testing.assert_array_equal(np.asarray(md_plan),
+                                      np.asarray(md_raw))
+
+    def test_unpadded_plan_rejected_by_pallas_template(self):
+        x, c = _float_data(128, 16, 128, seed=5)
+        plan = ops.plan_data_int8(x)           # params=None: XLA layout
+        assert plan.params is None
+        with pytest.raises(ValueError, match="block-padded"):
+            ops.fused_assign_int8(plan, c)
+        # the XLA analogue consumes it fine
+        am, md, det = assignment.assign_int8_xla(plan, c)
+        am_raw, md_raw, _ = assignment.assign_int8_xla(x, c)
+        np.testing.assert_array_equal(np.asarray(am), np.asarray(am_raw))
+
+    def test_f32_carrier_dot_exactness_bound(self):
+        # F * 127^2 < 2^24 holds at F=1024: int-valued f32 GEMM == int32
+        rng = np.random.default_rng(6)
+        a = rng.integers(-127, 128, size=(64, 1024)).astype(np.int32)
+        b = rng.integers(-127, 128, size=(32, 1024)).astype(np.int32)
+        exact = a @ b.T
+        viaf32 = (jnp.asarray(a, jnp.float32) @
+                  jnp.asarray(b, jnp.float32).T)
+        np.testing.assert_array_equal(np.asarray(viaf32, np.int64), exact)
+
+
+class TestInt8Plumbing:
+    def test_vmem_model_is_exact(self):
+        plan = ops.kernel_plan("int8", 2048, 256, 512)
+        p = ops.clamp_params(2048, 256, 512, ops.DEFAULT_PARAMS,
+                             dtype=jnp.int8)
+        assert plan.vmem_bytes() == ops.int8_vmem_bytes(p)
+
+    def test_backend_registered_and_flagged(self):
+        from repro.api.registry import get_backend
+        for name in ("int8", "int8_xla"):
+            b = get_backend(name)
+            assert b.supports_int8 and b.kernel_kind == "int8"
+            assert not b.fuses_update and not b.supports_ft
+
+    def test_cache_keys_int8_kind_under_int8_dtype(self):
+        cache = AutotuneCache()
+        variant, p = cache.lookup(2048, 64, 256, kind="int8",
+                                  dtype=jnp.int8)
+        assert p.block_m % 32 == 0           # int8 sublane alignment
+        cache.put(2048, 64, 256, p, kind="int8", dtype=jnp.int8,
+                  variant=variant)
+        v2, p2 = cache.lookup(2048, 64, 256, kind="int8", dtype=jnp.int8)
+        assert (v2, p2) == (variant, p)
+
+    def test_row_norms_from_quantplan(self):
+        x, _ = _float_data(128, 8, 64, seed=7)
+        plan = ops.plan_data_int8(x, KernelParams(32, 128, 128))
+        np.testing.assert_array_equal(
+            np.asarray(assignment._row_norms(plan)),
+            np.asarray(jnp.sum(x * x, axis=1)))
+
+
+class TestInt8Estimator:
+    def _x(self, m=600, f=48, seed=0):
+        return np.random.default_rng(seed).normal(
+            size=(m, f)).astype(np.float32)
+
+    def test_auto_backend_and_fit_close_to_f32(self):
+        x = self._x()
+        km8 = KMeans(n_clusters=7, compute_dtype="int8", max_iter=15,
+                     autotune=AutotuneCache(), random_state=3)
+        assert km8._backend.supports_int8
+        km8.fit(x)
+        kmf = KMeans(n_clusters=7, max_iter=15, autotune=AutotuneCache(),
+                     random_state=3).fit(x)
+        assert abs(km8.inertia_ - kmf.inertia_) / kmf.inertia_ < 0.05
+        # centroids stay f32 — quantization never leaks into state
+        assert km8.cluster_centers_.dtype == jnp.float32
+
+    def test_pinned_pallas_backend_fits(self):
+        x = self._x(256, 32, seed=1)
+        km = KMeans(n_clusters=5, compute_dtype="int8", backend="int8",
+                    max_iter=4, autotune=AutotuneCache())
+        km.fit(x)
+        assert km.inertia_ is not None and km.n_iter_ >= 1
+
+    def test_predict_partial_fit_minibatch(self):
+        x = self._x(512, 32, seed=2)
+        km = KMeans(n_clusters=5, compute_dtype="int8", max_iter=8,
+                    autotune=AutotuneCache()).fit(x)
+        assert km.predict(x).shape == (512,)
+        assert km.score(x) <= 0.0
+        st = KMeans(n_clusters=5, compute_dtype="int8",
+                    autotune=AutotuneCache())
+        st.partial_fit(x[:256]).partial_fit(x[256:])
+        assert st.n_iter_ == 2
+        mb = KMeans(n_clusters=5, compute_dtype="int8", batch_size=128,
+                    max_iter=4, autotune=AutotuneCache()).fit(x)
+        assert mb.inertia_ is not None
+
+    def test_state_roundtrip_preserves_int8(self):
+        x = self._x(256, 16, seed=3)
+        km = KMeans(n_clusters=4, compute_dtype="int8", max_iter=5,
+                    autotune=AutotuneCache()).fit(x)
+        st = km.get_state()
+        assert st["config"]["compute_dtype"] == "int8"
+        km2 = KMeans.from_state(st, autotune=AutotuneCache())
+        assert km2._backend.supports_int8
+        np.testing.assert_array_equal(np.asarray(km2.predict(x)),
+                                      np.asarray(km.predict(x)))
+
+    def test_mismatched_configs_rejected(self):
+        with pytest.raises(ValueError, match="int8-quantized"):
+            KMeans(compute_dtype="int8", backend="fused",
+                   autotune=AutotuneCache())
+        with pytest.raises(ValueError, match="compute_dtype='int8'"):
+            KMeans(backend="int8_xla", autotune=AutotuneCache())
+        with pytest.raises(Exception, match="fault-tolerant"):
+            KMeans(compute_dtype="int8", fault=FaultPolicy.correct(),
+                   autotune=AutotuneCache())

@@ -214,7 +214,7 @@ class TestCacheSchema:
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] == SCHEMA_VERSION == 5
+        assert on_disk["schema"] == SCHEMA_VERSION == 6
         assert on_disk["kinds"]["lloyd/bfloat16/b0"][
             shape_bucket(4096, 100, 128)] == ["smallk", 512, 128, 128]
         fresh = AutotuneCache(path)
@@ -305,9 +305,18 @@ class TestEstimatorComputeDtype:
 
     def test_rejects_unknown_compute_dtype(self):
         with pytest.raises(ValueError, match="compute_dtype"):
-            KMeans(4, compute_dtype="int8")
+            KMeans(4, compute_dtype="int4")
         with pytest.raises(ValueError, match="compute_dtype"):
             KMeans(4, compute_dtype="bf16")   # unparseable spec, not TypeError
+
+    def test_int8_dtype_and_backend_must_agree(self):
+        # int8 is a valid compute_dtype, but only on an int8 template —
+        # and an int8 template demands the int8 dtype
+        with pytest.raises(ValueError, match="supports_int8"):
+            KMeans(4, compute_dtype="int8", backend="lloyd_xla")
+        with pytest.raises(ValueError, match="compute_dtype='int8'"):
+            KMeans(4, backend="int8_xla")
+        KMeans(4, compute_dtype="int8")       # auto-picks an int8 backend
 
 
 class TestChunkedInference:
