@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-smoke bench-check bench-ft bench-batched \
-        bench-init quickstart docs docs-check lint typecheck analysis static
+        bench-init bench-serve quickstart docs docs-check lint typecheck \
+        analysis static
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -24,24 +25,32 @@ test-fast:       ## API + kmeans + kernels only (quick signal)
 bench:           ## all paper-figure benchmark modules
 	$(PY) -m benchmarks.run
 
-bench-smoke:     ## Fig. 7 ladder at tiny shapes (interpret-mode Pallas rung)
+bench-smoke:     ## Fig. 7 ladder at tiny shapes (all rungs compiled)
 	$(PY) -m benchmarks.bench_stepwise --smoke --model --json BENCH_stepwise.json
 
 bench-check:     ## regen smoke artifacts, gate vs committed baselines (>25% = fail)
 	git show HEAD:BENCH_stepwise.json > /tmp/bench_stepwise_baseline.json
 	git show HEAD:BENCH_init.json > /tmp/bench_init_baseline.json
+	git show HEAD:BENCH_serve.json > /tmp/bench_serve_baseline.json
 	$(MAKE) bench-smoke
 	$(MAKE) bench-init
+	$(MAKE) bench-serve
 	$(PY) -m benchmarks.check_regression /tmp/bench_stepwise_baseline.json \
 	    BENCH_stepwise.json --rung fig7_v5_onepass \
 	    --rung fig7_v7_ft_onepass --rung fig7_v8_batched \
 	    --rung fig7_v9_pruned --rung fig7_v6_smallk \
-	    --rung fig7_v10_int8 --rung fig7_v11_dbuf --max-ratio 1.25
+	    --rung fig7_v10_int8 --rung fig7_v11_dbuf \
+	    --rung fig7_v12_aot_predict --max-ratio 1.25
 	$(PY) -m benchmarks.check_regression /tmp/bench_init_baseline.json \
 	    BENCH_init.json --rung init_fused_vs_vmapped --max-ratio 1.25
+	$(PY) -m benchmarks.check_regression /tmp/bench_serve_baseline.json \
+	    BENCH_serve.json --rung serve_microbatch_vs_naive --max-ratio 1.25
 
 bench-init:      ## fused k-means++ seeding vs vmapped baseline (B=64 small problems)
 	$(PY) -m benchmarks.bench_init --json BENCH_init.json
+
+bench-serve:     ## serving layer: AOT cells, micro-batch vs naive, latency sim
+	$(PY) -m benchmarks.bench_serve --json BENCH_serve.json
 
 bench-ft:        ## Fig. 15/16 FT overhead (incl. one-pass FT vs unprotected)
 	$(PY) -m benchmarks.bench_ft_overhead

@@ -1,0 +1,173 @@
+"""Serving-layer benchmark: AOT predict cells, micro-batching, latency.
+
+Three measurements, in increasing assembly order:
+
+1. ``serve_cell_b{bucket}`` — warm launch time of each AOT-compiled
+   predict cell in the default bucket ladder (the floor any request
+   pays once it reaches the device).
+2. ``serve_microbatch_vs_naive`` — the tentpole rung, gated in CI: a
+   wave of concurrent small requests served through the
+   :class:`~repro.serve.MicroBatcher` (coalesced into one padded-bucket
+   launch) vs naive per-request dispatch of the same wave. The derived
+   field carries the throughput ratio; the run *fails* if micro-batching
+   is under 2x — that regression means the dispatch-amortization story
+   is broken, not merely slower.
+3. ``serve_lat_r*`` — p50/p99 latency at varying offered request rates
+   from a deterministic discrete-event queue simulation fed by the
+   *measured* cell times (methodology in docs/serving.md: off-TPU
+   wall-clocks are noisy, so the latency table is derived from the
+   measured launch floor; arrivals are seeded Poisson).
+
+All rungs are compiled — ``interpret_rungs`` is empty by construction.
+
+CLI:
+  --json PATH    write rows + config to PATH (CI artifact BENCH_serve.json)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import clustered_blobs, row, time_call
+from repro.api import KMeans
+from repro.serve import DEFAULT_BUCKETS, plan_ladder
+
+K, F = 64, 64
+FIT_ROWS = 4096
+REQUESTS, REQ_ROWS = 32, 16        # the default load point: 32 x 16-row
+RATES = (0.25, 0.5, 1.0, 2.0)      # offered load, x one-cell capacity
+SIM_REQUESTS = 2000
+
+
+def _percentile(lat: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(lat), q))
+
+
+def _queue_sim(arr: np.ndarray, rows: np.ndarray, cost_of, *,
+               batched: bool) -> list[float]:
+    """Single-server queue over Poisson arrivals: the server takes either
+    everything that has arrived when it frees up (micro-batched) or one
+    request at a time (naive); returns per-request latencies."""
+    lat: list[float] = []
+    i, n, t = 0, len(arr), 0.0
+    while i < n:
+        start = max(t, float(arr[i]))
+        j = i + 1
+        if batched:
+            while j < n and arr[j] <= start:
+                j += 1
+        total = int(np.sum(rows[i:j]))
+        done = start + cost_of(total)
+        lat.extend(done - float(arr[r]) for r in range(i, j))
+        t = done
+        i = j
+    return lat
+
+
+def _collect() -> tuple[list[str], dict]:
+    rng = np.random.default_rng(0)
+    x, _ = clustered_blobs(FIT_ROWS, F, K)
+    km = KMeans(n_clusters=K, max_iter=3, tol=0.0, random_state=0).fit(x)
+    svc = km.to_service(buckets=DEFAULT_BUCKETS, window_s=0.0)
+    comp, store = svc.compiler, svc.store
+    cb = store.current()
+    out: list[str] = []
+
+    # --- per-bucket compiled-cell launch floor ---
+    cell_t: dict[int, float] = {}
+    for bucket in comp.buckets:
+        q = np.asarray(rng.normal(size=(bucket, F)), np.float32)
+        t = time_call(lambda q=q: jax.block_until_ready(
+            comp.dispatch(q, cb.centroids)[0]))
+        cell_t[bucket] = t
+        out.append(row(f"serve_cell_b{bucket}", t, f"rows={bucket}"))
+
+    # --- micro-batched vs naive per-request dispatch (the gated rung) ---
+    reqs = [np.asarray(rng.normal(size=(REQ_ROWS, F)), np.float32)
+            for _ in range(REQUESTS)]
+
+    def micro_wave() -> None:
+        tickets = [svc.batcher.submit(q) for q in reqs]
+        svc.batcher.flush()
+        jax.block_until_ready([tk.result()[0] for tk in tickets])
+
+    def naive_wave() -> None:
+        jax.block_until_ready(
+            [comp.dispatch(q, cb.centroids)[0] for q in reqs])
+
+    t_micro = time_call(micro_wave)
+    t_naive = time_call(naive_wave)
+    ratio = t_naive / t_micro
+    if ratio < 2.0:
+        raise RuntimeError(
+            f"micro-batching is only x{ratio:.2f} over naive per-request "
+            f"dispatch at the default load point ({REQUESTS} x {REQ_ROWS} "
+            f"rows) — the dispatch-amortization contract (>=2x) is "
+            f"broken; fix before re-committing the artifact")
+    out.append(row("serve_microbatch_vs_naive", t_micro,
+                   f"naive_us={t_naive * 1e6:.1f};x{ratio:.2f};"
+                   f"load={REQUESTS}x{REQ_ROWS}rows"))
+
+    # --- p50/p99 latency vs offered rate (sim over measured cell times) ---
+    def cost_of(total_rows: int) -> float:
+        top = comp.buckets[-1]
+        full, rem = divmod(total_rows, top)
+        c = full * cell_t[top]
+        if rem:
+            c += cell_t[comp.bucket_for(rem)]
+        return c if c else cell_t[comp.buckets[0]]
+
+    base_rate = 1.0 / cell_t[comp.bucket_for(REQ_ROWS)]   # one-cell capacity
+    lat_rows = []
+    for mult in RATES:
+        rate = base_rate * mult
+        arr = np.cumsum(rng.exponential(1.0 / rate, SIM_REQUESTS))
+        sizes = np.full(SIM_REQUESTS, REQ_ROWS)
+        lat_b = _queue_sim(arr, sizes, cost_of, batched=True)
+        lat_n = _queue_sim(arr, sizes, cost_of, batched=False)
+        name = f"serve_lat_r{mult:g}x"
+        p50, p99 = _percentile(lat_b, 50), _percentile(lat_b, 99)
+        out.append(row(name, p50,
+                       f"p99_us={p99 * 1e6:.1f};"
+                       f"naive_p50_us={_percentile(lat_n, 50) * 1e6:.1f};"
+                       f"naive_p99_us={_percentile(lat_n, 99) * 1e6:.1f};"
+                       f"rate={rate:.0f}req/s"))
+        lat_rows.append({"rate_mult": mult, "rate_req_s": rate,
+                         "p50_s": p50, "p99_s": p99})
+
+    # --- the tuned plan for this model shape (model-mode, deterministic) ---
+    plan = plan_ladder(K, F, cache=km.autotune)
+    out.append(row("serve_ladder_plan", 0.0,
+                   f"buckets={'|'.join(map(str, plan.buckets))};"
+                   f"window_us={plan.window_us:.1f}"))
+
+    payload = {
+        "shape": {"k": K, "f": F, "requests": REQUESTS,
+                  "request_rows": REQ_ROWS},
+        "buckets": list(comp.buckets),
+        "planned": {"buckets": list(plan.buckets),
+                    "window_us": plan.window_us},
+        "interpret_rungs": [],
+        "rows": [r.split(",", 2) for r in out],
+        "latency_sim": lat_rows,
+    }
+    return out, payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + serving config to PATH")
+    args = ap.parse_args(argv)
+    rows, payload = _collect()
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,9 +20,14 @@ pair of rungs compares. ``--model`` additionally emits the analytical
 per-iteration HBM byte table (``autotune.iteration_traffic``) that the
 docs/kernels.md table is generated from.
 
+The ladder's top rung (``fig7_v12_aot_predict``) is the serving layer's
+AOT-compiled predict cell (``repro.serve``): the fused assignment pipeline
+behind a precompiled bucket executable — every rung in the artifact is
+compiled, so ``check_regression`` can guard all of them.
+
 CLI:
-  --smoke        tiny shapes + the Pallas one-pass kernel in interpret mode
-                 (CI wiring; wall-times are then smoke signals, not data)
+  --smoke        tiny shapes (CI wiring; wall-times are then smoke
+                 signals, not data)
   --json PATH    write rows + traffic model to PATH (CI artifact)
   --model        print the HBM traffic model rows
 """
@@ -345,15 +350,17 @@ def _collect(smoke: bool = False, model: bool = False
                        f"GFLOPS={gflops(ifl, ti):.1f};"
                        f"shape=({im},{ik},{if_})"))
 
-    if smoke:
-        # CI smoke: drive the real Pallas one-pass kernel (interpret mode)
-        # end-to-end through the estimator at the tiny shape.
-        from repro.kernels import ops
-        t = time_call(lambda: jax.block_until_ready(
-            ops.fused_lloyd(x, c, KernelParams(256, 128, 128))), iters=2,
-            warmup=1)
-        out.append(row("fig7_v5_onepass_pallas_interp", t, "interpret=True"))
-        interpret_rungs.append("fig7_v5_onepass_pallas_interp")
+    # --- V12: the serving layer's AOT-compiled predict cell (one bucket
+    # launch through repro.serve, compiled — this rung replaces the old
+    # interpret-mode smoke rung, which the regression gate refused to
+    # guard; a compiled cell it can watch like any other rung) ---
+    from repro.serve import ServeCompiler
+    comp = ServeCompiler(get_backend("gemm_fused"), k, f, buckets=(m,))
+    t_v12 = time_call(
+        lambda: jax.block_until_ready(comp.dispatch(x, c)[0]))
+    out.append(row("fig7_v12_aot_predict", t_v12,
+                   f"bucket={m};"
+                   f"vs_v2_fused=x{ladder_t['gemm_fused'] / t_v12:.2f}"))
 
     # estimator-level anchor: 4 Lloyd iterations, unprotected vs FT policy
     for label, policy in (("fig7_e2e_off", FaultPolicy.off()),
@@ -401,7 +408,7 @@ def _collect(smoke: bool = False, model: bool = False
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes + Pallas interpret rung (CI)")
+                    help="tiny shapes (CI)")
     ap.add_argument("--model", action="store_true",
                     help="emit the analytical HBM traffic rows")
     ap.add_argument("--json", metavar="PATH",

@@ -17,10 +17,14 @@ small-K rung (``fig7_v6_smallk``), the int8 template rung
 (``fig7_v10_int8`` — the quantize/scale-correct epilogue must not eat the
 low-precision win) and the double-buffered one-pass rung
 (``fig7_v11_dbuf`` — the stash pipelining rework must not change the
-analogue's cost). The fused-seeding rung (``init_fused_vs_vmapped``)
-lives in ``BENCH_init.json`` and is guarded by a second invocation
-against that artifact (see the Makefile ``bench-check`` target). A rung
-missing
+analogue's cost) and the serving layer's AOT predict cell
+(``fig7_v12_aot_predict`` — the compiled rung that replaced the old
+interpret-mode smoke rung; bucketed dispatch must not grow hidden
+per-request cost). The fused-seeding rung (``init_fused_vs_vmapped``)
+lives in ``BENCH_init.json`` and the micro-batching rung
+(``serve_microbatch_vs_naive``) in ``BENCH_serve.json``; each is guarded
+by its own invocation against that artifact (see the Makefile
+``bench-check`` target). A rung missing
 from the *baseline* is skipped (it was just added); a rung missing from the
 *new* artifact is an error (a ladder rung silently disappeared). Rows whose
 recorded time is 0 (model rows) are rejected as guards.
@@ -39,7 +43,7 @@ import sys
 
 DEFAULT_RUNGS = ["fig7_v5_onepass", "fig7_v7_ft_onepass", "fig7_v8_batched",
                  "fig7_v9_pruned", "fig7_v6_smallk", "fig7_v10_int8",
-                 "fig7_v11_dbuf"]
+                 "fig7_v11_dbuf", "fig7_v12_aot_predict"]
 
 
 def _times(payload: dict) -> dict[str, float]:

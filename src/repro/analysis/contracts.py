@@ -68,6 +68,8 @@ def _default_vmem_models() -> dict[str, VmemModel]:
         "pruned": ops.pruned_vmem_bytes,
         "int8": lambda p, k, f, dt: ops.int8_vmem_bytes(p),
         "init": lambda p, k, f, dt: ops.init_vmem_bytes(p, f),
+        # a serve predict cell is the assignment kernel at a bucket shape
+        "serve": lambda p, k, f, dt: p.vmem_bytes(dt),
     }
 
 

@@ -54,7 +54,9 @@ _HOST_BOUNDARY_FUNCS = frozenset({"_host_read", "get_state", "from_state"})
 # Packages whose functions are (or call into) per-iteration hot paths;
 # the scalar-read rules (np.asarray / float / int on bare names) apply
 # here. ``.item()`` and ``jax.device_get`` are flagged everywhere.
-_HOT_PATH_PREFIXES = ("api", "batch", "core", "dist")
+# ``serve`` is the per-*request* hot path — a hidden sync there stalls
+# every request sharing the micro-batch, not just one fit iteration.
+_HOT_PATH_PREFIXES = ("api", "batch", "core", "dist", "serve")
 
 
 def _allowed(src: str) -> dict[int, frozenset[str]]:

@@ -133,6 +133,35 @@ def _batched_fit_scenario() -> Callable[[], None]:
     return step
 
 
+def _serve_predict_scenario() -> Callable[[], None]:
+    """The serving layer's core claim: with every (bucket, variant) cell
+    AOT-compiled at construction (in ``make()``, outside the counted
+    passes), dispatching the whole registered set — zero-row, one-row,
+    exact-bucket, mid-bucket and beyond-top-bucket requests, plus a
+    publish-then-serve hot-swap — compiles nothing. Not just warm: the
+    *cold* pass may only compile the eager pad/concat glue, and the warm
+    pass must be at zero like every other shape-stable path."""
+    from repro.api.estimator import KMeans
+    rng = np.random.default_rng(3)
+    x = np.asarray(rng.normal(size=(256, 16)), np.float32)
+    est = KMeans(n_clusters=4, max_iter=2, backend="lloyd_xla",
+                 sync_every=1, random_state=0)
+    est.fit(x)
+    svc = est.to_service(buckets=(32, 128), window_s=0.0)
+    queries = [np.asarray(rng.normal(size=(m, 16)), np.float32)
+               for m in (0, 1, 32, 100, 300)]
+    state = {"i": 0}
+
+    def step() -> None:
+        for q in queries:
+            svc.predict(q)
+        # hot-swap mid-traffic: a publish must reuse the same executables
+        svc.publish(np.asarray(est.cluster_centers_) + 0.5 * state["i"])
+        state["i"] += 1
+        svc.predict(queries[-1])
+    return step
+
+
 def default_scenarios() -> list[Scenario]:
     return [
         Scenario("kmeans-fit-predict-warm", _fit_predict_scenario,
@@ -141,6 +170,8 @@ def default_scenarios() -> list[Scenario]:
                  file="src/repro/api/estimator.py"),
         Scenario("batched-fit-warm", _batched_fit_scenario,
                  file="src/repro/batch/estimator.py"),
+        Scenario("serve-aot-predict-warm", _serve_predict_scenario,
+                 file="src/repro/serve/compiler.py"),
     ]
 
 

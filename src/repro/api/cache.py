@@ -10,24 +10,30 @@ and is passed per-estimator (``KMeans(..., autotune=cache)``), so two
 estimators can run with different tables in one process and tests get a
 fresh cache per case.
 
-Schema v6: entries are keyed by *kernel kind, compute dtype and batch
+Schema v7: entries are keyed by *kernel kind, compute dtype and batch
 bucket* as well as shape bucket, and each winner records its *template
 variant* alongside the tiles::
 
-    {"schema": 6,
+    {"schema": 7,
      "kinds": {"assign/float32/b0":  {"14-7-7": ["smallk", 256, 128, 128]},
                "lloyd/bfloat16/b0":  {...},
                "pruned/float32/b0":  {"14-7-7": ["generic", 256, 128, 128]},
                "int8/int8/b0":       {"14-7-7": ["generic", 256, 128, 512]},
-               "batched/float32/b6": {"8-3-5": ["batched", 256, 128, 128]}}}
+               "batched/float32/b6": {"8-3-5": ["batched", 256, 128, 128]},
+               "serve/float32/b0":   {"9-6-6": ["smallk", 256, 128, 128],
+                                      "ladder:6-6": [500.0, 128, 512, 2048]}}}
 
-v6, like v5 before it, extends the *kind vocabulary* without changing the
-entry format: ``ops.PLAN_KINDS`` gains ``int8`` (the quantized distance
-template, always keyed under dtype ``int8``) and ``init`` (the fused
-k-means++ seeding kernel). v5 extended v4 the same way with ``pruned``.
-v4/v5 files load unchanged; the version bump marks that a v6 table may
-hold ``int8/...`` or ``init/...`` keys an older runtime would reject at
-``select_params``.
+v7, like v5 and v6 before it, extends the *kind vocabulary* without
+changing the entry format: ``ops.PLAN_KINDS`` gains ``serve`` — the
+assignment kernel launched as an AOT-compiled predict cell, with winners
+recorded per serving *bucket* shape. v7 additionally adds one pseudo-entry
+under the serve kind, keyed ``ladder:<log2 K>-<log2 F>`` instead of a
+shape bucket: ``[window_us, bucket, bucket, ...]`` — the tuned
+micro-batching window and row-count bucket ladder for a model shape
+(``put_ladder`` / ``lookup_ladder``; the 4-field winner accessors never
+see it because ladder keys are not shape buckets). v4-v6 files load
+unchanged; the version bump marks that a v7 table may hold ``serve/...``
+keys an older runtime would reject at ``select_params``.
 
 The assignment-only kernel, the one-pass Lloyd kernel and the one-pass FT
 kernel (``lloyd_ft``: one-pass footprint plus checksum scratch and the
@@ -63,7 +69,7 @@ _DEFAULT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "core", "autotune_table.json")
 _PATH_ENV = "REPRO_AUTOTUNE_TABLE"   # still honoured, but only here
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 _DEFAULT_DTYPE = "float32"
 _LEGACY_VARIANT = "generic"
 
@@ -117,9 +123,9 @@ class AutotuneCache:
 
     @staticmethod
     def _upgrade(raw: Any) -> dict[str, dict[str, list]]:
-        """Any on-disk schema -> the current in-memory shape (v4, v5 and
-        v6 share the entry format; v5/v6 only widen the kind
-        vocabulary)."""
+        """Any on-disk schema -> the current in-memory shape (v4-v7 share
+        the entry format; v5-v7 only widen the kind vocabulary, plus v7's
+        serve-kind ladder pseudo-entries)."""
         if isinstance(raw, dict) and raw.get("schema", 1) >= 4:
             return {k: dict(v) for k, v in raw["kinds"].items()}
         if isinstance(raw, dict) and raw.get("schema", 1) == 3:
@@ -191,6 +197,42 @@ class AutotuneCache:
                     m, k, f, mode="model", kind=kind,
                     dtype=jnp.dtype(_dtype_name(dtype)), batch=batch)
             return self._computed[key]
+
+    # -- serving ladder (schema v7 pseudo-entries) -------------------------
+
+    @staticmethod
+    def _ladder_bucket(k: int, f: int) -> str:
+        """Ladder entries are per model shape (K, F) — the row count is
+        the thing being bucketed, so it cannot be part of the key. The
+        ``ladder:`` prefix keeps these out of the shape-bucket namespace."""
+        b = lambda v: int(math.log2(max(v, 1)))
+        return f"ladder:{b(k)}-{b(f)}"
+
+    def put_ladder(self, k: int, f: int, *, buckets: Iterable[int],
+                   window_us: float, dtype: Any = None) -> None:
+        """Record a tuned serving plan — the row-count bucket ladder and
+        micro-batching window (µs) — for a model shape (see
+        ``repro.serve.tuning.plan_ladder``)."""
+        entry = [float(window_us),  # analysis: allow=host-sync — host config
+                 *(int(b) for b in buckets)]  # analysis: allow=host-sync
+        with self._lock:
+            self._load().setdefault(_key("serve", dtype), {})[
+                self._ladder_bucket(k, f)] = entry
+
+    def lookup_ladder(self, k: int, f: int, *, dtype: Any = None,
+                      ) -> Optional[tuple[tuple[int, ...], float]]:
+        """Persisted ``(buckets, window_us)`` serving plan for the model
+        shape, or None — unlike ``lookup`` there is no computed fallback
+        here (planning a ladder walks the whole candidate family, so the
+        serve layer decides when to pay that; see ``tuning.plan_ladder``)."""
+        with self._lock:
+            hit = self._load().get(_key("serve", dtype), {}).get(
+                self._ladder_bucket(k, f))
+            if hit is None:
+                return None
+            window_us, *buckets = hit   # JSON floats/ints: host data
+            return (tuple(int(b) for b in buckets),  # analysis: allow=host-sync
+                    float(window_us))  # analysis: allow=host-sync
 
     def build(self, shapes: Iterable[tuple[int, int, int]], *,
               mode: str = "model", dtype: Any = None,

@@ -734,6 +734,12 @@ class KMeans:
         return [slice(s, min(s + chunk, m)) for s in range(0, m, chunk)]
 
     def _predict_block(self, x: jax.Array) -> tuple:
+        if x.shape[0] == 0:
+            # zero-row request (a serving layer sees these): no labels, no
+            # kernel launch — and no autotune lookup keyed by an M=0 shape
+            return (jnp.zeros((0,), jnp.int32),
+                    jnp.zeros((0,), jnp.float32),
+                    jnp.zeros((), jnp.int32))
         backend = self._predict_backend()
         params = self._resolve_params(x.shape[0], x.shape[1],
                                       backend=backend)
@@ -783,6 +789,22 @@ class KMeans:
         self._check_fitted()
         _, dist, _ = self._predict_full(jnp.asarray(x))
         return -float(jnp.sum(dist))
+
+    def to_service(self, *, buckets: Optional[tuple] = None,
+                   window_s: Optional[float] = None) -> Any:
+        """Hand the fitted model to the online serving layer: a
+        :class:`repro.serve.KMeansService` with every bucketed predict
+        cell AOT-compiled for this model's predict backend and compute
+        dtype, centroids hot-swappable via its versioned store, and this
+        estimator wired in as the background refinement loop
+        (``service.refine`` -> :meth:`partial_fit`). Bucket ladder and
+        batching window default to the tuned plan in the autotune cache
+        (see ``repro.serve.tuning.plan_ladder``); docs/serving.md covers
+        the architecture."""
+        self._check_fitted()
+        from repro.serve import KMeansService   # circular-import-safe
+        return KMeansService.from_estimator(self, buckets=buckets,
+                                            window_s=window_s)
 
     # ------------------------------------------------------------------
     # serializable state

@@ -254,6 +254,11 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
     ``dtype=jnp.int8`` and the itemsize/peak lookups do the rest. The f32
     scale vectors and centroid norms are O(M + K) streams — noise next to
     the O(M F) tiles — and are not charged.
+
+    The ``serve`` kind is the ``assign`` score plus the fixed per-launch
+    dispatch cost (``hw.DISPATCH_OVERHEAD_S``): an online predict cell is
+    one assignment-kernel launch at a bucket shape, and at serving sizes
+    the launch cost is a first-order term, not noise.
     """
     if kind == "batched":
         return batch * model_score(m, k, f, p, dtype=dtype, kind="lloyd",
@@ -271,6 +276,14 @@ def model_score(m: int, k: int, f: int, p: KernelParams,
         # per-grid-step issue cost breaks the tie between tile sizes that
         # pad M equally — bigger tiles amortize it, like real hardware
         return float(batch * (hbm_bytes / HBM_BW + (mp // bn) * 1e-7))
+    if kind == "serve":
+        # one AOT predict-cell launch: the assignment kernel at the bucket
+        # shape plus the fixed per-launch dispatch cost. The dispatch term
+        # is what micro-batching amortizes — summing these scores over a
+        # request-size distribution is how the ladder planner trades
+        # padding waste against launch count (repro.serve.tuning).
+        return _hw.DISPATCH_OVERHEAD_S + model_score(
+            m, k, f, p, dtype=dtype, kind="assign", variant=variant)
     p = clamp_params(m, k, f, p, dtype)
     bytes_per = jnp.dtype(dtype).itemsize
     mp = -(-m // p.block_m) * p.block_m
@@ -359,7 +372,12 @@ def measure_score(m: int, k: int, f: int, p: KernelParams, *, iters: int = 3,
 
     The ``int8`` kind feeds float data through the full quantize +
     int8-template path (``fused_assign_int8``), so the timed number
-    includes the per-call centroid quantization the real iteration pays."""
+    includes the per-call centroid quantization the real iteration pays.
+
+    The ``serve`` kind times the assignment kernel at the bucket shape —
+    the same pipeline as ``assign``. The per-launch dispatch constant the
+    serve *model* adds is shape-independent, so measured rankings agree
+    with modeled ones up to that constant."""
     from repro.kernels.ops import (fused_assign, fused_assign_int8,
                                    fused_lloyd, fused_lloyd_batched,
                                    fused_lloyd_ft, fused_lloyd_pruned,
@@ -465,6 +483,11 @@ def select_params(m: int, k: int, f: int, *, mode: str = "model",
     from repro.kernels.ops import resolve_variant
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+    # Degenerate shapes: a serving layer legitimately sees zero-row
+    # requests (the ops layer early-returns before any launch, but a cache
+    # lookup may still ask for a selection at M=0). Score the smallest
+    # real shape instead of dividing by a zero-row padded extent.
+    m, k, f = max(m, 1), max(k, 1), max(f, 1)
     best, best_s = None, float("inf")
     if kind == "init":
         # the fused k-means++ round kernel has one tile axis: block_m.

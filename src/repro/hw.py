@@ -21,6 +21,12 @@ VMEM_BYTES: int = 128 * 2**20
 # Usable VMEM per core for kernel working sets: half of the physical
 # 128 MiB, leaving room for Mosaic's own double-buffering scratch.
 VMEM_BUDGET: int = 96 * 2**20
+# Fixed host-side cost of one kernel launch (runtime dispatch + grid
+# setup), independent of the grid. It is invisible next to a multi-ms fit
+# step but dominates small online predict cells, which is why the serving
+# model (``kind="serve"`` in repro.core.autotune) adds it per launch and
+# the micro-batcher exists at all.
+DISPATCH_OVERHEAD_S: float = 5e-6
 
 
 def peak_flops(dtype: Any) -> float:

@@ -408,6 +408,11 @@ def fused_assign(
     Returns (assign (M,) int32, partial min distance (M,) f32). Add
     ``sum(x**2, -1)`` for true squared distances.
     """
+    if not isinstance(x, DataPlan) and x.shape[0] == 0:
+        # zero-row request (serving edge case): nothing to assign, and
+        # padding up to a tile would still launch a full grid — and worse,
+        # a params=None call would ask the autotuner to model an M=0 shape
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32)
     plan, cp, cn, params = _resolve_padded(x, c, params, "assign")
     variant = resolve_variant(c.shape[0], params, variant)
     if interpret is None:
@@ -482,6 +487,9 @@ def fused_assign_int8(
     the ~1/127-per-operand quantization step (see
     :mod:`repro.kernels.distance_argmin_int8`).
     """
+    if not isinstance(x, QuantPlan) and x.shape[0] == 0:
+        # zero-row request: same serving edge case as fused_assign
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32)
     plan, cqp, scp, cn, params = _resolve_padded_int8(x, c, params)
     variant = resolve_variant(c.shape[0], params, variant)
     if interpret is None:
@@ -935,7 +943,7 @@ def plan_injection_tile(m: int, k: int, f: int, params: KernelParams,
 # repro.core.autotune.KINDS re-exports it, so extending the family (and
 # the autotune cache schema with it) is a single-point change here.
 PLAN_KINDS: tuple[str, ...] = ("assign", "lloyd", "lloyd_ft", "batched",
-                               "pruned", "int8", "init")
+                               "pruned", "int8", "init", "serve")
 
 # Per-kind compute dtypes: the f32 template family lowers at every
 # supported width; the int8 template is its own dtype notch (x/c tiles are
@@ -952,6 +960,11 @@ PLAN_KIND_DTYPES: dict[str, tuple[str, ...]] = {
     "pruned": ("float32", "bfloat16", "float16"),
     "int8": ("int8",),
     "init": ("float32",),
+    # serve = the assignment kernel launched as an AOT-compiled predict
+    # cell at a serving bucket shape (repro.serve). Same Pallas plan as
+    # "assign"; a separate kind so bucket-shaped tile winners and the
+    # per-launch dispatch cost live in their own autotune-cache namespace.
+    "serve": ("float32", "bfloat16", "float16"),
 }
 
 
@@ -1098,7 +1111,9 @@ def kernel_plan(kind: str, m: int, k: int, f: int,
         xs = jax.ShapeDtypeStruct((mp, fp), dt)
         cs = jax.ShapeDtypeStruct((kp, fp), dt)
         cn = jax.ShapeDtypeStruct((1, kp), jnp.float32)
-        if kind == "assign":
+        if kind in ("assign", "serve"):
+            # a serve predict cell launches the assignment kernel at the
+            # bucket shape — same plan, serving-specific tile selection
             var = resolve_variant(k, p, variant)
             fn = functools.partial(_da.distance_argmin, block_m=p.block_m,
                                    block_k=p.block_k, block_f=p.block_f,

@@ -1,9 +1,12 @@
-"""Serving launcher: batched prefill + decode on the local mesh.
+"""Serving launcher: micro-batched prefill + decode on the local mesh.
 
-Continuous-batch-flavoured driver: a queue of requests is served in fixed
-batches through the production prefill/decode steps (same callables the
-dry-run lowers for the decode cells), with greedy sampling and per-request
-length accounting.
+The request queue rides the generic micro-batching layer from
+``repro.serve`` — the same :class:`~repro.serve.MicroBatcher` the
+k-means service uses. Each request submits its ``(1, prompt_len)``
+prompt; the batcher coalesces a wave into one row-concatenated batch,
+the dispatch function pads it to the fixed compiled batch shape, runs
+prefill + greedy decode once, and the batcher scatters each request its
+generated row.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
         --requests 8 --gen 32
@@ -17,6 +20,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import LM
+from repro.serve import MicroBatcher
 
 
 def main(argv=None):
@@ -36,16 +40,15 @@ def main(argv=None):
     prefill = jax.jit(lm.prefill, static_argnames=("max_len",))
     decode = jax.jit(lm.decode_step)
 
-    rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
-             for _ in range(args.requests)]
-    served, t0 = 0, time.time()
-    total_tokens = 0
-    while queue:
-        chunk, queue = queue[:args.batch], queue[args.batch:]
-        while len(chunk) < args.batch:     # pad the last batch
-            chunk.append(chunk[-1])
-        batch = {"tokens": jnp.asarray(np.stack(chunk), jnp.int32)}
+    def generate(prompts):
+        """One coalesced wave: pad rows to the compiled batch shape,
+        prefill + greedy decode, return the generated ``(rows, gen)``
+        tokens (sliced back so the batcher can scatter per request)."""
+        rows = prompts.shape[0]
+        if rows < args.batch:              # pad the tail wave
+            prompts = np.concatenate(
+                [prompts, np.repeat(prompts[-1:], args.batch - rows, 0)])
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if cfg.frontend == "audio_stub":
             batch["audio_embeds"] = jnp.zeros(
                 (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
@@ -54,12 +57,26 @@ def main(argv=None):
                 (args.batch, cfg.num_patches, cfg.d_model), jnp.float32)
         logits, caches = prefill(params, batch, max_len=max_len)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        generated = [tok]
         for t in range(args.prompt_len, max_len - 1):
             logits, caches = decode(params, caches, tok,
                                     jnp.asarray(t, jnp.int32))
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        served += min(args.batch, args.requests - served)
-        total_tokens += args.batch * args.gen
+            generated.append(tok)
+        return (jnp.concatenate(generated, axis=1)[:rows],)
+
+    batcher = MicroBatcher(generate)
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, cfg.vocab_size, size=(1, args.prompt_len))
+             for _ in range(args.requests)]
+    served, total_tokens, t0 = 0, 0, time.time()
+    while queue:
+        wave, queue = queue[:args.batch], queue[args.batch:]
+        tickets = [batcher.submit(p) for p in wave]
+        batcher.flush()
+        for tk in tickets:
+            total_tokens += tk.result()[0].shape[1]
+        served += len(wave)
         print(f"served {served}/{args.requests} requests")
     dt = time.time() - t0
     print(f"{total_tokens} tokens in {dt:.1f}s "

@@ -1,0 +1,28 @@
+"""Online serving layer: AOT-compiled bucketed predict, dynamic
+micro-batching, versioned centroid hot-swap.
+
+The ROADMAP's production framing (assignment-heavy traffic against
+slowly-evolving centroids — the Flash-KMeans regime) needs three things
+the training-side library does not provide: requests must never pay
+trace-or-compile latency (:class:`ServeCompiler` — every ``(bucket,
+variant)`` predict cell is compiled ahead of time and the recompile gate
+proves zero warm compiles), concurrent small requests must share kernel
+launches (:class:`MicroBatcher` — dispatch overhead is per launch, not
+per request), and centroid refreshes must not pause inference
+(:class:`CodebookStore` — immutable versioned codebooks, captured per
+micro-batch). :class:`KMeansService` assembles the three behind
+``KMeans.to_service()``; ``tuning.plan_ladder`` picks the bucket ladder
+and batching window from the autotune model (``serve`` kind, cache
+schema v7). See docs/serving.md.
+"""
+from repro.serve.batcher import MicroBatcher, Ticket
+from repro.serve.compiler import DEFAULT_BUCKETS, ServeCompiler
+from repro.serve.service import KMeansService, ServeResult
+from repro.serve.store import Codebook, CodebookStore
+from repro.serve.tuning import ServePlan, plan_ladder
+
+__all__ = [
+    "Codebook", "CodebookStore", "DEFAULT_BUCKETS", "KMeansService",
+    "MicroBatcher", "ServeCompiler", "ServePlan", "ServeResult", "Ticket",
+    "plan_ladder",
+]

@@ -1,0 +1,171 @@
+"""AOT-compiled bucketed predict cells.
+
+Online predict traffic has arbitrary per-request row counts, but jit
+caches are keyed by exact shapes: serving raw request shapes means a
+trace-and-compile stall on every new row count — seconds of latency on a
+microsecond request. The fix is the same discretization the autotune
+table uses for problem shapes: requests are padded up to a small ladder
+of row-count *buckets*, and every ``(bucket, variant)`` predict cell is
+lowered and compiled ahead of time via ``jax.jit(...).lower().compile()``
+before the service accepts traffic. A request can only ever hit a
+precompiled executable, so no request pays trace-or-compile latency —
+the invariant ``repro.analysis.recompile`` verifies with zero warm (and
+cold!) compiles across the registered cell set.
+
+Centroids enter each cell as a runtime argument, not a compile-time
+constant: a :class:`~repro.serve.store.CodebookStore` hot-swap therefore
+never triggers recompilation — the new codebook just flows into the same
+executables.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+# Default row-count ladder: geometric with ratio 4 — adjacent-bucket
+# padding wastes at most 4x rows while keeping the compiled-cell count
+# (and AOT compile time) small. ``repro.serve.tuning.plan_ladder`` tunes
+# this per model shape.
+DEFAULT_BUCKETS: tuple[int, ...] = (128, 512, 2048)
+
+
+class ServeCompiler:
+    """Ahead-of-time compiled predict cells for one model shape.
+
+    Given a model's ``(K, F)``, compute dtype and assignment backend (the
+    backend-variant axis: the same registry objects the estimator
+    dispatches through), compiles one executable per row bucket at
+    construction. ``dispatch`` routes a request to the smallest bucket
+    that fits, padding with zero rows and slicing the pad back off;
+    requests larger than the top bucket are chunked through it, so device
+    allocation is bounded by the largest bucket regardless of request
+    size.
+    """
+
+    def __init__(self, backend: Any, n_clusters: int, n_features: int, *,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 dtype: Any = jnp.float32,
+                 autotune: Optional[Any] = None,
+                 params: Optional[ops.KernelParams] = None,
+                 in_dtype: Any = jnp.float32) -> None:
+        if not buckets:
+            raise ValueError("need at least one row bucket")
+        sizes = tuple(sorted(
+            {int(b) for b in buckets}))  # analysis: allow=host-sync — config
+        if sizes[0] < 1:
+            raise ValueError(f"buckets must be positive, got {buckets}")
+        self.backend = backend
+        self.n_clusters = int(n_clusters)  # analysis: allow=host-sync
+        self.n_features = int(n_features)  # analysis: allow=host-sync
+        self.buckets = sizes
+        self.dtype = jnp.dtype(dtype)
+        self.in_dtype = jnp.dtype(in_dtype)
+        self._autotune = autotune
+        self._params = params
+        self._cells: dict[int, Any] = {}
+        for b in sizes:
+            self._cells[b] = self._compile_cell(b)
+
+    # -- compilation (construction time only) ------------------------------
+
+    def _bucket_params(self, bucket: int) -> Optional[ops.KernelParams]:
+        """Tile winner for one bucket shape from the ``serve`` autotune
+        kind — bucket-shaped cells are their own tuning regime (the
+        dispatch constant in their score is first-order at these sizes)."""
+        if not self.backend.takes_params:
+            return None
+        p = self._params
+        if p is None:
+            if self._autotune is None:
+                from repro.api.cache import default_cache
+                cache = default_cache()
+            else:
+                cache = self._autotune
+            _, p = cache.lookup(bucket, self.n_clusters, self.n_features,
+                                kind="serve", dtype=self.dtype)
+        return ops.clamp_params(bucket, self.n_clusters, self.n_features,
+                                p, dtype=self.dtype)
+
+    def _cell_fn(self, p: Optional[ops.KernelParams]) -> Callable:
+        backend, dtype = self.backend, self.dtype
+
+        def cell(x: jax.Array, c: jax.Array) -> tuple:
+            return backend(x.astype(dtype), c.astype(dtype), params=p)
+
+        return cell
+
+    def _compile_cell(self, bucket: int) -> Any:
+        """``jit -> lower -> compile`` one predict cell at the bucket's
+        exact input shapes. The returned executable accepts only those
+        shapes — the discretization that makes zero-compile serving
+        checkable rather than hoped-for."""
+        p = self._bucket_params(bucket)
+        x_s = jax.ShapeDtypeStruct((bucket, self.n_features), self.in_dtype)
+        c_s = jax.ShapeDtypeStruct((self.n_clusters, self.n_features),
+                                   jnp.float32)
+        return jax.jit(self._cell_fn(p)).lower(x_s, c_s).compile()
+
+    def cell(self, bucket: int) -> Any:
+        """The compiled executable for one registered bucket."""
+        return self._cells[bucket]
+
+    # -- request routing ---------------------------------------------------
+
+    def bucket_for(self, rows: int) -> int:
+        """Smallest bucket holding ``rows`` (callers chunk above the top
+        bucket; see ``dispatch``)."""
+        for b in self.buckets:
+            if rows <= b:
+                return b
+        return self.buckets[-1]
+
+    def _pad_rows(self, x: Any, rows: int) -> Any:
+        """Pad with zero rows up to the bucket. Host-side (numpy) inputs
+        pad on the host — one memcpy, no device round-trip before the
+        single device transfer the compiled call itself performs."""
+        if x.dtype != self.in_dtype:
+            x = x.astype(self.in_dtype)
+        pad = rows - x.shape[0]
+        if pad == 0:
+            return x
+        if isinstance(x, np.ndarray):
+            return np.concatenate(
+                [x, np.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+        return jnp.concatenate(
+            [x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+
+    def dispatch(self, x: Any, centroids: jax.Array) -> tuple:
+        """Route one ``(m, F)`` request batch through the compiled cells.
+
+        Returns ``(assign (m,) i32, sq-dist (m,) f32, detected i32)`` —
+        the backend's uniform predict triple. ``m = 0`` returns empty
+        outputs without touching the device; ``m`` beyond the top bucket
+        runs bounded chunks of it.
+        """
+        m, f = x.shape
+        if f != self.n_features:
+            raise ValueError(f"request has {f} features, cells are "
+                             f"compiled for {self.n_features}")
+        if m == 0:
+            return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32),
+                    jnp.zeros((), jnp.int32))
+        top = self.buckets[-1]
+        if m > top:
+            outs = [self.dispatch(x[i:i + top], centroids)
+                    for i in range(0, m, top)]
+            am = jnp.concatenate([o[0] for o in outs])
+            md = jnp.concatenate([o[1] for o in outs])
+            det = jnp.sum(jnp.stack([o[2] for o in outs]), axis=0)
+            return am, md, det
+        bucket = self.bucket_for(m)
+        am, md, det = self._cells[bucket](self._pad_rows(x, bucket),
+                                          centroids)
+        return am[:m], md[:m], det
+
+
+__all__ = ["ServeCompiler", "DEFAULT_BUCKETS"]

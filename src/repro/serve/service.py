@@ -1,0 +1,182 @@
+"""The assembled k-means serving stack: compiler + batcher + store.
+
+:class:`KMeansService` is the estimator -> serving handoff
+(``KMeans.to_service()``): it freezes the fitted model's predict backend
+into AOT-compiled bucketed cells (:class:`ServeCompiler`), funnels
+requests through a :class:`MicroBatcher`, and reads centroids from a
+versioned :class:`CodebookStore` so background refinement can
+``publish`` without pausing inference. Each micro-batch captures one
+codebook at flush time — every request in the batch is answered from a
+single consistent centroid version, recorded on its result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.compiler import DEFAULT_BUCKETS, ServeCompiler
+from repro.serve.store import CodebookStore
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """One request's answer: per-row labels and true squared distances
+    (host numpy views of the micro-batch readback — see the batcher's
+    ``_host_read``), the backend's fault-detection counter for the
+    micro-batch this request shared, and the codebook version it was
+    served from."""
+
+    labels: np.ndarray
+    sq_dists: np.ndarray
+    detected: np.ndarray
+    version: int
+
+
+class KMeansService:
+    """Online predict service over a fitted k-means model.
+
+    ``predict`` enqueues a ``(rows, F)`` request and blocks on its
+    ticket; with the background window loop running (``start``) requests
+    from many threads coalesce into shared launches, otherwise each
+    ``predict`` flushes synchronously (deterministic — the test and
+    benchmark mode). ``publish`` hot-swaps centroids; ``refine`` runs one
+    ``partial_fit`` step on recent traffic and publishes the result.
+    """
+
+    def __init__(self, compiler: ServeCompiler, store: CodebookStore, *,
+                 window_s: float = 0.0,
+                 estimator: Optional[Any] = None,
+                 on_dispatch: Optional[Callable] = None) -> None:
+        if compiler.n_clusters != store.current().shape[0] \
+                or compiler.n_features != store.current().shape[1]:
+            raise ValueError(
+                f"compiler cells are ({compiler.n_clusters}, "
+                f"{compiler.n_features}), store serves "
+                f"{store.current().shape}")
+        self.compiler = compiler
+        self.store = store
+        self.estimator = estimator
+        # observation seam: called with the captured codebook after each
+        # flush pins its version, before the kernel launch — the hook the
+        # hot-swap tests use to publish mid-flight, and a metrics
+        # tap-in point in production
+        self._on_dispatch = on_dispatch
+        self.batcher = MicroBatcher(self._dispatch, window_s=window_s)
+
+    @classmethod
+    def from_estimator(cls, estimator: Any, *,
+                       buckets: Optional[tuple[int, ...]] = None,
+                       window_s: Optional[float] = None,
+                       on_dispatch: Optional[Callable] = None,
+                       ) -> "KMeansService":
+        """Build the serving stack from a fitted :class:`~repro.api.KMeans`
+        (the usual entry is ``KMeans.to_service()``). Bucket ladder and
+        window default to the tuned plan persisted in the estimator's
+        autotune cache (``tuning.plan_ladder``), falling back to
+        ``DEFAULT_BUCKETS`` and a zero window."""
+        centroids = estimator.cluster_centers_
+        k, f = centroids.shape
+        backend = estimator._predict_backend()
+        if buckets is None or window_s is None:
+            plan = estimator.autotune.lookup_ladder(
+                k, f, dtype=estimator.compute_dtype)
+            if buckets is None:
+                buckets = plan[0] if plan else DEFAULT_BUCKETS
+            if window_s is None:
+                window_s = plan[1] * 1e-6 if plan else 0.0
+        compiler = ServeCompiler(backend, k, f, buckets=buckets,
+                                 dtype=estimator.compute_dtype,
+                                 autotune=estimator.autotune,
+                                 params=estimator.params)
+        return cls(compiler, CodebookStore(centroids), window_s=window_s,
+                   estimator=estimator, on_dispatch=on_dispatch)
+
+    # -- request path ------------------------------------------------------
+
+    def _dispatch(self, batch: Any) -> tuple:
+        cb = self.store.current()   # pin the version for this whole batch
+        if self._on_dispatch is not None:
+            self._on_dispatch(cb)
+        am, md, det = self.compiler.dispatch(batch, cb.centroids)
+        return am, md, det, cb.version
+
+    def predict(self, x: Any) -> ServeResult:
+        """Serve one ``(rows, F)`` request (rows may be zero)."""
+        ticket = self.batcher.submit(x)
+        if not self.batcher.running:
+            self.batcher.flush()
+        am, md, det, version = ticket.result()
+        return ServeResult(am, md, det, version)
+
+    def start(self) -> None:
+        """Run the micro-batch window loop (concurrent serving mode)."""
+        self.batcher.start()
+
+    def stop(self) -> None:
+        self.batcher.stop()
+
+    # -- refinement / hot-swap ---------------------------------------------
+
+    def publish(self, centroids: Any) -> int:
+        """Hot-swap: make ``centroids`` the current codebook. In-flight
+        micro-batches finish on the version they captured; returns the
+        new version."""
+        return self.store.publish(centroids).version
+
+    def refine(self, x: Any) -> int:
+        """One background refinement step: ``partial_fit`` the wrapped
+        estimator on recent traffic ``x`` and publish the moved
+        centroids. Inference never pauses — this runs concurrently with
+        ``predict`` by construction of the store."""
+        if self.estimator is None:
+            raise ValueError(
+                "service was built without an estimator (plain "
+                "ServeCompiler + CodebookStore); publish() refined "
+                "centroids directly instead")
+        self.estimator.partial_fit(x)
+        return self.publish(self.estimator.cluster_centers_)
+
+    # -- serialization boundary --------------------------------------------
+
+    def get_state(self) -> dict:
+        """Host-side snapshot: the codebook store (bit-identical round
+        trip) plus the serving configuration; the wrapped estimator
+        serializes through its own ``get_state`` when present."""
+        return {
+            "store": self.store.get_state(),
+            "config": {
+                "backend": self.compiler.backend.name,
+                "n_clusters": self.compiler.n_clusters,
+                "n_features": self.compiler.n_features,
+                "buckets": list(self.compiler.buckets),
+                "dtype": self.compiler.dtype.name,
+                "window_us": self.batcher.window_s * 1e6,
+            },
+            "estimator": (None if self.estimator is None
+                          else self.estimator.get_state()),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "KMeansService":
+        from repro.api.registry import get_backend
+        cfg = state["config"]
+        estimator = None
+        if state.get("estimator") is not None:
+            from repro.api.estimator import KMeans
+            estimator = KMeans.from_state(state["estimator"])
+        store = CodebookStore.from_state(state["store"])
+        compiler = ServeCompiler(
+            get_backend(cfg["backend"]), cfg["n_clusters"],
+            cfg["n_features"], buckets=tuple(cfg["buckets"]),
+            dtype=jnp.dtype(cfg["dtype"]),
+            autotune=None if estimator is None else estimator.autotune,
+            params=None if estimator is None else estimator.params)
+        return cls(compiler, store, window_s=cfg["window_us"] * 1e-6,
+                   estimator=estimator)
+
+
+__all__ = ["KMeansService", "ServeResult"]

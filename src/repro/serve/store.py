@@ -1,0 +1,134 @@
+"""Versioned centroid store — the serving side of the hot-swap protocol.
+
+A serving process has two loops touching the centroids: the inference
+path reads them on every micro-batch, and a background refinement loop
+(``KMeans.partial_fit`` on recent traffic) wants to move them. Guarding a
+mutable array with a lock would stall every request behind a refinement
+step; instead the store holds *immutable* versioned codebooks and
+``publish`` swaps an atomic reference. Readers capture one
+:class:`Codebook` at micro-batch flush time and finish on it — an
+in-flight batch never sees a torn or half-updated centroid set, and the
+next batch picks up the new version without any pause (docs/serving.md,
+"hot-swap protocol").
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Codebook:
+    """One immutable published centroid set: ``(K, F)`` f32 on device,
+    tagged with its monotonically increasing version."""
+
+    version: int
+    centroids: jax.Array
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.centroids.shape[0], self.centroids.shape[1])
+
+
+class CodebookStore:
+    """Thread-safe history of published codebooks.
+
+    ``publish`` is the only mutation: it freezes the given centroids as a
+    new :class:`Codebook` under the next version and makes it current.
+    ``current()`` is a lock-protected reference read — O(1), never blocks
+    on the device — so the inference path can call it per flush. A bounded
+    window of past versions (``keep``) stays retrievable for batches that
+    captured them mid-swap; serving state round-trips bit-identically
+    through ``get_state``/``from_state``.
+    """
+
+    def __init__(self, centroids: Any, *, keep: int = 8,
+                 _version: int = 1) -> None:
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self._keep = keep
+        self._lock = threading.Lock()
+        self._history: dict[int, Codebook] = {}
+        self._current = Codebook(_version,
+                                 jnp.asarray(centroids, jnp.float32))
+        self._history[_version] = self._current
+
+    def publish(self, centroids: Any) -> Codebook:
+        """Freeze ``centroids`` as the next version and make it current.
+        Batches already in flight keep the codebook they captured; the
+        next flush serves this one."""
+        frozen = jnp.asarray(centroids, jnp.float32)
+        cur = self._current
+        if frozen.shape != cur.centroids.shape:
+            raise ValueError(
+                f"published centroids have shape {frozen.shape}, store "
+                f"serves {cur.centroids.shape}; the predict cells are "
+                f"AOT-compiled for one (K, F) — a model-shape change is a "
+                f"new service, not a hot-swap")
+        with self._lock:
+            cb = Codebook(self._current.version + 1, frozen)
+            self._history[cb.version] = cb
+            self._current = cb
+            while len(self._history) > self._keep:
+                del self._history[min(self._history)]
+            return cb
+
+    def current(self) -> Codebook:
+        """The codebook new batches should capture."""
+        with self._lock:
+            return self._current
+
+    def get(self, version: int) -> Codebook:
+        """A specific retained version (KeyError once evicted)."""
+        with self._lock:
+            try:
+                return self._history[version]
+            except KeyError:
+                raise KeyError(
+                    f"codebook version {version} not retained (window "
+                    f"keeps {self._keep}; have "
+                    f"{sorted(self._history)})") from None
+
+    @property
+    def versions(self) -> tuple[int, ...]:
+        with self._lock:
+            return tuple(sorted(self._history))
+
+    # -- serialization boundary (host transfer is the job here) ------------
+
+    def get_state(self) -> dict:
+        """Host-side snapshot: every retained version's centroids as f32
+        numpy arrays plus the current version. ``from_state`` rebuilds a
+        store whose codebooks are bit-identical."""
+        with self._lock:
+            history = dict(self._history)
+            cur = self._current.version
+        return {
+            "keep": self._keep,
+            "current": cur,
+            "codebooks": {str(v): np.asarray(cb.centroids, np.float32)
+                          for v, cb in history.items()},
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "CodebookStore":
+        versions = sorted(int(v) for v in state["codebooks"])
+        if not versions:
+            raise ValueError("store state holds no codebooks")
+        store = cls(state["codebooks"][str(versions[0])],
+                    keep=state["keep"], _version=versions[0])
+        for v in versions[1:]:
+            cb = Codebook(v, jnp.asarray(state["codebooks"][str(v)],
+                                         jnp.float32))
+            store._history[v] = cb
+        cur = int(state["current"])
+        store._current = store._history[cur]
+        return store
+
+
+__all__ = ["Codebook", "CodebookStore"]

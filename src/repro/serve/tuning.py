@@ -1,0 +1,126 @@
+"""Serving-plan autotuning: bucket ladder + micro-batch window.
+
+The serving layer has two knobs the kernel autotuner does not cover: the
+row-count *bucket ladder* (more buckets = less padding waste but more
+compiled cells, and more of the small launches whose dispatch cost the
+``serve`` model charges per call) and the *batching window* (the latency
+a request pays to share a launch). Both are planned from the same
+analytical model the tile selection uses — ``model_score(kind="serve")``
+is the assign score plus ``hw.DISPATCH_OVERHEAD_S`` — by minimizing the
+expected per-row cost over a log-uniform request-size distribution, the
+same "discrete sizes share a winner" granularity as the paper's shape
+table. Plans persist as schema-v7 ladder pseudo-entries of the autotune
+cache (``AutotuneCache.put_ladder``) next to the per-bucket tile winners
+they were scored with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.kernels import ops
+from repro.serve.compiler import DEFAULT_BUCKETS
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """One tuned serving configuration for a model shape: the row-bucket
+    ladder, the micro-batch window (µs), and the per-bucket tile winners
+    the ladder was scored with."""
+
+    buckets: tuple[int, ...]
+    window_us: float
+    winners: dict[int, tuple[str, ops.KernelParams]]
+
+
+def _ladder_cost(ladder: tuple[int, ...], cost: dict[int, float],
+                 sizes: tuple[int, ...]) -> float:
+    """Expected one-request cost over the size distribution: each request
+    runs the smallest bucket that fits it, oversize requests chunk
+    through the top bucket."""
+    total = 0.0
+    top = ladder[-1]
+    for r in sizes:
+        if r > top:
+            total += -(-r // top) * cost[top]
+            continue
+        total += cost[min(b for b in ladder if b >= r)]
+    return total / len(sizes)
+
+
+def plan_ladder(n_clusters: int, n_features: int, *,
+                dtype: Any = jnp.float32,
+                cache: Optional[Any] = None,
+                min_rows: int = 64, max_rows: int = 4096,
+                max_cells: int = 4,
+                mode: str = "model") -> ServePlan:
+    """Pick the bucket ladder and window for one model shape.
+
+    Candidates are the powers of two in ``[min_rows, max_rows]``; every
+    ladder of at most ``max_cells`` of them containing the top candidate
+    (so oversize chunking stays bounded) is scored with
+    :func:`_ladder_cost` and the cheapest wins. The window is set to the
+    modeled launch time of the ladder's top bucket — coalescing longer
+    than one full launch adds latency the launch can no longer amortize.
+    If ``cache`` is given, the plan and its per-bucket winners persist
+    (``serve`` kind, schema v7) for ``KMeansService.from_estimator`` to
+    find.
+    """
+    candidates = []
+    b = 1
+    while b < min_rows:
+        b *= 2
+    while b <= max_rows:
+        candidates.append(b)
+        b *= 2
+    if not candidates:
+        raise ValueError(f"no power-of-two buckets in "
+                         f"[{min_rows}, {max_rows}]")
+    winners: dict[int, tuple[str, ops.KernelParams]] = {}
+    cost: dict[int, float] = {}
+    for size in candidates:
+        variant, p = autotune.select_params(size, n_clusters, n_features,
+                                            mode=mode, dtype=dtype,
+                                            kind="serve")
+        winners[size] = (variant, p)
+        cost[size] = autotune.model_score(size, n_clusters, n_features, p,
+                                          dtype=dtype, kind="serve",
+                                          variant=variant)
+    # log-uniform request sizes: serving traffic spans single-row probes
+    # to bulk scoring; a linear grid would drown the small sizes that
+    # make ladders matter
+    sizes = []
+    r = 1
+    while r <= 2 * max_rows:
+        sizes.append(r)
+        r *= 2
+    top = candidates[-1]
+    best: Optional[tuple[int, ...]] = None
+    best_cost = float("inf")
+    for n in range(1, max_cells + 1):
+        for combo in itertools.combinations(candidates, n):
+            if combo[-1] != top:
+                continue
+            c = _ladder_cost(combo, cost, tuple(sizes))
+            if c < best_cost:
+                best, best_cost = combo, c
+    assert best is not None
+    ladder = best
+    window_us = cost[ladder[-1]] * 1e6
+    plan = ServePlan(ladder, window_us,
+                     {size: winners[size] for size in ladder})
+    if cache is not None:
+        for size in ladder:
+            variant, p = winners[size]
+            cache.put(size, n_clusters, n_features, p, kind="serve",
+                      dtype=dtype, variant=variant)
+        cache.put_ladder(n_clusters, n_features, buckets=ladder,
+                         window_us=window_us, dtype=dtype)
+    return plan
+
+
+__all__ = ["ServePlan", "plan_ladder", "DEFAULT_BUCKETS"]

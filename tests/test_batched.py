@@ -274,7 +274,7 @@ class TestBatchedAutotune:
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] == SCHEMA_VERSION == 6
+        assert on_disk["schema"] == SCHEMA_VERSION == 7
         assert batch_bucket(64) == "b6"
         assert on_disk["kinds"]["batched/float32/b6"][
             shape_bucket(256, 8, 32)] == ["batched", 256, 128, 128]

@@ -1,0 +1,340 @@
+"""repro.serve: AOT bucketed predict, micro-batching, versioned hot-swap,
+ladder autotuning (cache schema v7), and the chunked-predict edge cases."""
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import AutotuneCache, KMeans, get_backend
+from repro.api.cache import SCHEMA_VERSION, shape_bucket
+from repro.data.blobs import make_blobs
+from repro.serve import (CodebookStore, KMeansService, MicroBatcher,
+                         ServeCompiler, plan_ladder)
+
+K, F = 8, 24
+BUCKETS = (8, 32)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_blobs(512, F, K, seed=3, spread=0.5)
+
+
+@pytest.fixture(scope="module")
+def fitted(blobs):
+    x, _ = blobs
+    return KMeans(K, max_iter=10, random_state=0, backend="lloyd_xla").fit(x)
+
+
+@pytest.fixture(scope="module")
+def compiler():
+    return ServeCompiler(get_backend("gemm_fused"), K, F, buckets=BUCKETS)
+
+
+def _oracle(x, c):
+    d = ((np.asarray(x)[:, None, :] - np.asarray(c)[None, :, :]) ** 2).sum(-1)
+    return d.argmin(1), d.min(1)
+
+
+class TestServeCompiler:
+    @pytest.mark.parametrize("m", [0, 1, 5, 8, 9, 32, 33, 100])
+    def test_dispatch_exact_at_every_edge(self, compiler, m):
+        """0 rows, 1 row, exactly-a-bucket, bucket+1 and beyond the top
+        bucket all return the oracle answer at the true row count."""
+        rng = np.random.default_rng(m)
+        x = np.asarray(rng.normal(size=(m, F)), np.float32)
+        c = np.asarray(rng.normal(size=(K, F)), np.float32)
+        am, md, det = compiler.dispatch(x, c)
+        ref_am, ref_md = _oracle(x, c)
+        assert am.shape == (m,) and md.shape == (m,)
+        assert np.array_equal(np.asarray(am), ref_am)
+        assert np.allclose(np.asarray(md), ref_md, rtol=1e-4, atol=1e-4)
+        assert int(det) == 0
+
+    def test_zero_rows_never_touch_a_cell(self, compiler):
+        am, md, det = compiler.dispatch(np.zeros((0, F), np.float32),
+                                        jnp.zeros((K, F), jnp.float32))
+        assert am.shape == (0,) and am.dtype == jnp.int32
+        assert md.shape == (0,) and md.dtype == jnp.float32
+        assert int(det) == 0
+
+    def test_oversize_requests_are_allocation_bounded(self, compiler):
+        """Requests beyond the top bucket chunk through it: only the
+        registered cells exist, whatever the request size."""
+        assert tuple(compiler._cells) == BUCKETS
+        rng = np.random.default_rng(0)
+        x = np.asarray(rng.normal(size=(5 * BUCKETS[-1] + 3, F)), np.float32)
+        c = np.asarray(rng.normal(size=(K, F)), np.float32)
+        am, _, _ = compiler.dispatch(x, c)
+        assert np.array_equal(np.asarray(am), _oracle(x, c)[0])
+        assert tuple(compiler._cells) == BUCKETS   # no new cells appeared
+
+    def test_bucket_routing(self, compiler):
+        assert compiler.bucket_for(1) == 8
+        assert compiler.bucket_for(8) == 8
+        assert compiler.bucket_for(9) == 32
+        assert compiler.bucket_for(10_000) == 32   # callers chunk above top
+
+    def test_feature_mismatch_raises(self, compiler):
+        with pytest.raises(ValueError, match="features"):
+            compiler.dispatch(np.zeros((4, F + 1), np.float32),
+                              jnp.zeros((K, F), jnp.float32))
+
+    def test_takes_params_backend_compiles_and_matches(self):
+        """The Pallas template path (takes_params=True) resolves its tile
+        winner from the ``serve`` autotune kind and stays exact."""
+        comp = ServeCompiler(get_backend("fused"), K, F, buckets=(8,),
+                             autotune=AutotuneCache())
+        rng = np.random.default_rng(1)
+        x = np.asarray(rng.normal(size=(6, F)), np.float32)
+        c = np.asarray(rng.normal(size=(K, F)), np.float32)
+        am, _, _ = comp.dispatch(x, c)
+        assert np.array_equal(np.asarray(am), _oracle(x, c)[0])
+
+
+class TestMicroBatcher:
+    def _echo_dispatch(self, batch):
+        # row-shaped output scatters; scalar + python outputs fan out
+        return np.asarray(batch) * 2.0, np.float32(7.0), 42
+
+    def test_scatter_matches_per_request(self):
+        mb = MicroBatcher(self._echo_dispatch)
+        rng = np.random.default_rng(0)
+        reqs = [np.asarray(rng.normal(size=(n, 3)), np.float32)
+                for n in (1, 4, 2, 8)]
+        tickets = [mb.submit(q) for q in reqs]
+        assert mb.flush() == len(reqs)
+        for q, tk in zip(reqs, tickets):
+            rows, scalar, tag = tk.result(timeout=5)
+            assert np.array_equal(rows, q * 2.0)     # this request's rows
+            assert scalar == np.float32(7.0) and tag == 42
+        assert mb.flush() == 0                       # queue drained
+
+    def test_failed_batch_rejects_every_ticket(self):
+        def boom(batch):
+            raise RuntimeError("kernel exploded")
+        mb = MicroBatcher(boom)
+        tickets = [mb.submit(np.zeros((2, 3), np.float32))
+                   for _ in range(3)]
+        with pytest.raises(RuntimeError, match="exploded"):
+            mb.flush()
+        for tk in tickets:
+            assert tk.done()
+            with pytest.raises(RuntimeError, match="exploded"):
+                tk.result(timeout=1)
+
+    def test_background_window_loop_serves_and_stops(self):
+        mb = MicroBatcher(self._echo_dispatch, window_s=0.005)
+        mb.start()
+        try:
+            assert mb.running
+            q = np.ones((3, 2), np.float32)
+            out = [mb.submit(q).result(timeout=10) for _ in range(4)]
+            assert all(np.array_equal(rows, q * 2.0) for rows, _, _ in out)
+        finally:
+            mb.stop()
+        assert not mb.running
+
+    def test_submit_rejects_non_batches(self):
+        mb = MicroBatcher(self._echo_dispatch)
+        with pytest.raises(ValueError, match="rows, features"):
+            mb.submit(np.zeros((3,), np.float32))
+
+
+class TestCodebookStore:
+    def test_publish_versions_monotonic_and_retained(self):
+        store = CodebookStore(np.zeros((2, 3), np.float32), keep=2)
+        assert store.current().version == 1
+        cb2 = store.publish(np.ones((2, 3), np.float32))
+        assert cb2.version == 2 and store.current().version == 2
+        store.publish(np.full((2, 3), 2.0, np.float32))
+        assert store.versions == (2, 3)              # v1 evicted (keep=2)
+        with pytest.raises(KeyError, match="not retained"):
+            store.get(1)
+        assert np.all(np.asarray(store.get(2).centroids) == 1.0)
+
+    def test_publish_shape_change_refused(self):
+        store = CodebookStore(np.zeros((2, 3), np.float32))
+        with pytest.raises(ValueError, match="hot-swap"):
+            store.publish(np.zeros((4, 3), np.float32))
+
+    def test_state_round_trip_bit_identical_all_versions(self):
+        rng = np.random.default_rng(5)
+        store = CodebookStore(rng.normal(size=(K, F)).astype(np.float32))
+        for _ in range(3):
+            store.publish(rng.normal(size=(K, F)).astype(np.float32))
+        clone = CodebookStore.from_state(store.get_state())
+        assert clone.versions == store.versions
+        assert clone.current().version == store.current().version
+        for v in store.versions:
+            assert np.array_equal(np.asarray(store.get(v).centroids),
+                                  np.asarray(clone.get(v).centroids))
+
+
+class TestKMeansService:
+    @pytest.fixture(scope="class")
+    def svc(self, fitted):
+        return fitted.to_service(buckets=BUCKETS, window_s=0.0)
+
+    @pytest.mark.parametrize("m", [0, 1, 16, 100])
+    def test_predict_matches_estimator(self, fitted, blobs, svc, m):
+        x, _ = blobs
+        q = np.asarray(x[:m], np.float32)
+        res = svc.predict(q)
+        assert np.array_equal(res.labels, np.asarray(fitted.predict(q)))
+        assert res.version == svc.store.current().version
+
+    def test_inflight_batch_keeps_its_version(self, fitted, blobs):
+        """A publish landing after a batch pinned its codebook must not
+        leak into that batch; the next batch serves the new version."""
+        x, _ = blobs
+        moved = np.asarray(fitted.cluster_centers_, np.float32) + 0.25
+        state = {"svc": None, "published": False}
+
+        def hook(cb):   # runs after the flush pinned cb, before launch
+            if not state["published"]:
+                state["published"] = True
+                state["svc"].publish(moved)
+
+        svc = KMeansService.from_estimator(fitted, buckets=BUCKETS,
+                                           window_s=0.0, on_dispatch=hook)
+        state["svc"] = svc
+        q = np.asarray(x[:16], np.float32)
+        r1 = svc.predict(q)
+        assert r1.version == 1                       # old codebook honored
+        assert np.array_equal(r1.labels, np.asarray(fitted.predict(q)))
+        r2 = svc.predict(q)
+        assert r2.version == 2                       # swap visible next batch
+        assert np.array_equal(
+            r2.labels, _oracle(q, svc.store.get(2).centroids)[0])
+
+    def test_refine_publishes_partial_fit_result(self, fitted, blobs):
+        x, _ = blobs
+        svc = fitted.to_service(buckets=BUCKETS, window_s=0.0)
+        v0 = svc.store.current().version
+        assert svc.refine(np.asarray(x[:64], np.float32)) == v0 + 1
+        assert np.array_equal(
+            np.asarray(svc.store.current().centroids),
+            np.asarray(fitted.cluster_centers_, np.float32))
+
+    def test_state_round_trip_serves_identically(self, fitted, blobs, svc):
+        x, _ = blobs
+        q = np.asarray(x[:20], np.float32)
+        clone = KMeansService.from_state(svc.get_state())
+        assert clone.compiler.buckets == svc.compiler.buckets
+        a, b = svc.predict(q), clone.predict(q)
+        assert np.array_equal(a.labels, b.labels)
+        assert np.array_equal(
+            np.asarray(svc.store.current().centroids),
+            np.asarray(clone.store.current().centroids))
+
+    def test_to_service_picks_up_tuned_plan(self, fitted):
+        """With no explicit buckets, the handoff reads the ladder that
+        plan_ladder persisted in the estimator's own autotune cache."""
+        plan = plan_ladder(K, F, cache=fitted.autotune,
+                           min_rows=8, max_rows=32)
+        svc = fitted.to_service()
+        assert svc.compiler.buckets == plan.buckets
+        assert svc.batcher.window_s == pytest.approx(plan.window_us * 1e-6)
+
+
+class TestLadderPlanAndCacheV7:
+    def test_plan_contains_top_bucket_and_winners(self):
+        plan = plan_ladder(K, F, min_rows=8, max_rows=64)
+        assert plan.buckets[-1] == 64
+        assert set(plan.winners) == set(plan.buckets)
+        assert plan.window_us > 0
+
+    def test_ladder_persists_and_reloads(self, tmp_path):
+        path = str(tmp_path / "serve.json")
+        cache = AutotuneCache(path)
+        plan = plan_ladder(K, F, cache=cache, min_rows=8, max_rows=32)
+        cache.save()
+        fresh = AutotuneCache(path)
+        hit = fresh.lookup_ladder(K, F)
+        assert hit is not None
+        buckets, window_us = hit
+        assert buckets == plan.buckets
+        assert window_us == pytest.approx(plan.window_us)
+        # the per-bucket tile winners landed under the serve kind
+        v, p = fresh.lookup(plan.buckets[-1], K, F, kind="serve")
+        assert (v, p) == plan.winners[plan.buckets[-1]]
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        assert on_disk["schema"] == SCHEMA_VERSION == 7
+        assert "ladder:3-4" in on_disk["kinds"]["serve/float32/b0"]
+
+    def test_lookup_ladder_misses_cleanly(self):
+        assert AutotuneCache().lookup_ladder(K, F) is None
+
+    def test_v6_file_passthrough_upgrades_on_save(self, tmp_path):
+        """v6 tables (no serve entries) load unchanged and write back as
+        v7 with their winners intact."""
+        path = str(tmp_path / "v6.json")
+        bucket = shape_bucket(1024, 64, 64)
+        with open(path, "w") as fh:
+            json.dump({"schema": 6, "kinds": {
+                "assign/float32/b0": {bucket: ["generic", 64, 128, 128]}}},
+                fh)
+        cache = AutotuneCache(path)
+        v, p = cache.lookup(1024, 64, 64)
+        assert v == "generic"
+        assert (p.block_m, p.block_k, p.block_f) == (64, 128, 128)
+        cache.save()
+        with open(path) as fh:
+            on_disk = json.load(fh)
+        assert on_disk["schema"] == 7
+        assert on_disk["kinds"]["assign/float32/b0"][bucket] == \
+            ["generic", 64, 128, 128]
+
+    def test_serve_model_score_charges_dispatch(self):
+        from repro import hw
+        from repro.core import autotune
+        _, p = autotune.select_params(128, K, F, kind="serve")
+        serve = autotune.model_score(128, K, F, p, kind="serve")
+        assign = autotune.model_score(128, K, F, p, kind="assign")
+        assert serve == pytest.approx(assign + hw.DISPATCH_OVERHEAD_S)
+
+    def test_zero_row_shapes_do_not_crash_selection(self):
+        from repro.core import autotune
+        variant, p = autotune.select_params(0, K, F, kind="serve")
+        assert p.block_m >= 1
+
+
+class TestChunkedPredictEdges:
+    """The ops- and estimator-level guarantees the serving layer builds
+    on: 0 rows, 1 row and beyond-one-chunk requests are exact."""
+
+    def test_ops_fused_assign_zero_rows(self):
+        from repro.kernels import ops
+        am, md = ops.fused_assign(jnp.zeros((0, F), jnp.float32),
+                                  jnp.zeros((K, F), jnp.float32))
+        assert am.shape == (0,) and md.shape == (0,)
+
+    @pytest.mark.parametrize("m", [0, 1, 200])
+    def test_estimator_chunked_predict(self, blobs, m):
+        x, _ = blobs
+        km = KMeans(K, max_iter=5, random_state=0, backend="lloyd_xla",
+                    predict_chunk_rows=64).fit(x)
+        q = np.asarray(x[:m], np.float32)
+        labels = np.asarray(km.predict(q))
+        assert labels.shape == (m,)
+        if m:
+            assert np.array_equal(
+                labels, _oracle(q, km.cluster_centers_)[0])
+
+
+class TestAnalysisCoverage:
+    def test_serve_recompile_scenario_registered(self):
+        from repro.analysis.recompile import default_scenarios
+        names = [s.name for s in default_scenarios()]
+        assert "serve-aot-predict-warm" in names
+
+    def test_serve_is_a_linted_hot_path(self):
+        from repro.analysis import lint
+        bad = "def f(v):\n    return v.item()\n"
+        assert [x.rule for x in
+                lint.lint_source(bad, "src/repro/serve/f.py")] == \
+            ["host-sync"]

@@ -214,7 +214,7 @@ class TestCacheSchema:
         cache.save()
         with open(path) as fh:
             on_disk = json.load(fh)
-        assert on_disk["schema"] == SCHEMA_VERSION == 6
+        assert on_disk["schema"] == SCHEMA_VERSION == 7
         assert on_disk["kinds"]["lloyd/bfloat16/b0"][
             shape_bucket(4096, 100, 128)] == ["smallk", 512, 128, 128]
         fresh = AutotuneCache(path)
