@@ -21,6 +21,11 @@ kernels implement. Each is checked here statically:
                     abstract-eval output arity/batch axis
 ``intervals``       ``protected_intervals``/``kernel_kind`` vs the FT
                     kernels' ``INJ_SLOTS`` and ``autotune.KINDS``
+``dist-ft``         the distribution/recovery layer: int8 transport
+                    shape/dtype invariants (abstract, ragged tails
+                    included), ReducePlan/FaultPolicy enum hygiene, and
+                    ``worker_loss="shrink"`` resolving to real
+                    ``ft.elastic`` entry points
 
 Every input is injectable (``backends=``, ``vmem_models=``,
 ``descriptor_slots=``) so the test suite can prove each rule fires on a
@@ -281,6 +286,106 @@ def check_backend_contracts(
     return out
 
 
+def check_dist_ft_contracts(
+    *,
+    compression_mod: Any = None,
+    reduce_mod: Any = None,
+    policy_cls: Any = None,
+    elastic_mod: Any = None,
+) -> list[Violation]:
+    """``dist-ft``: the distribution/recovery layer's static contracts.
+
+    The compressed reduce and the elastic restart are correct only if
+    three interfaces agree without ever running a fit: the int8 transport
+    must preserve shapes/dtypes abstractly (quantize emits int8 payload +
+    f32 per-block scales, dequantize round-trips the original shape, ragged
+    tails included), the :class:`~repro.dist.reduce.ReducePlan` /
+    :class:`~repro.api.FaultPolicy` enums must reject unknown routes, and
+    every policy value that *promises* a recovery path must resolve to
+    real code (``worker_loss="shrink"`` -> ``ft.elastic`` entry points).
+    """
+    if compression_mod is None:
+        from repro.dist import compression as compression_mod
+    if reduce_mod is None:
+        from repro.dist import reduce as reduce_mod
+    if policy_cls is None:
+        from repro.api import FaultPolicy as policy_cls
+    if elastic_mod is None:
+        from repro.ft import elastic as elastic_mod
+    out: list[Violation] = []
+    src = "src/repro/dist/compression.py"
+    # int8 transport invariants, abstractly, at an aligned and a ragged n
+    for n in (256, 100):
+        x = jax.ShapeDtypeStruct((16, n), jnp.float32)
+        try:
+            q, scale = jax.eval_shape(compression_mod.quantize, x)
+            deq = jax.eval_shape(
+                lambda qq, ss: compression_mod.dequantize(qq, ss, n),
+                q, scale)
+        except Exception as e:  # pragma: no cover - trace failure
+            out.append(Violation(
+                "contracts", "dist-ft", file=src,
+                message=f"int8 transport failed abstract eval at n={n}: "
+                        f"{e}"))
+            continue
+        if jnp.dtype(q.dtype) != jnp.int8 \
+                or jnp.dtype(scale.dtype) != jnp.float32:
+            out.append(Violation(
+                "contracts", "dist-ft", file=src,
+                message=f"quantize must emit int8 payload + f32 scales, "
+                        f"got {q.dtype}/{scale.dtype} at n={n}"))
+        if q.shape[:-1] != scale.shape[:-1] or scale.shape[-1] != 1:
+            out.append(Violation(
+                "contracts", "dist-ft", file=src,
+                message=f"per-block scales must broadcast over the "
+                        f"payload blocks: q={q.shape} scale={scale.shape}"))
+        if tuple(deq.shape) != tuple(x.shape) \
+                or jnp.dtype(deq.dtype) != jnp.float32:
+            out.append(Violation(
+                "contracts", "dist-ft", file=src,
+                message=f"dequantize must round-trip shape/dtype "
+                        f"{x.shape}/f32, got {deq.shape}/{deq.dtype} "
+                        f"(ragged tail n={n})"))
+    src = "src/repro/dist/reduce.py"
+    try:
+        reduce_mod.ReducePlan(cross_host="fp4")
+        out.append(Violation(
+            "contracts", "dist-ft", file=src,
+            message="ReducePlan accepted an unknown cross_host transport"))
+    except ValueError:
+        pass
+    if reduce_mod.ReducePlan.compressed(exact=True).cross_host != "exact":
+        out.append(Violation(
+            "contracts", "dist-ft", file=src,
+            message="ReducePlan.compressed(exact=True) must be the exact "
+                    "escape hatch"))
+    src = "src/repro/api/policy.py"
+    from repro.api import policy as _policy_mod
+    for value in _policy_mod.WORKER_LOSS:
+        try:
+            policy_cls(worker_loss=value)
+        except ValueError:
+            out.append(Violation(
+                "contracts", "dist-ft", file=src,
+                message=f"FaultPolicy rejects documented worker_loss="
+                        f"{value!r}"))
+    try:
+        policy_cls(worker_loss="migrate")
+        out.append(Violation(
+            "contracts", "dist-ft", file=src,
+            message="FaultPolicy accepted an unknown worker_loss mode"))
+    except ValueError:
+        pass
+    # "shrink" promises the fail-stop rung: the entry points must exist
+    for name in ("plan_rescale_rows", "WorkerLossError", "FailureSchedule"):
+        if not hasattr(elastic_mod, name):
+            out.append(Violation(
+                "contracts", "dist-ft", file=src,
+                message=f"worker_loss='shrink' routes to ft.elastic."
+                        f"{name}, which does not exist"))
+    return out
+
+
 def run(shapes: Sequence[tuple[int, int, int]] = DEFAULT_SHAPES,
         dtypes: Sequence[str] = DEFAULT_DTYPES,
         *,
@@ -292,4 +397,5 @@ def run(shapes: Sequence[tuple[int, int, int]] = DEFAULT_SHAPES,
     out = check_vmem_models(shapes, dtypes, vmem_models=vmem_models)
     out += check_backend_contracts(backends, dtypes=dtypes,
                                    descriptor_slots=descriptor_slots)
+    out += check_dist_ft_contracts()
     return out

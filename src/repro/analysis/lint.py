@@ -56,7 +56,10 @@ _HOST_BOUNDARY_FUNCS = frozenset({"_host_read", "get_state", "from_state"})
 # here. ``.item()`` and ``jax.device_get`` are flagged everywhere.
 # ``serve`` is the per-*request* hot path — a hidden sync there stalls
 # every request sharing the micro-batch, not just one fit iteration.
-_HOT_PATH_PREFIXES = ("api", "batch", "core", "dist", "serve")
+# ``ft`` holds the recovery ladder: elastic rescale and checkpointing run
+# *during* fits, so an unfunneled sync there stalls the surviving workers
+# exactly when they can least afford it.
+_HOT_PATH_PREFIXES = ("api", "batch", "core", "dist", "ft", "serve")
 
 
 def _allowed(src: str) -> dict[int, frozenset[str]]:

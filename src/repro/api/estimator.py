@@ -840,6 +840,7 @@ class KMeans:
                 "fault": {
                     "mode": self.fault.mode,
                     "update_dmr": self.fault.update_dmr,
+                    "worker_loss": self.fault.worker_loss,
                     "injection": (None if camp is None else {
                         "rate": camp.rate, "bit_low": camp.bit_low,
                         "bit_high": camp.bit_high, "seed": camp.seed,
@@ -857,7 +858,8 @@ class KMeans:
         camp = fp.get("injection")
         fault = FaultPolicy(
             mode=fp["mode"], update_dmr=fp["update_dmr"],
-            injection=None if camp is None else InjectionCampaign(**camp))
+            injection=None if camp is None else InjectionCampaign(**camp),
+            worker_loss=fp.get("worker_loss", "fail"))  # pre-v3 states
         tiles = cfg.get("params")
         params = None if tiles is None else ops.KernelParams(*tiles)
         km = cls(cfg["n_clusters"], max_iter=cfg["max_iter"], tol=cfg["tol"],

@@ -46,6 +46,8 @@ MODES = ("off", "detect", "correct")
 
 TARGETS = ("auto", "distance", "update", "both")
 
+WORKER_LOSS = ("fail", "shrink")
+
 
 @dataclasses.dataclass(frozen=True)
 class InjectionCampaign:
@@ -170,6 +172,15 @@ class FaultPolicy:
     injection : InjectionCampaign, optional
         SEU campaign (§V-C); requires a backend with in-kernel injection
         support and a protected ``mode``.
+    worker_loss : {"fail", "shrink"}, default="fail"
+        Response to a whole-worker (fail-stop) loss mid-fit — the fault
+        class the paper's SEU model doesn't cover. ``"fail"`` propagates
+        :class:`~repro.ft.elastic.WorkerLossError` to the caller;
+        ``"shrink"`` lets ``DistributedKMeans.fit_elastic`` rescale the
+        mesh (``ft.elastic.plan_rescale_rows``), restore the last
+        ``Checkpointer`` snapshot, and resume. One policy object now
+        spans both fault classes: SEU -> ABFT correct in-kernel, worker
+        loss -> shrink + restart.
 
     Examples
     --------
@@ -179,16 +190,22 @@ class FaultPolicy:
     >>> FaultPolicy.correct(
     ...     injection=InjectionCampaign(rate=1.5, targets="both")).mode
     'correct'
+    >>> FaultPolicy.elastic().worker_loss
+    'shrink'
     """
 
     mode: str = "off"                 # "off" | "detect" | "correct"
     update_dmr: Optional[bool] = None  # DMR on the two-pass update (auto)
     injection: Optional[InjectionCampaign] = None
+    worker_loss: str = "fail"          # "fail" | "shrink"
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(f"FaultPolicy.mode must be one of {MODES}, "
                              f"got {self.mode!r}")
+        if self.worker_loss not in WORKER_LOSS:
+            raise ValueError(f"FaultPolicy.worker_loss must be one of "
+                             f"{WORKER_LOSS}, got {self.worker_loss!r}")
         if self.injection is not None and self.mode == "off":
             raise ValueError(
                 "an injection campaign needs a protected assignment backend; "
@@ -210,6 +227,17 @@ class FaultPolicy:
     def correct(cls, *, update_dmr: Optional[bool] = None,
                 injection: Optional[InjectionCampaign] = None) -> "FaultPolicy":
         return cls(mode="correct", update_dmr=update_dmr, injection=injection)
+
+    @classmethod
+    def elastic(cls, *, mode: str = "correct",
+                update_dmr: Optional[bool] = None,
+                injection: Optional[InjectionCampaign] = None
+                ) -> "FaultPolicy":
+        """The full production ladder: SEUs corrected in-kernel (ABFT,
+        ``mode="correct"`` by default), whole-worker losses survived by
+        mesh shrink + checkpoint restore (``worker_loss="shrink"``)."""
+        return cls(mode=mode, update_dmr=update_dmr, injection=injection,
+                   worker_loss="shrink")
 
     # -- resolution --------------------------------------------------------
 

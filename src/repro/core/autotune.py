@@ -83,6 +83,29 @@ KINDS = PLAN_KINDS
 _LLOYD_KINDS = ("lloyd", "lloyd_ft", "pruned")
 
 
+def shard_shape(m: int, k: int, f: int,
+                data_shards: int) -> tuple[int, int, int]:
+    """The per-shard problem shape a data-sharded fit autotunes for.
+
+    A distributed fit's winner lookups key by the *local*
+    ``(rows/shard, K, F)`` problem: tile selection sees the per-device
+    GEMM, not the global one, and a winner tuned for the global M would
+    pick block_m tiles the shard can't fill. Keeping the division here —
+    rather than inline at call sites — makes the contract explicit and
+    validated: rows must divide evenly, and a mesh rescale re-keys every
+    lookup at the *new* shard shape (``DistributedKMeans`` rebuilds its
+    step cache against this function after ``plan_rescale``).
+    """
+    if data_shards < 1:
+        raise ValueError(f"data_shards must be >= 1, got {data_shards}")
+    if m % data_shards:
+        raise ValueError(
+            f"rows m={m} do not divide evenly over {data_shards} data "
+            f"shards; pad the input or pick a mesh whose row parallelism "
+            f"divides M")
+    return (m // data_shards, k, f)
+
+
 def parameter_space(dtype=jnp.float32) -> list[KernelParams]:
     """Pruned candidate grid (paper rules: powers of 2; Warp.K=Threadblock.K
     maps to a single contraction tile; thread tile fixed by MXU shape).

@@ -1,5 +1,8 @@
 """Distributed runtime: logical-axis sharding, data-parallel K-means,
-gradient compression. See ``sharding.py`` for the axis-name conventions."""
-from repro.dist import sharding
+hierarchical + compressed centroid reduction. See ``sharding.py`` for the
+axis-name conventions and ``reduce.py`` for the reduce plans."""
+from repro.dist import reduce, sharding
+from repro.dist.reduce import ReducePlan
+from repro.dist.sharding import mesh2d
 
-__all__ = ["sharding"]
+__all__ = ["sharding", "reduce", "ReducePlan", "mesh2d"]

@@ -1,0 +1,170 @@
+"""Hierarchical centroid-update reduction for pod-scale meshes.
+
+The map-reduce k-means line (Li et al., PAPERS.md) identifies the
+centroid-update reduce as the scaling wall: a flat psum of per-shard
+``(sums, counts)`` crosses the slowest link in the machine once per
+device. On a :func:`~repro.dist.sharding.mesh2d` mesh the reduce instead
+runs in two hops:
+
+  1. **intra-host** — exact psum over the ``row`` (and size-1 ``problem``)
+     axes: fast links, full precision;
+  2. **cross-host** — one hop over the ``host`` axis, routable through
+     :func:`~repro.dist.compression.compressed_psum` (blockwise int8 with
+     an error-feedback residual carried across iterations) or kept exact
+     via the ``exact=True`` escape hatch.
+
+Counts always reduce exactly: they are the denominators of the
+distributed mean ``psum(sums) / psum(counts)`` and the renormalization
+basis of the straggler policy — at count magnitudes, quantization would
+bias every centroid. Only the sums route through the int8 hop.
+
+ABFT composes with both hops. The update checksums are *linear* in
+``(sums, counts)``, so each hop psums the expected checksums of exactly
+the contributions it reduces and re-verifies afterwards — for the
+compressed hop the expectations are computed on the locally *dequantized*
+values, so quantization error can never masquerade as (or mask)
+transport corruption. One detection increment per corrupted hop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.compression import dequantize, quantize
+
+CROSS_HOST = ("exact", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducePlan:
+    """How each Lloyd step's ``(sums, counts)`` cross the mesh.
+
+    Parameters
+    ----------
+    hierarchical : bool, default=True
+        Split the reduce into an intra-host hop and a cross-host hop when
+        the mesh names a ``host`` axis (size > 1). On meshes without one
+        the plan degenerates to the flat single-hop psum either way.
+    cross_host : {"exact", "int8"}, default="exact"
+        Transport of the cross-host hop. ``"int8"`` routes the partial
+        sums through blockwise int8 quantization with an error-feedback
+        residual (EF-SGD); counts and checksums stay exact.
+    """
+
+    hierarchical: bool = True
+    cross_host: str = "exact"
+
+    def __post_init__(self) -> None:
+        if self.cross_host not in CROSS_HOST:
+            raise ValueError(f"ReducePlan.cross_host must be one of "
+                             f"{CROSS_HOST}, got {self.cross_host!r}")
+
+    @classmethod
+    def flat(cls) -> "ReducePlan":
+        """The PR-1 behavior: one flat psum over every data axis."""
+        return cls(hierarchical=False)
+
+    @classmethod
+    def compressed(cls, *, exact: bool = False) -> "ReducePlan":
+        """Int8 error-feedback cross-host hop. ``exact=True`` is the
+        escape hatch: same two-hop structure, no quantization — for
+        debugging a tolerance regression or pinning bit-identical runs."""
+        return cls(hierarchical=True,
+                   cross_host="exact" if exact else "int8")
+
+
+def hop_axes(mesh, reduce_axes: tuple,
+             plan: ReducePlan) -> tuple[tuple, Optional[str]]:
+    """Split the reduce axes into ``(intra, cross)`` hops.
+
+    ``host`` is the cross-host hop when the plan is hierarchical and the
+    mesh gives the axis size > 1; everything else reduces in the intra
+    hop. A flat plan — or a mesh without a host axis — reduces every
+    axis in one hop (``cross is None``)."""
+    if plan.hierarchical and "host" in reduce_axes \
+            and mesh.shape["host"] > 1:
+        return tuple(a for a in reduce_axes if a != "host"), "host"
+    return tuple(reduce_axes), None
+
+
+def update_checksums(sums: jax.Array,
+                     cnt: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dual linear checksums of one ``(sums, counts)`` contribution:
+    ``e1`` = column sum over K, ``e2`` = index-weighted sum (paper §IV
+    weights ``w_k = 1..K``). Linearity is the whole point — the checksum
+    of a psum equals the psum of the checksums, hop by hop."""
+    k = sums.shape[0]
+    w_k = jnp.arange(1.0, k + 1.0, dtype=jnp.float32)
+    return (jnp.stack([jnp.sum(sums, axis=0), w_k @ sums]),
+            jnp.stack([jnp.sum(cnt), w_k @ cnt]))
+
+
+def checksums_mismatch(sums: jax.Array, cnt: jax.Array, exp: jax.Array,
+                       cexp: jax.Array, m_total: int) -> jax.Array:
+    """True when reduced ``(sums, counts)`` disagree with the reduced
+    expected checksums beyond the f32 rounding floor of an ``m_total``-row
+    accumulation. Each e1/e2 pair thresholds against its own clean-side
+    magnitude (the e2 row is ~K x larger; a shared scale would raise the
+    e1 detection floor by that factor — the PR-4 self-masking lesson)."""
+    from repro.core.checksum import threshold_factor
+    factor = threshold_factor(m_total, jnp.float32)
+    got, cgot = update_checksums(sums, cnt)
+    thr1 = factor * jnp.maximum(jnp.max(jnp.abs(exp[0])), 1.0)
+    thr2 = factor * jnp.maximum(jnp.max(jnp.abs(exp[1])), 1.0)
+    return (jnp.any(jnp.abs(got[0] - exp[0]) > thr1)
+            | jnp.any(jnp.abs(got[1] - exp[1]) > thr2)
+            | (jnp.abs(cgot[0] - cexp[0])
+               > factor * jnp.maximum(cexp[0], 1.0))
+            | (jnp.abs(cgot[1] - cexp[1])
+               > factor * jnp.maximum(cexp[1], 1.0)))
+
+
+def reduce_update(sums: jax.Array, cnt: jax.Array, *, intra: tuple,
+                  cross: Optional[str], compress: bool = False,
+                  residual: Optional[jax.Array] = None,
+                  checked: bool = False, m_total: int = 0):
+    """Reduce one Lloyd step's ``(sums, counts)`` over the mesh.
+
+    Runs inside ``shard_map``. Returns
+    ``(sums, counts, bad_hops, residual_out)`` where ``bad_hops`` counts
+    hops whose post-reduce checksum re-verification failed (0 when
+    ``checked=False``) and ``residual_out`` is the next iteration's
+    error-feedback carry (None unless ``compress``).
+
+    The compressed hop quantizes ``sums + residual`` per host group (the
+    intra hop already made the group's partial identical on every member)
+    and psums the *dequantized* value — exactly the numerics an int8
+    transport with local dequant-accumulate would produce, per
+    ``dist/compression.py``'s modeling note.
+    """
+    bad = jnp.zeros((), jnp.int32)
+    if intra:
+        if checked:
+            exp, cexp = update_checksums(sums, cnt)
+            exp = jax.lax.psum(exp, intra)
+            cexp = jax.lax.psum(cexp, intra)
+        sums = jax.lax.psum(sums, intra)
+        cnt = jax.lax.psum(cnt, intra)
+        if checked:
+            bad = bad + checksums_mismatch(
+                sums, cnt, exp, cexp, m_total).astype(jnp.int32)
+    if cross is not None:
+        contrib = sums
+        if compress:
+            carried = contrib if residual is None else contrib + residual
+            q, scale = quantize(carried)
+            contrib = dequantize(q, scale, carried.shape[-1])
+            residual = carried - contrib
+        if checked:
+            exp, cexp = update_checksums(contrib, cnt)
+            exp = jax.lax.psum(exp, cross)
+            cexp = jax.lax.psum(cexp, cross)
+        sums = jax.lax.psum(contrib, cross)
+        cnt = jax.lax.psum(cnt, cross)
+        if checked:
+            bad = bad + checksums_mismatch(
+                sums, cnt, exp, cexp, m_total).astype(jnp.int32)
+    return sums, cnt, bad, residual

@@ -62,6 +62,40 @@ def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def mesh2d(rows: int, problems: int = 1, *, hosts: int = 1,
+           devices: Optional[list] = None) -> Mesh:
+    """The pod-scale K-means mesh: ``("host", "row", "problem")``.
+
+    ``rows`` is the *total* row parallelism — it factors into
+    ``hosts x (rows // hosts)`` so the centroid reduce can run
+    hierarchically (exact psum inside each host group, then one
+    cross-host hop per iteration, optionally int8-compressed — see
+    ``dist/reduce.py``). ``problems`` shards a :class:`BatchedKMeans`
+    problem stack; independent problems never exchange traffic, so the
+    problem axis plays the role TP groups play in ``plan_rescale``
+    (groups stay whole when the mesh shrinks).
+
+    Degenerate sizes keep one uniform code path: ``mesh2d(8)`` is the
+    old flat data-parallel mesh with extra size-1 axes, and
+    ``mesh2d(1, 8)`` is pure problem-axis sharding. All three axes are
+    data axes for :func:`data_axes` (none is named ``model``), so
+    parameter sharding and legacy callers keep working unchanged.
+    """
+    if rows < 1 or problems < 1 or hosts < 1:
+        raise ValueError(f"mesh2d needs positive sizes, got rows={rows} "
+                         f"problems={problems} hosts={hosts}")
+    if rows % hosts:
+        raise ValueError(f"rows={rows} must divide over hosts={hosts}")
+    devices = list(devices if devices is not None else jax.devices())
+    need = rows * problems
+    if len(devices) < need:
+        raise ValueError(f"mesh2d({rows}, {problems}) needs {need} devices, "
+                         f"only {len(devices)} available")
+    import numpy as np
+    grid = np.asarray(devices[:need]).reshape(hosts, rows // hosts, problems)
+    return Mesh(grid, ("host", "row", "problem"))
+
+
 # ---------------------------------------------------------------------------
 # Logical axes -> PartitionSpec
 # ---------------------------------------------------------------------------

@@ -1,5 +1,8 @@
 from repro.ft.checkpoint import Checkpointer
 from repro.ft.abft_dense import ft_einsum, FTContext
 from repro.ft import elastic
+from repro.ft.elastic import (FailureSchedule, WorkerLossError,
+                              plan_rescale_rows)
 
-__all__ = ["Checkpointer", "ft_einsum", "FTContext", "elastic"]
+__all__ = ["Checkpointer", "ft_einsum", "FTContext", "elastic",
+           "FailureSchedule", "WorkerLossError", "plan_rescale_rows"]

@@ -57,9 +57,9 @@ class Checkpointer:
         for key, leaf in flat.items():
             # checkpointing IS the host boundary: serializing device state
             # to disk is this function's whole job
-            arr = jax.device_get(  # analysis: allow=host-sync
+            arr_h = jax.device_get(  # analysis: allow=host-sync
                 self._addressable(leaf) if local_only else leaf)
-            host_arrays[key] = np.asarray(arr)
+            host_arrays[key] = np.asarray(arr_h)
         payload = (step, host_arrays)
         if self._async:
             self._q.put(payload)
@@ -67,17 +67,30 @@ class Checkpointer:
             self._write(payload)
 
     def restore(self, step: Optional[int] = None) -> Optional[dict]:
-        """Latest (or specific) checkpoint as {key: np.ndarray} + '_step'."""
+        """Latest (or specific) checkpoint as {key: np.ndarray} + '_step'.
+
+        A corrupt or truncated file — a crash landed between the atomic
+        rename and durable bytes, or the storage lost some — is *skipped*:
+        restore walks backward to the newest checkpoint that still loads,
+        which the tmp+fsync+rename write protocol guarantees exists
+        unless every snapshot is gone. A pinned ``step`` is never
+        substituted; asking for a specific broken snapshot raises."""
         self.wait()
         steps = self.available_steps()
         if not steps:
             return None
-        step = step if step is not None else steps[-1]
-        path = self._path(step)
-        with np.load(path) as data:
-            out = {k: data[k] for k in data.files}
-        out["_step"] = step
-        return out
+        candidates = [step] if step is not None else list(reversed(steps))
+        for s in candidates:
+            try:
+                with np.load(self._path(s)) as data:
+                    out = {k: data[k] for k in data.files}
+            except Exception:
+                if step is not None:
+                    raise
+                continue
+            out["_step"] = s
+            return out
+        return None
 
     def available_steps(self) -> list[int]:
         out = []

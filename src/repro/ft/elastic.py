@@ -14,8 +14,10 @@ The recovery ladder for a 1000+ node deployment, cheapest first:
 
 This module implements the *decision* layer: given the live device set it
 produces the new mesh + resharding plan. The mechanics (rebuild loader,
-re-lower step) live with the launchers; in a single-process container the
-device set is simulated, and tests drive the policy with fake topologies.
+re-lower step) live with ``DistributedKMeans.fit_elastic`` and the
+launchers; in a single-process container the device set is simulated
+(:class:`FailureSchedule` raises :class:`WorkerLossError` at scheduled
+iterations), and tests drive the policy with fake topologies.
 """
 from __future__ import annotations
 
@@ -25,6 +27,39 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+
+class WorkerLossError(RuntimeError):
+    """A fail-stop device loss (recovery ladder step 4).
+
+    Raised by the runtime — or, in drills, by a :class:`FailureSchedule`
+    — when devices drop out of the mesh mid-fit. ``lost`` holds indices
+    into the fit's current flat device list; the elastic driver removes
+    them, replans the mesh and resumes from the last checkpoint.
+    """
+
+    def __init__(self, lost: Sequence[int], message: str = ""):
+        self.lost = tuple(lost)
+        super().__init__(message or f"lost devices {self.lost}")
+
+
+@dataclasses.dataclass
+class FailureSchedule:
+    """Deterministic device-loss injector for fault drills.
+
+    Maps iteration -> device indices to kill; passed as the fit loop's
+    ``on_iteration`` hook, it raises :class:`WorkerLossError` when the
+    loop reaches a scheduled iteration. Each entry fires once — after a
+    restart the resumed trajectory passes the same iteration numbers
+    again, and a drill kills each worker set exactly one time.
+    """
+
+    schedule: dict
+
+    def __call__(self, iteration: int) -> None:
+        lost = self.schedule.pop(iteration, None)
+        if lost:
+            raise WorkerLossError(tuple(lost))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +101,31 @@ def plan_rescale(live_devices: Sequence, *, model_parallel: int,
         note=f"{n} live -> mesh {shape} ({used} used, {len(dropped)} spare)")
 
 
+def plan_rescale_rows(live_devices: Sequence, *, problems: int = 1,
+                      hosts: int = 1) -> ReshardPlan:
+    """:func:`plan_rescale` for the ``("host", "row", "problem")`` mesh.
+
+    Problem groups play the role TP groups play in :func:`plan_rescale`
+    (independent problems must keep their full row set), so the row
+    parallelism shrinks and ``problems`` stays intact. The host grouping
+    re-derives from what divides: when the surviving row count no longer
+    splits evenly over ``hosts``, the plan collapses to one host group —
+    the hierarchical reduce then degenerates to its exact flat form
+    rather than leaving devices idle.
+    """
+    flat = plan_rescale(live_devices, model_parallel=problems)
+    rows = flat.mesh_shape[0]
+    h = hosts if hosts > 1 and rows % hosts == 0 else 1
+    return dataclasses.replace(
+        flat,
+        mesh_shape=(h, rows // h, problems),
+        axis_names=("host", "row", "problem"),
+        data_shards=rows,
+        note=f"{len(live_devices)} live -> mesh ({h}, {rows // h}, "
+             f"{problems}) ({rows * problems} used, "
+             f"{len(flat.dropped_devices)} spare)")
+
+
 def build_mesh(plan: ReshardPlan, devices: Optional[Sequence] = None) -> Mesh:
     devices = list(devices if devices is not None else jax.devices())
     used = int(np.prod(plan.mesh_shape))
@@ -80,7 +140,8 @@ class StragglerPolicy:
     A shard that misses `deadline_factor` x median step time for
     `strikes` consecutive steps is treated as failed (-> plan_rescale).
     Until then its contribution is simply skipped: for k-means the psum
-    denominators use live counts (unbiased); for SGD the gradient mean
+    denominators use live counts — :meth:`aggregate` is that fold, and
+    its unbiasedness is pinned by tests — and for SGD the gradient mean
     renormalizes by the responding shard count.
     """
 
@@ -95,3 +156,30 @@ class StragglerPolicy:
         count = count + 1 if late else 0
         self._history[shard] = count
         return count >= self.strikes
+
+    @staticmethod
+    def aggregate(sums, counts, live):
+        """Fold per-shard partial ``(sums, counts)`` with late/dead shards
+        masked out: ``(sum of live sums, sum of live counts)``.
+
+        This is the drop-shard renormalization the ladder's step 3
+        claims is unbiased, as code: dropping a shard removes its rows
+        from numerator and denominator alike, so
+        ``mean = sum(live sums) / sum(live counts)`` is *exactly* the
+        mean of the rows the live shards hold — a subsample estimate,
+        not a rescaled one. The tempting alternative (average the
+        per-shard means, renormalizing by the live shard count) is
+        biased whenever shards hold unequal per-cluster counts; the
+        test suite contrasts both forms.
+
+        ``sums`` is (S, K, F), ``counts`` (S, K), ``live`` (S,) bool.
+        Works on device values inside the step or on host partials.
+        """
+        import jax.numpy as jnp
+        mask = jnp.asarray(live)
+        sums = jnp.asarray(sums)
+        counts = jnp.asarray(counts)
+        ms = mask.reshape((-1,) + (1,) * (sums.ndim - 1))
+        mc = mask.reshape((-1,) + (1,) * (counts.ndim - 1))
+        return (jnp.where(ms, sums, 0.0).sum(axis=0),
+                jnp.where(mc, counts, 0.0).sum(axis=0))

@@ -1,0 +1,33 @@
+"""Shared multi-device subprocess rig.
+
+jax locks the device count at first backend init, so the main pytest
+session — which other suites need single-device — can never see the
+8 virtual CPUs. Every multi-device test instead ships its body to a
+fresh interpreter with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+and asserts on the child's stdout. Import as ``from _mesh import
+run_with_devices`` (pytest puts ``tests/`` on ``sys.path``) and mark the
+test ``@pytest.mark.multidevice`` so CI can schedule the slow subprocess
+suite separately (``pytest -m multidevice``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
+    """Run ``code`` in a fresh interpreter with ``n`` virtual devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    # force CPU: without the pin, jax probes the TPU plugin, which retries
+    # cloud metadata fetches for minutes on non-TPU hosts. The virtual
+    # devices come from xla_force_host_platform_device_count either way.
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

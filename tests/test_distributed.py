@@ -1,29 +1,14 @@
 """Distributed runtime tests — run in a subprocess with 8 host devices so
 the single-device test session isn't polluted (jax locks device count on
-first init)."""
+first init). The subprocess rig lives in ``tests/_mesh.py``, shared with
+the 2D-mesh and fault-drill suites."""
 import json
-import os
-import subprocess
-import sys
-import textwrap
 
+import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _mesh import run_with_devices
 
-
-def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    # force CPU: without the pin, jax probes the TPU plugin, which retries
-    # cloud metadata fetches for minutes on non-TPU hosts. The 8 virtual
-    # devices come from xla_force_host_platform_device_count either way.
-    env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+pytestmark = pytest.mark.multidevice
 
 
 class TestDistributedKMeans:

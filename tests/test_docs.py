@@ -138,6 +138,6 @@ class TestDocLinks:
     def test_docs_suite_complete(self):
         for name in ("architecture.md", "kernels.md", "fault_tolerance.md",
                      "autotune.md", "backends.md", "analysis.md",
-                     "serving.md"):
+                     "serving.md", "distributed.md"):
             assert os.path.exists(os.path.join(DOCS, name)), \
                 f"docs/{name} missing from the suite"

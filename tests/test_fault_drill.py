@@ -1,0 +1,241 @@
+"""Fault drills: elastic shrink + checkpoint-restart under simulated
+worker loss, and crash-injection on the checkpoint write path.
+
+The drill methodology mirrors the paper's fail-stop model (§II-A): a
+:class:`~repro.ft.elastic.FailureSchedule` raises
+:class:`~repro.ft.elastic.WorkerLossError` at a chosen iteration, the
+driver shrinks the mesh and restores the newest snapshot, and the resumed
+trajectory must be *deterministic* — on integer data, bit-identical to a
+fit that ran uninterrupted on the shrunken mesh (exact psums make the
+pre-loss iterations mesh-shape-invariant, and the checkpoint replays the
+exact centroids).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _mesh import run_with_devices
+
+
+class TestElasticDrill:
+    pytestmark = pytest.mark.multidevice
+
+    def test_kill_at_first_mid_and_last_iteration(self):
+        """Lose workers 6+7 (the second host's tail) at iteration 0, 5
+        (a snapshot boundary) and 11 (the final iteration): every drill
+        resumes after plan_rescale + restore and lands bit-identically on
+        the uninterrupted 6-device fit. Kill-at-0 exercises the
+        no-snapshot path (restart from the initial seeds)."""
+        out = run_with_devices("""
+        import tempfile
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.api import FaultPolicy, KMeans
+        from repro.dist.kmeans_dist import DistributedKMeans, \\
+            restore_estimator
+        from repro.dist.sharding import mesh2d
+        from repro.ft import Checkpointer, FailureSchedule
+
+        rng = np.random.default_rng(1)
+        M, K, F = 1680, 8, 16
+        x = rng.integers(-20, 20, size=(M, F)).astype(np.float32)
+        c0 = x[rng.choice(M, K, replace=False)].copy()
+
+        def make_est():
+            return KMeans(n_clusters=K, max_iter=12, tol=1e-4,
+                          random_state=0, fault=FaultPolicy.elastic())
+
+        d_ref = DistributedKMeans(make_est(), mesh2d(6))
+        c_ref, _, in_ref, it_ref, _ = d_ref.fit(d_ref.shard_data(x), c0)
+        c_ref = np.asarray(c_ref)
+
+        for kill_at in (0, 5, 11):
+            d = DistributedKMeans(make_est(), mesh2d(8, hosts=2))
+            with tempfile.TemporaryDirectory() as td:
+                ck = Checkpointer(td, async_write=False)
+                sched = FailureSchedule({kill_at: (6, 7)})
+                c, am, inertia, completed, det, restarts = d.fit_elastic(
+                    x, c0, checkpointer=ck, checkpoint_interval=5,
+                    on_iteration=sched)
+                same = bool((np.asarray(c) == c_ref).all())
+                shape = dict(d.mesh.shape)
+                print(f"KILL{kill_at}", restarts, completed, same,
+                      float(inertia) == float(in_ref),
+                      shape.get("host", 0) * shape.get("row", 0))
+                est2, it2 = restore_estimator(ck)
+                print(f"RESTORE{kill_at}", est2 is not None
+                      and est2.fault.worker_loss, it2,
+                      est2 is not None and est2.n_clusters)
+        """)
+        for kill in (0, 5, 11):
+            restarts, completed, same, in_same, devs = \
+                out.split(f"KILL{kill} ")[1].split()[:5]
+            assert (restarts, completed, same, in_same, devs) == \
+                ("1", "12", "True", "True", "6"), (kill, out)
+            # the checkpoint carries the full get_state: estimator (with
+            # its elastic policy) rebuilds from the snapshot alone
+            assert f"RESTORE{kill} shrink 12 {8}" in out
+
+    def test_fail_policy_propagates_loss(self):
+        """worker_loss="fail" (the default) is fail-stop: the drill error
+        reaches the caller, nothing shrinks."""
+        out = run_with_devices("""
+        import tempfile
+        import numpy as np
+        from repro.api import KMeans
+        from repro.dist.kmeans_dist import DistributedKMeans
+        from repro.dist.sharding import mesh2d
+        from repro.ft import Checkpointer, FailureSchedule, WorkerLossError
+
+        rng = np.random.default_rng(1)
+        x = rng.integers(-20, 20, size=(1680, 16)).astype(np.float32)
+        c0 = x[:8].copy()
+        d = DistributedKMeans(KMeans(8, max_iter=6, random_state=0),
+                              mesh2d(8, hosts=2))
+        with tempfile.TemporaryDirectory() as td:
+            try:
+                d.fit_elastic(x, c0,
+                              checkpointer=Checkpointer(td,
+                                                        async_write=False),
+                              on_iteration=FailureSchedule({2: (7,)}))
+                print("RAISED False")
+            except WorkerLossError as e:
+                print("RAISED True", list(e.lost))
+        """)
+        assert "RAISED True [7]" in out
+
+
+class TestPlanRescaleRows:
+    def test_shrinks_rows_keeps_problem_groups(self):
+        from repro.ft.elastic import plan_rescale_rows
+        plan = plan_rescale_rows(list(range(8)), problems=2, hosts=2)
+        assert plan.mesh_shape == (2, 2, 2)     # hosts x rows/host x prob
+        assert plan.axis_names == ("host", "row", "problem")
+        assert plan.data_shards == 4
+        # survivor count not divisible by the host grouping: keeping all
+        # devices beats preserving host topology — degrade to one group
+        plan = plan_rescale_rows(list(range(6)), problems=2, hosts=2)
+        assert plan.mesh_shape == (1, 3, 2)
+        assert plan.data_shards == 3
+        plan = plan_rescale_rows(list(range(6)), problems=1, hosts=4)
+        assert plan.mesh_shape == (1, 6, 1)
+        assert plan.data_shards == 6
+
+    def test_drops_remainder_devices(self):
+        from repro.ft.elastic import plan_rescale_rows
+        plan = plan_rescale_rows(list(range(7)), problems=2, hosts=1)
+        assert plan.mesh_shape == (1, 3, 2)
+        assert len(plan.dropped_devices) == 1
+
+
+class TestStragglerAggregate:
+    def test_drop_shard_mean_stays_unbiased(self):
+        """The unbiasedness claim behind the drop-shard rung: masking a
+        straggler out of BOTH the sums and the counts renormalizes the
+        mean over the surviving rows — ``psum(sums)/psum(counts)`` over
+        live shards IS the exact mean of the live rows. The biased
+        alternative (mean of per-shard means) disagrees whenever shard
+        cluster counts are skewed; this pins the policy to the unbiased
+        form."""
+        import jax.numpy as jnp
+        from repro.ft.elastic import StragglerPolicy
+        rng = np.random.default_rng(0)
+        S, K, F = 4, 3, 5
+        # skewed per-shard counts so mean-of-means is visibly biased
+        counts = jnp.asarray(rng.integers(1, 50, size=(S, K)),
+                             jnp.float32)
+        sums = jnp.asarray(rng.standard_normal((S, K, F)),
+                           jnp.float32) * counts[..., None]
+        live = jnp.asarray([True, True, False, True])
+
+        agg_s, agg_c = StragglerPolicy.aggregate(sums, counts, live)
+        got = np.asarray(agg_s / agg_c[:, None])
+        # ground truth: exact mean over the surviving shards' rows
+        live_np = np.asarray(live)
+        want = (np.asarray(sums)[live_np].sum(axis=0)
+                / np.asarray(counts)[live_np].sum(axis=0)[:, None])
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+        # the biased form differs on skewed counts — proves the test has
+        # teeth (it would catch a mean-of-means regression)
+        per_shard_means = np.asarray(sums) / np.asarray(counts)[..., None]
+        biased = per_shard_means[live_np].mean(axis=0)
+        assert np.abs(biased - want).max() > 1e-3
+
+    def test_all_live_matches_plain_sum(self):
+        import jax.numpy as jnp
+        from repro.ft.elastic import StragglerPolicy
+        rng = np.random.default_rng(1)
+        sums = jnp.asarray(rng.standard_normal((3, 4, 2)), jnp.float32)
+        counts = jnp.asarray(rng.integers(1, 9, size=(3, 4)), jnp.float32)
+        live = jnp.ones((3,), jnp.bool_)
+        agg_s, agg_c = StragglerPolicy.aggregate(sums, counts, live)
+        np.testing.assert_allclose(np.asarray(agg_s),
+                                   np.asarray(sums).sum(axis=0), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(agg_c),
+                                   np.asarray(counts).sum(axis=0),
+                                   rtol=1e-6)
+
+
+class TestCheckpointAtomicity:
+    def test_crash_mid_write_preserves_previous_snapshot(self, tmp_path,
+                                                         monkeypatch):
+        """Crash injection between the bytes and the rename: os.replace
+        raising mid-save must leave the previous snapshot untouched and
+        restorable — the tmp+fsync+rename protocol's whole point."""
+        from repro.ft.checkpoint import Checkpointer
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(1, {"c": np.arange(4.0, dtype=np.float32)})
+
+        real_replace = os.replace
+
+        def exploding_replace(src, dst):
+            raise OSError("simulated crash mid-replace")
+
+        monkeypatch.setattr(os, "replace", exploding_replace)
+        with pytest.raises(OSError):
+            ck.save(2, {"c": np.full(4, 9.0, dtype=np.float32)})
+        monkeypatch.setattr(os, "replace", real_replace)
+
+        # fresh process semantics: a new Checkpointer over the directory
+        ck2 = Checkpointer(str(tmp_path), async_write=False)
+        st = ck2.restore()
+        assert st is not None and st["_step"] == 1
+        np.testing.assert_array_equal(st["c"],
+                                      np.arange(4.0, dtype=np.float32))
+
+    def test_corrupt_newest_snapshot_falls_back(self, tmp_path):
+        """Torn bytes under the newest name (storage lost the data after
+        the rename): restore walks back to the newest loadable snapshot;
+        pinning the broken step raises instead of substituting."""
+        from repro.ft.checkpoint import Checkpointer
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(1, {"c": np.arange(3.0, dtype=np.float32)})
+        ck.save(2, {"c": np.full(3, 2.0, dtype=np.float32)})
+        with open(ck._path(2), "wb") as fh:
+            fh.write(b"not a zipfile")
+        st = ck.restore()
+        assert st is not None and st["_step"] == 1
+        with pytest.raises(Exception):
+            ck.restore(step=2)
+
+    def test_all_snapshots_corrupt_returns_none(self, tmp_path):
+        from repro.ft.checkpoint import Checkpointer
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(1, {"c": np.zeros(2, dtype=np.float32)})
+        with open(ck._path(1), "wb") as fh:
+            fh.write(b"garbage")
+        assert ck.restore() is None
+
+
+class TestFailureSchedule:
+    def test_fires_once_per_entry(self):
+        from repro.ft.elastic import FailureSchedule, WorkerLossError
+        sched = FailureSchedule({3: (1, 2)})
+        sched(0)
+        sched(2)
+        with pytest.raises(WorkerLossError) as ei:
+            sched(3)
+        assert ei.value.lost == (1, 2)
+        sched(3)    # popped: the restarted trajectory passes through
